@@ -1,0 +1,40 @@
+"""Hash-evaluation throughput: the TPU hot spot (batched hashing) measured as
+jnp reference vs Pallas kernel (interpret mode on CPU -- the kernel numbers
+here validate correctness cost; the roofline for the TPU target is in
+EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashes
+from repro.kernels import ops
+
+from .common import time_us
+
+B, N, K = 512, 64, 1024
+
+
+def run(seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, N))
+    fam = hashes.PStableHash.create(jax.random.fold_in(key, 2), N, K, r=1.0)
+
+    ref = jax.jit(lambda xx: ops.pstable_hash(xx, fam.alpha, fam.b, 1.0,
+                                              use_kernel=False))
+    us_ref = time_us(ref, x, iters=10)
+    hashes_per_s = B * K / (us_ref * 1e-6)
+
+    sim = hashes.SimHash.create(jax.random.fold_in(key, 3), N, K)
+    simf = jax.jit(lambda xx: ops.simhash_signature(xx, sim.alpha,
+                                                    use_kernel=False))
+    us_sim = time_us(simf, x, iters=10)
+
+    return {"pstable_us_per_batch": round(us_ref, 1),
+            "pstable_hashes_per_s": f"{hashes_per_s:.3e}",
+            "simhash_us_per_batch": round(us_sim, 1)}
+
+
+if __name__ == "__main__":
+    print(run())

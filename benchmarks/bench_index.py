@@ -1,0 +1,57 @@
+"""End-to-end LSH index benchmark: recall@10 and candidate fraction vs brute
+force, for W2 similarity search over random 1-D Gaussians (the paper's target
+application: fast Wasserstein similarity search)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import functional, index as lidx, wasserstein
+
+from .common import time_us, write_csv
+
+N_DB = 4096
+N_Q = 64
+N_DIMS = 64
+K = 10
+
+
+def run(seed: int = 0, out_csv: str = "experiments/index_recall.csv"):
+    key = jax.random.PRNGKey(seed)
+    mu, s = functional.random_gaussians(jax.random.fold_in(key, 1), N_DB)
+    qmu, qs = functional.random_gaussians(jax.random.fold_in(key, 2), N_Q)
+    nodes, vol = wasserstein.icdf_nodes_qmc(N_DIMS)
+    db = wasserstein.w2_embedding_gaussian(mu, s, nodes, vol, "mc")
+    q = wasserstein.w2_embedding_gaussian(qmu, qs, nodes, vol, "mc")
+
+    exact_ids, _ = lidx.brute_force_topk(db, q, K)
+    rows = []
+    results = {}
+    for n_tables, n_probes in ((4, 1), (8, 1), (8, 4), (16, 4), (16, 8)):
+        cfg = lidx.IndexConfig(n_dims=N_DIMS, n_tables=n_tables, n_hashes=4,
+                               log2_buckets=10, bucket_capacity=64, r=0.5)
+        state = lidx.create_index(jax.random.fold_in(key, 3), cfg, N_DB)
+        state = lidx.build_index(state, cfg, db)
+        ids, _ = lidx.query_index(state, cfg, q, K, n_probes=n_probes)
+        rec = float(lidx.recall_at_k(ids, exact_ids))
+        # candidate fraction ~ computational saving vs brute force
+        cand = n_tables * (1 + min(n_probes - 1, 2 * cfg.n_hashes)) \
+            * cfg.bucket_capacity
+        frac = cand / N_DB
+        qi = jax.jit(lambda st, qq: lidx.query_index(st, cfg, qq, K,
+                                                     n_probes=n_probes))
+        us_lsh = time_us(qi, state, q, iters=5)
+        rows.append((n_tables, n_probes, rec, frac, us_lsh))
+        results[f"recall_L{n_tables}_P{n_probes}"] = round(rec, 4)
+    bf = jax.jit(lambda d, qq: lidx.brute_force_topk(d, qq, K))
+    us_bf = time_us(bf, db, q, iters=5)
+    write_csv(out_csv, "n_tables,n_probes,recall@10,candidate_fraction,us_query",
+              rows)
+    results["us_brute_force"] = round(us_bf, 1)
+    return results
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,0 +1,51 @@
+"""Shared benchmark helpers: timing + collision-rate measurement."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def time_us(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median microseconds per call (jit'd fn; blocks on result)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def collision_rate(h1: jnp.ndarray, h2: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of equal hashes along the last axis (per pair)."""
+    return (h1 == h2).mean(axis=-1)
+
+
+def binned_deviation(x: np.ndarray, obs: np.ndarray, theory: np.ndarray,
+                     bins: int = 20) -> Tuple[float, float]:
+    """(mean, max) |observed - theoretical| over bins of x (paper Figs 1-3
+    reduce to this one-number summary per method)."""
+    order = np.argsort(x)
+    xs, os_, ts = x[order], obs[order], theory[order]
+    edges = np.linspace(xs[0], xs[-1] + 1e-9, bins + 1)
+    devs = []
+    for i in range(bins):
+        m = (xs >= edges[i]) & (xs < edges[i + 1])
+        if m.sum() >= 3:
+            devs.append(abs(os_[m].mean() - ts[m].mean()))
+    return float(np.mean(devs)), float(np.max(devs))
+
+
+def write_csv(path: str, header: str, rows) -> None:
+    import os
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(v) for v in r) + "\n")

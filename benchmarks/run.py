@@ -1,0 +1,41 @@
+"""Benchmark aggregator: one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call where timing makes
+sense, else blank; ``derived`` is the figure's summary statistic)."""
+
+from __future__ import annotations
+
+import time
+
+
+def _run(name, fn):
+    t0 = time.perf_counter()
+    res = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    return name, us, res
+
+
+def main() -> None:
+    from . import (bench_cosine, bench_embed_error, bench_hash_throughput,
+                   bench_index, bench_l2, bench_w2)
+
+    print("name,us_per_call,derived")
+    jobs = [
+        ("fig1_cosine_collisions", bench_cosine.run),
+        ("fig2_l2_collisions", bench_l2.run),
+        ("fig3_w2_collisions", bench_w2.run),
+        ("sec3.2_embed_error", bench_embed_error.run),
+        ("index_recall_speedup", bench_index.run),
+        ("hash_throughput", bench_hash_throughput.run),
+    ]
+    for name, fn in jobs:
+        try:
+            n, us, res = _run(name, fn)
+            for k, v in res.items():
+                print(f"{n}/{k},{us:.0f},{v}")
+        except Exception as e:  # keep the harness running; report the failure
+            print(f"{name},,ERROR:{type(e).__name__}:{e}")
+
+
+if __name__ == "__main__":
+    main()

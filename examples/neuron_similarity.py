@@ -1,0 +1,92 @@
+"""Neuron-function similarity search -- the paper's motivating application
+(Sec. 1: 'comparing the features learned by neurons in a neural network').
+
+Each FFN neuron computes a scalar function over inputs; restricted to a probe
+distribution, it is an element of L^2(mu).  The Monte Carlo embedding
+(Algorithm 2) is exactly 'evaluate the neuron at N probe points', so we can
+index MILLIONS of neurons and find near-duplicates in sublinear time --
+useful for redundancy analysis / distillation.
+
+This demo trains a small LM briefly, plants two exactly-duplicated neurons,
+and shows the LSH index recovering the planted pairs plus naturally similar
+ones.
+
+Run:  PYTHONPATH=src python examples/neuron_similarity.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import index as lidx, montecarlo
+from repro.data.pipeline import SyntheticPipeline
+from repro.models import get_model
+from repro.optim import adamw
+from repro.runtime import steps as rt
+
+key = jax.random.PRNGKey(0)
+cfg = ArchConfig(name="probe-lm", family="dense", n_layers=4, d_model=256,
+                 n_heads=4, n_kv_heads=2, d_ff=512, vocab_size=1024,
+                 head_dim=64, dtype="float32", param_dtype="float32",
+                 remat="none", grad_accum=1, tie_embeddings=True)
+api = get_model(cfg)
+params = api.init(key)
+
+# --- brief training so neurons differentiate --------------------------------
+shape = ShapeConfig("t", 128, 8, "train")
+pipe = SyntheticPipeline(cfg, shape, seed=0)
+opt_cfg = adamw.OptConfig(lr=1e-3, warmup_steps=5, total_steps=40)
+opt = adamw.init(opt_cfg, params)
+step = jax.jit(rt.make_train_step(api, cfg, opt_cfg), donate_argnums=(0, 1))
+for i in range(40):
+    params, opt, m = step(params, opt,
+                          jax.tree.map(jnp.asarray, pipe.get_batch(i)))
+print(f"trained 40 steps, loss={float(m['loss']):.3f}")
+
+# --- plant two duplicate neurons (ground truth for retrieval) ---------------
+lay = params["layers"]
+for (l_src, n_src, l_dst, n_dst) in [(0, 3, 0, 100), (1, 7, 1, 200)]:
+    for w in ("gate", "up"):
+        lay["ffn"][w] = lay["ffn"][w].at[l_dst, :, n_dst].set(
+            lay["ffn"][w][l_src, :, n_src])
+
+# --- neuron activation functions over a probe distribution ------------------
+# probe: hidden states collected from real data (the natural mu for neurons)
+probe_batch = jax.tree.map(jnp.asarray, pipe.get_batch(999))
+hidden, _ = api.forward_hidden(params, probe_batch)        # (B, S, d)... final
+# use PRE-ffn activations per layer: simplest faithful probe = random draws of
+# the residual-stream distribution; approximate with collected hidden states.
+probes = hidden.reshape(-1, cfg.d_model)[:256]             # N=256 probe points
+
+def neuron_functions(layer_params):
+    """Neuron n of layer l computes silu(x.gate_n) * (x.up_n) at probe x."""
+    g = jnp.einsum("pd,ldn->lnp", probes, layer_params["ffn"]["gate"])
+    u = jnp.einsum("pd,ldn->lnp", probes, layer_params["ffn"]["up"])
+    return jax.nn.silu(g) * u                              # (L, n_ff, P)
+
+fvals = neuron_functions(lay)                              # (4, 512, 256)
+n_total = cfg.n_layers * cfg.d_ff
+emb = montecarlo.mc_embedding(fvals.reshape(n_total, -1), volume=1.0)
+emb = emb / (jnp.linalg.norm(emb, axis=-1, keepdims=True) + 1e-9)  # scale-free
+
+icfg = lidx.IndexConfig(n_dims=emb.shape[-1], n_tables=16, n_hashes=6,
+                        log2_buckets=10, bucket_capacity=64, r=0.3)
+state = lidx.create_index(jax.random.fold_in(key, 5), icfg, n_total)
+state = lidx.build_index(state, icfg, emb)
+
+# query with the planted duplicates: nearest non-self neighbour must be the twin
+found = 0
+for (l_src, n_src, l_dst, n_dst) in [(0, 3, 0, 100), (1, 7, 1, 200)]:
+    qid = l_src * cfg.d_ff + n_src
+    twin = l_dst * cfg.d_ff + n_dst
+    ids, dists = lidx.query_index(state, icfg, emb[qid:qid + 1], k=2,
+                                  n_probes=6)
+    others = [int(i) for i in ids[0] if int(i) != qid]
+    print(f"neuron L{l_src}/n{n_src}: nearest={others} "
+          f"(planted twin={twin}) d={float(dists[0, 1]):.4f}")
+    found += int(twin in others)
+assert found == 2, "planted duplicate neurons not recovered"
+print(f"recovered {found}/2 planted duplicates among {n_total} neurons")
+print("neuron_similarity OK")

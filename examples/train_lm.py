@@ -1,0 +1,79 @@
+"""End-to-end training driver: a ~100M-parameter llama-family model trained
+for a few hundred steps on the deterministic synthetic pipeline, with
+checkpoint/restart fault tolerance and the full production step factory
+(grad accumulation, remat, chunked CE).
+
+The default invocation is CPU-sized (a ~20M model, 60 steps, a couple of
+minutes); pass ``--full`` for the 100M x 300-step configuration the driver is
+wired for on real hardware.
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
+      # kill it mid-run and re-run: it resumes from the last checkpoint.
+"""
+
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.data.pipeline import SyntheticPipeline
+from repro.models import get_model
+from repro.optim import adamw
+from repro.runtime import steps as rt
+from repro.runtime.driver import DriverConfig, train_loop
+
+
+def make_cfg(full: bool) -> ArchConfig:
+    if full:  # ~100M params
+        return ArchConfig(name="lm100m", family="dense", n_layers=12,
+                          d_model=768, n_heads=12, n_kv_heads=4, d_ff=2048,
+                          vocab_size=8192, head_dim=64, dtype="float32",
+                          param_dtype="float32", remat="none", grad_accum=1,
+                          tie_embeddings=True)
+    return ArchConfig(name="lm20m", family="dense", n_layers=6, d_model=384,
+                      n_heads=6, n_kv_heads=2, d_ff=1024, vocab_size=4096,
+                      head_dim=64, dtype="float32", param_dtype="float32",
+                      remat="none", grad_accum=1, tie_embeddings=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    cfg = make_cfg(args.full)
+    steps = args.steps or (300 if args.full else 60)
+    shape = ShapeConfig("train", seq_len=256 if args.full else 128,
+                        global_batch=8, kind="train")
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.1f}M params), "
+          f"{steps} steps, batch {shape.global_batch} x seq {shape.seq_len}")
+
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    opt_cfg = adamw.OptConfig(lr=1e-3, warmup_steps=20, total_steps=steps,
+                              weight_decay=0.01)
+    opt_state = adamw.init(opt_cfg, params)
+    train_step = jax.jit(rt.make_train_step(api, cfg, opt_cfg),
+                         donate_argnums=(0, 1))
+
+    pipe = SyntheticPipeline(cfg, shape, seed=0)
+    get_batch = lambda i: jax.tree.map(jnp.asarray, pipe.get_batch(i))
+
+    dcfg = DriverConfig(total_steps=steps, ckpt_dir=args.ckpt, ckpt_every=25,
+                        log_every=10)
+    result = train_loop(dcfg, train_step, params, opt_state, get_batch)
+    first = sum(result.losses[:5]) / max(len(result.losses[:5]), 1)
+    last = sum(result.losses[-5:]) / max(len(result.losses[-5:]), 1)
+    print(f"loss: {first:.3f} -> {last:.3f} over {len(result.losses)} steps "
+          f"(resumed_from={result.resumed_from}, nan_skips={result.nan_skips})")
+    if result.resumed_from is None:
+        assert last < first, "training did not reduce loss"
+    print("train_lm OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Wasserstein similarity search (the paper's flagship application).
+
+Index 4,096 one-dimensional Gaussian distributions by their W^2 geometry via
+the inverse-CDF embedding (Eq. 3 + footnote 1), query with fresh Gaussians,
+and verify retrieval quality against the Olkin-Pukelsheim closed form.
+
+Also demonstrates hashing *empirical* distributions (raw samples, different
+sample counts) into the same index -- the case the paper highlights as
+painful for exact computation (O(m+n) per pair).
+
+Run:  PYTHONPATH=src python examples/wasserstein_retrieval.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import functional, index as lidx, wasserstein
+
+key = jax.random.PRNGKey(7)
+N_DB, N_Q, N_DIMS = 4096, 8, 64
+
+mu, sig = functional.random_gaussians(jax.random.fold_in(key, 1), N_DB)
+qmu, qsig = functional.random_gaussians(jax.random.fold_in(key, 2), N_Q)
+
+# --- embed inverse CDFs on [1e-3, 1-1e-3] with QMC nodes (Sec. 3.2) ----------
+nodes, vol = wasserstein.icdf_nodes_qmc(N_DIMS)
+db = wasserstein.w2_embedding_gaussian(mu, sig, nodes, vol, "mc")
+queries = wasserstein.w2_embedding_gaussian(qmu, qsig, nodes, vol, "mc")
+
+cfg = lidx.IndexConfig(n_dims=N_DIMS, n_tables=16, n_hashes=4,
+                       log2_buckets=10, bucket_capacity=64, r=0.5)
+state = lidx.create_index(jax.random.fold_in(key, 3), cfg, N_DB)
+state = lidx.build_index(state, cfg, db)
+ids, dists = lidx.query_index(state, cfg, queries, k=1, n_probes=4)
+
+true_w2 = wasserstein.gaussian_w2(qmu[:, None], qsig[:, None],
+                                  mu[None, :], sig[None, :])
+for i in range(N_Q):
+    j = int(ids[i, 0])
+    best = int(jnp.argmin(true_w2[i]))
+    print(f"query N({float(qmu[i]):+.2f},{float(qsig[i]):.2f}^2): "
+          f"LSH -> N({float(mu[j]):+.2f},{float(sig[j]):.2f}^2) "
+          f"W2={float(true_w2[i, j]):.3f} "
+          f"(true best W2={float(true_w2[i, best]):.3f})")
+
+regret = float(jnp.mean(true_w2[jnp.arange(N_Q), ids[:, 0]]
+                        - jnp.min(true_w2, axis=1)))
+print(f"mean W2 regret vs exact search: {regret:.4f}")
+
+# --- empirical distributions: hash raw samples into the same geometry -------
+m_samples = qmu[0] + qsig[0] * jax.random.normal(jax.random.fold_in(key, 4),
+                                                 (5000,))
+emp = wasserstein.w2_embedding_samples(m_samples[None, :], nodes, vol, "mc")
+ids2, _ = lidx.query_index(state, cfg, emp, k=1, n_probes=4)
+j = int(ids2[0, 0])
+print(f"empirical (5000 draws of query 0) -> N({float(mu[j]):+.2f},"
+      f"{float(sig[j]):.2f}^2), W2={float(true_w2[0, j]):.3f}")
+assert regret < 0.1
+print("wasserstein_retrieval OK")

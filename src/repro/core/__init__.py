@@ -1,0 +1,19 @@
+"""repro.core -- Locality-sensitive hashing in function spaces (Shand & Becker 2020).
+
+Public API:
+  basis       -- orthonormal-basis embeddings (Sec. 3.1, Algorithm 1)
+  montecarlo  -- (quasi-)Monte Carlo embeddings (Sec. 3.2, Algorithm 2)
+  hashes      -- p-stable / SimHash / ALSH families, lazy-alpha extension
+  collision   -- theoretical collision probabilities, Theorem 1 bounds
+  wasserstein -- 1-D Wasserstein closed forms + inverse-CDF embeddings (Eq. 3)
+  index       -- multi-table multi-probe LSH index (static shapes)
+  distributed -- mesh-sharded index (shard_map + lax collectives)
+  functional  -- function datasets with closed-form similarities
+"""
+
+from . import basis, collision, distributed, functional, hashes, index, montecarlo, wasserstein
+
+__all__ = [
+    "basis", "collision", "distributed", "functional", "hashes", "index",
+    "montecarlo", "wasserstein",
+]

@@ -1,0 +1,110 @@
+"""Theoretical collision probabilities and the paper's Theorem 1 bounds.
+
+* SimHash (Eq. 7):      P = 1 - arccos(cossim) / pi.
+* p-stable hash (Eq. 8): P(c) = int_0^r (1/c) f_p(t/c) (1 - t/r) dt with f_p the
+  pdf of |X|, X p-stable.  Closed forms for p = 2 (Gaussian) and p = 1 (Cauchy);
+  numerical quadrature against an empirical f_p otherwise.
+* Theorem 1: upper/lower bounds on the collision probability after an embedding
+  with distance error <= eps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+SQRT_2_OVER_PI = float(np.sqrt(2.0 / np.pi))
+
+
+def simhash_collision_prob(cossim: Array) -> Array:
+    """Eq. (7)."""
+    s = jnp.clip(cossim, -1.0, 1.0)
+    return 1.0 - jnp.arccos(s) / jnp.pi
+
+
+def pstable_collision_prob(c: Array, r: float, p: float = 2.0) -> Array:
+    """Eq. (8) and its p = 1 analogue.  c = ||x - y||_p (c > 0)."""
+    c = jnp.asarray(c)
+    if p == 2.0:
+        # P = 2 Phi(r/c) - 1 - 2c/(sqrt(2 pi) r) (1 - exp(-r^2 / 2 c^2))
+        z = r / c
+        phi = 0.5 * (1.0 + jax.scipy.special.erf(z / jnp.sqrt(2.0)))
+        return 2.0 * phi - 1.0 - (2.0 * c / (np.sqrt(2.0 * np.pi) * r)) * (
+            1.0 - jnp.exp(-(z ** 2) / 2.0))
+    if p == 1.0:
+        # f_1(t) = 2 / (pi (1 + t^2)):
+        # P = (2/pi) [ arctan(r/c) - c/(2r) ln(1 + (r/c)^2) ]
+        z = r / c
+        return (2.0 / jnp.pi) * (jnp.arctan(z) - (1.0 / (2.0 * z)) * jnp.log1p(z ** 2))
+    return _pstable_collision_prob_mc(c, r, p)
+
+
+def _pstable_collision_prob_mc(c: Array, r: float, p: float,
+                               n_samples: int = 200_000, seed: int = 0) -> Array:
+    """Quadrature-free estimator for general p:
+    P = E_{t=|c X|, X p-stable} [ (1 - t/r)_+ ] evaluated by MC over X."""
+    from .hashes import sample_pstable  # local import to avoid cycle
+    key = jax.random.PRNGKey(seed)
+    x = jnp.abs(sample_pstable(key, (n_samples,), p))
+    c = jnp.atleast_1d(jnp.asarray(c))
+    t = c[:, None] * x[None, :]
+    val = jnp.clip(1.0 - t / r, 0.0, None).mean(axis=1)
+    return val[0] if val.shape == (1,) else val
+
+
+def fp_sup(p: float) -> float:
+    """||f_p||_inf for the pdf of |X| (Theorem 1 constant)."""
+    if p == 2.0:
+        return SQRT_2_OVER_PI          # 2 * (1/sqrt(2 pi)) at 0
+    if p == 1.0:
+        return 2.0 / np.pi             # 2/(pi (1+t^2)) at 0
+    raise ValueError(f"fp_sup known only for p in {{1, 2}}, got {p}")
+
+
+def theorem1_bounds(c: Array, r: float, eps: Array, p: float = 2.0
+                    ) -> tuple[Array, Array]:
+    """Theorem 1 AS STATED in the paper: (lower, upper) bounds on
+    P[H(f) = H(g)] when the embedding perturbs c = ||f - g|| by at most eps.
+
+    ERRATUM (found during reproduction; see theorem1_bounds_corrected): the
+    paper's ||f_p||_inf-based LOWER bound drops the boundary integral
+    int_{r/(c+eps)}^{r/c} f_p(s)(1 - cs/r) ds, so the stated bound
+    P - eps r ||f_p||_inf / (2 (c+eps)^2) can be violated by O(eps^2/c^2)
+    (e.g. p=2, r=1, c=3, eps=0.0625c: true drop 0.00762 > allowed 0.00736).
+    The 2eps/(c+eps) branch and both upper bounds are correct.
+    """
+    c = jnp.asarray(c)
+    eps = jnp.asarray(eps)
+    P = pstable_collision_prob(c, r, p)
+    finf = fp_sup(p)
+    upper = P + jnp.minimum(eps / (c - eps), eps * r * finf / (2.0 * (c - eps) ** 2))
+    lower = P - jnp.minimum(2.0 * eps / (c + eps), eps * r * finf / (2.0 * (c + eps) ** 2))
+    return jnp.clip(lower, 0.0, 1.0), jnp.clip(upper, 0.0, 1.0)
+
+
+def theorem1_bounds_corrected(c: Array, r: float, eps: Array, p: float = 2.0
+                              ) -> tuple[Array, Array]:
+    """Theorem 1 with the lower bound's ||f_p||_inf branch repaired.
+
+    Deficit D = (eps/r) int_0^{r/(c+eps)} s f_p ds
+              + int_{r/(c+eps)}^{r/c} f_p(s) (1 - cs/r) ds
+      <= ||f_p||_inf [ eps r / (2 (c+eps)^2) + eps^2 r / (2 c (c+eps)^2) ]
+       = eps r ||f_p||_inf / (2 c (c+eps)).
+    """
+    c = jnp.asarray(c)
+    eps = jnp.asarray(eps)
+    P = pstable_collision_prob(c, r, p)
+    finf = fp_sup(p)
+    upper = P + jnp.minimum(eps / (c - eps), eps * r * finf / (2.0 * (c - eps) ** 2))
+    lower = P - jnp.minimum(2.0 * eps / (c + eps),
+                            eps * r * finf / (2.0 * c * (c + eps)))
+    return jnp.clip(lower, 0.0, 1.0), jnp.clip(upper, 0.0, 1.0)
+
+
+def expected_collisions_k_l(P1: Array, k: int, l: int) -> Array:
+    """Standard LSH amplification: probability that an (k AND, l OR) structure
+    reports a pair whose single-hash collision probability is P1."""
+    return 1.0 - (1.0 - P1 ** k) ** l

@@ -1,0 +1,56 @@
+"""Function datasets with closed-form similarities (paper Sec. 4 experiments).
+
+* Random sines f(x) = sin(2 pi x + delta), delta ~ U[0, 2 pi), on Omega=[0,1]:
+    <f, g>_{L^2}  = cos(delta_f - delta_g) / 2
+    ||f||_{L^2}^2 = 1/2
+    cossim(f, g)  = cos(delta_f - delta_g)
+    ||f - g||_{L^2} = sqrt(1 - cos(delta_f - delta_g))
+* Random 1-D Gaussians (means U[-1,1], std U[0,1]) with the Olkin-Pukelsheim
+  W^2 closed form (wasserstein.gaussian_w2).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def random_sines(key: jax.Array, n: int) -> Array:
+    """Phases delta (n,) of f_i(x) = sin(2 pi x + delta_i)."""
+    return jax.random.uniform(key, (n,), minval=0.0, maxval=2.0 * jnp.pi)
+
+
+def sine_values(delta: Array, x: Array) -> Array:
+    """(batch...,) phases x (n,) nodes -> (batch..., n) samples."""
+    return jnp.sin(2.0 * jnp.pi * x[None, :] + delta[..., None])
+
+
+def sine_cossim(d1: Array, d2: Array) -> Array:
+    return jnp.cos(d1 - d2)
+
+
+def sine_inner(d1: Array, d2: Array) -> Array:
+    return 0.5 * jnp.cos(d1 - d2)
+
+
+def sine_l2_dist(d1: Array, d2: Array) -> Array:
+    return jnp.sqrt(jnp.clip(1.0 - jnp.cos(d1 - d2), 0.0, None))
+
+
+def random_gaussians(key: jax.Array, n: int,
+                     mu_range: Tuple[float, float] = (-1.0, 1.0),
+                     sigma_range: Tuple[float, float] = (0.0, 1.0)
+                     ) -> Tuple[Array, Array]:
+    """(mu, sigma) each (n,): means U[mu_range], sigma = sqrt(var), var U[sigma_range^2]?
+
+    Paper: 'means randomly sampled from Uniform([-1,1]) and variances sampled
+    from Uniform([0,1])' -- so sigma = sqrt(v), v ~ U[0,1]."""
+    k1, k2 = jax.random.split(key)
+    mu = jax.random.uniform(k1, (n,), minval=mu_range[0], maxval=mu_range[1])
+    var = jax.random.uniform(k2, (n,), minval=sigma_range[0] ** 2,
+                             maxval=sigma_range[1] ** 2)
+    return mu, jnp.sqrt(var)

@@ -1,0 +1,255 @@
+"""LSH families on R^N, lifted to function spaces via the embeddings.
+
+* ``PStableHash`` -- Datar et al. (2004):  h(x) = floor(alpha^T x / r + b),
+  alpha_i i.i.d. p-stable, b ~ Uniform([0,1]).  p = 2 (normal), p = 1 (Cauchy),
+  general p in (0,2) via Chambers-Mallows-Stuck.
+* ``SimHash`` -- Charikar (2002): sign(alpha^T x), bit-packed.
+* ``ALSH`` -- Shrivastava & Li (2014, 2015): asymmetric transforms turning MIPS
+  into L2 / cosine search, then hashed with the above.
+* ``LazyCoeffs`` -- Algorithm 1's lazy extension of alpha: coefficients are a
+  deterministic function of (key, index) generated in blocks, so growing alpha
+  never changes previously issued values and two hashers extended along
+  different paths agree exactly.
+
+All hash evaluation is batched matmul + elementwise, i.e. MXU + VPU work; the
+fused Pallas versions live in kernels/ (hash_mm, simhash_pack).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# p-stable sampling
+# ---------------------------------------------------------------------------
+
+
+def sample_pstable(key: jax.Array, shape, p: float, dtype=jnp.float32) -> Array:
+    """Symmetric p-stable samples. p=2 -> N(0,1); p=1 -> Cauchy; else CMS."""
+    if p == 2.0:
+        return jax.random.normal(key, shape, dtype)
+    if p == 1.0:
+        return jax.random.cauchy(key, shape, dtype)
+    if not (0.0 < p < 2.0):
+        raise ValueError(f"p must be in (0, 2], got {p}")
+    k1, k2 = jax.random.split(key)
+    theta = jax.random.uniform(k1, shape, dtype, -jnp.pi / 2, jnp.pi / 2)
+    w = jax.random.exponential(k2, shape, dtype)
+    # Chambers-Mallows-Stuck for symmetric alpha-stable (beta = 0).
+    x = (jnp.sin(p * theta) / jnp.cos(theta) ** (1.0 / p)
+         * (jnp.cos(theta * (1.0 - p)) / w) ** ((1.0 - p) / p))
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Lazy coefficient store (Algorithm 1)
+# ---------------------------------------------------------------------------
+
+
+_BLOCK = 128  # lane-aligned growth quantum
+
+
+class LazyCoeffs:
+    """Deterministic lazily-grown i.i.d. coefficient matrix alpha (N x K).
+
+    Block ``i`` of 128 rows is generated from fold_in(key, i), so alpha[j] is a
+    pure function of (key, j) regardless of the order/granularity of growth --
+    exactly Algorithm 1's semantics ("append new coefficients when we encounter
+    a new largest N_f") but reproducible and shardable.
+    """
+
+    def __init__(self, key: jax.Array, n_hashes: int, p: float = 2.0,
+                 dtype=jnp.float32):
+        self.key = key
+        self.k = n_hashes
+        self.p = p
+        self.dtype = dtype
+        self._blocks: list[np.ndarray] = []
+
+    def _gen_block(self, i: int) -> np.ndarray:
+        bkey = jax.random.fold_in(self.key, i)
+        return np.asarray(sample_pstable(bkey, (_BLOCK, self.k), self.p, self.dtype))
+
+    def ensure(self, n: int) -> None:
+        """Grow alpha to at least n rows (Algorithm 1's 'if N_f > n' branch)."""
+        while len(self._blocks) * _BLOCK < n:
+            self._blocks.append(self._gen_block(len(self._blocks)))
+
+    def alpha(self, n: int) -> Array:
+        self.ensure(n)
+        full = np.concatenate(self._blocks, axis=0)
+        return jnp.asarray(full[:n])
+
+    @property
+    def current_n(self) -> int:
+        return len(self._blocks) * _BLOCK
+
+
+# ---------------------------------------------------------------------------
+# Hash families
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PStableHash:
+    """K independent p-stable hashes h_k(x) = floor(<alpha_k, x> / r + b_k).
+
+    ``alpha``: (N, K); ``b``: (K,) ~ U[0,1); ``r`` > 0 user parameter (paper
+    Eq. 5).  Batched: hash(X) for X (..., N) -> int32 (..., K).
+    """
+
+    alpha: Array
+    b: Array
+    r: float
+    p: float = 2.0
+
+    @classmethod
+    def create(cls, key: jax.Array, n_dims: int, n_hashes: int, r: float = 1.0,
+               p: float = 2.0, dtype=jnp.float32) -> "PStableHash":
+        ka, kb = jax.random.split(key)
+        alpha = sample_pstable(ka, (n_dims, n_hashes), p, dtype)
+        b = jax.random.uniform(kb, (n_hashes,), dtype)
+        return cls(alpha=alpha, b=b, r=float(r), p=p)
+
+    def __call__(self, x: Array) -> Array:
+        proj = x @ self.alpha.astype(x.dtype)
+        return jnp.floor(proj / self.r + self.b.astype(x.dtype)).astype(jnp.int32)
+
+    def projections(self, x: Array) -> Array:
+        """Pre-floor projections alpha^T x / r + b (used by multi-probe LSH)."""
+        return x @ self.alpha.astype(x.dtype) / self.r + self.b.astype(x.dtype)
+
+
+@dataclasses.dataclass
+class LazyPStableHash:
+    """Algorithm 1, verbatim semantics: hashes inputs of *varying* N_f with a
+    lazily extended alpha.  Non-jit driver (index maintenance path); the static
+    jit path uses PStableHash with a fixed cap."""
+
+    coeffs: LazyCoeffs
+    b: Array
+    r: float
+
+    @classmethod
+    def create(cls, key: jax.Array, n_hashes: int, r: float = 1.0, p: float = 2.0
+               ) -> "LazyPStableHash":
+        ka, kb = jax.random.split(key)
+        return cls(coeffs=LazyCoeffs(ka, n_hashes, p),
+                   b=jax.random.uniform(kb, (n_hashes,)), r=float(r))
+
+    def __call__(self, gamma: Array) -> Array:
+        """gamma: (N_f,) or (batch, N_f) coefficient vector(s); N_f may differ
+        between calls -- alpha grows lazily and previously returned hashes
+        remain valid (Remark 2 sparsity: only the first N_f alphas matter)."""
+        n_f = gamma.shape[-1]
+        alpha = self.coeffs.alpha(n_f)  # grows if n_f > current
+        proj = gamma @ alpha
+        return jnp.floor(proj / self.r + self.b).astype(jnp.int32)
+
+
+@dataclasses.dataclass
+class SimHash:
+    """Charikar (2002) sign-random-projection hash, bit-packed to int32 words."""
+
+    alpha: Array  # (N, K)
+
+    @classmethod
+    def create(cls, key: jax.Array, n_dims: int, n_hashes: int, dtype=jnp.float32
+               ) -> "SimHash":
+        return cls(alpha=jax.random.normal(key, (n_dims, n_hashes), dtype))
+
+    def bits(self, x: Array) -> Array:
+        """(..., K) {0,1} sign bits."""
+        return (x @ self.alpha.astype(x.dtype) >= 0).astype(jnp.int32)
+
+    def __call__(self, x: Array) -> Array:
+        """Packed signature: (..., ceil(K/32)) int32."""
+        bits = self.bits(x)
+        k = bits.shape[-1]
+        pad = (-k) % 32
+        if pad:
+            bits = jnp.pad(bits, [(0, 0)] * (bits.ndim - 1) + [(0, pad)])
+        words = bits.reshape(bits.shape[:-1] + (-1, 32))
+        shifts = jnp.arange(32, dtype=jnp.int32)
+        return (words << shifts).sum(axis=-1).astype(jnp.int32)
+
+    @staticmethod
+    def hamming(sig_a: Array, sig_b: Array) -> Array:
+        """Hamming distance between packed signatures (popcount of xor)."""
+        x = jnp.bitwise_xor(sig_a, sig_b)
+        # popcount via bit tricks (int32)
+        x = x - ((x >> 1) & 0x55555555)
+        x = (x & 0x33333333) + ((x >> 2) & 0x33333333)
+        x = (x + (x >> 4)) & 0x0F0F0F0F
+        return ((x * 0x01010101) >> 24 & 0xFF).sum(axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# ALSH for maximum inner product search (paper Sec. 5 outlook)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ALSH:
+    """Shrivastava & Li asymmetric LSH for MIPS.
+
+    variant="l2" (NIPS 2014): P(x) = [Ux; ||Ux||^2; ...; ||Ux||^(2^m)],
+    Q(q) = [q/||q||; 1/2; ...; 1/2], hashed with the L2 p-stable hash.
+    variant="sign" (UAI 2015): P(x) = [Ux; 1/2 - ||Ux||^2; ...],
+    Q(q) = [q/||q||; 0; ...; 0], hashed with SimHash.
+    """
+
+    m: int
+    scale_u: float
+    inner: object  # PStableHash or SimHash over n_dims + m
+    variant: str = "sign"
+
+    @classmethod
+    def create(cls, key: jax.Array, n_dims: int, n_hashes: int, m: int = 3,
+               scale_u: float = 0.83, r: float = 1.0, variant: str = "sign") -> "ALSH":
+        if variant == "l2":
+            inner = PStableHash.create(key, n_dims + m, n_hashes, r=r, p=2.0)
+        elif variant == "sign":
+            inner = SimHash.create(key, n_dims + m, n_hashes)
+        else:
+            raise ValueError(variant)
+        return cls(m=m, scale_u=scale_u, inner=inner, variant=variant)
+
+    def _powers(self, sq_norm: Array) -> Array:
+        out = []
+        s = sq_norm
+        for _ in range(self.m):
+            out.append(s)
+            s = s * s
+        return jnp.stack(out, axis=-1)
+
+    def preprocess(self, x: Array, max_norm: Optional[Array] = None) -> Array:
+        """P(.) applied to database vectors (..., N) -> (..., N+m)."""
+        nrm = jnp.linalg.norm(x, axis=-1, keepdims=True)
+        mx = jnp.max(nrm) if max_norm is None else max_norm
+        u = self.scale_u * x / jnp.maximum(mx, 1e-30)
+        sq = jnp.sum(u * u, axis=-1)
+        powers = self._powers(sq)
+        if self.variant == "sign":
+            powers = 0.5 - powers
+        return jnp.concatenate([u, powers], axis=-1)
+
+    def query_transform(self, q: Array) -> Array:
+        """Q(.) applied to queries (..., N) -> (..., N+m)."""
+        qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-30)
+        fill = 0.5 if self.variant == "l2" else 0.0
+        tail = jnp.full(q.shape[:-1] + (self.m,), fill, q.dtype)
+        return jnp.concatenate([qn, tail], axis=-1)
+
+    def hash_db(self, x: Array, max_norm: Optional[Array] = None) -> Array:
+        return self.inner(self.preprocess(x, max_norm))
+
+    def hash_query(self, q: Array) -> Array:
+        return self.inner(self.query_transform(q))

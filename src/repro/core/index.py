@@ -1,0 +1,212 @@
+"""Multi-table, multi-probe LSH index with static shapes (jit/TPU friendly).
+
+Design (TPU adaptation of the classical pointer-based LSH table):
+
+* L tables x K hashes/table from one ``PStableHash`` family (K*L hashes total,
+  evaluated as ONE matmul -- see kernels/hash_mm).
+* A bucket is a fixed-capacity slot array: ``table[l, b, s] -> item id`` with -1
+  sentinel; insertion ranks items within their bucket via sort + segmented
+  cumsum (no data-dependent shapes, no pointer chasing).
+* Multi-probe (Lv et al., 2007): probes are the base bucket plus the
+  single-coordinate +-1 perturbations ranked by boundary distance, computed
+  from the pre-floor projections -- vectorized, no per-probe control flow.
+* Query = gather candidate ids from probed buckets -> dedup -> exact re-rank
+  against the stored embeddings -> top-k.  Re-rank is a blocked distance
+  computation (see kernels/rerank).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .hashes import PStableHash
+
+Array = jax.Array
+
+GOLDEN = np.uint32(0x9E3779B1)
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexConfig:
+    n_dims: int                 # embedding dimension N
+    n_tables: int = 8           # L
+    n_hashes: int = 4           # K per table
+    log2_buckets: int = 12      # B = 2**log2_buckets
+    bucket_capacity: int = 32   # S
+    r: float = 1.0
+    p: float = 2.0
+
+    @property
+    def n_buckets(self) -> int:
+        return 1 << self.log2_buckets
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class LSHIndexState:
+    """Pytree: hash family params + bucket arrays + stored embeddings."""
+
+    alpha: Array        # (N, L*K) p-stable projections
+    b: Array            # (L*K,)
+    mix: Array          # (L, K) uint32 odd multipliers (bucket mixing)
+    table: Array        # (L, B, S) int32 item ids, -1 = empty
+    counts: Array       # (L, B) int32 items per bucket (pre-clip)
+    db: Array           # (n_items, N) stored embeddings (re-rank source)
+
+    def tree_flatten(self):
+        return ((self.alpha, self.b, self.mix, self.table, self.counts, self.db), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def _bucket_ids(hashes: Array, mix: Array, log2_buckets: int) -> Array:
+    """Combine per-table K int32 hashes into bucket ids.
+
+    hashes: (..., L, K) int32; mix: (L, K) uint32.  Universal-style mixing:
+    b = ((sum_k h_k * m_k) * GOLDEN) >> (32 - log2B).
+    """
+    h = hashes.astype(jnp.uint32)
+    acc = (h * mix).sum(axis=-1, dtype=jnp.uint32)
+    acc = acc * GOLDEN
+    return (acc >> np.uint32(32 - log2_buckets)).astype(jnp.int32)
+
+
+def create_index(key: jax.Array, cfg: IndexConfig, n_items_cap: int) -> LSHIndexState:
+    ka, kb, km = jax.random.split(key, 3)
+    fam = PStableHash.create(ka, cfg.n_dims, cfg.n_tables * cfg.n_hashes,
+                             r=cfg.r, p=cfg.p)
+    mix = jax.random.randint(km, (cfg.n_tables, cfg.n_hashes), 0, np.iinfo(np.int32).max,
+                             dtype=jnp.int32).astype(jnp.uint32) | np.uint32(1)
+    table = jnp.full((cfg.n_tables, cfg.n_buckets, cfg.bucket_capacity), -1, jnp.int32)
+    counts = jnp.zeros((cfg.n_tables, cfg.n_buckets), jnp.int32)
+    db = jnp.zeros((n_items_cap, cfg.n_dims), jnp.float32)
+    return LSHIndexState(alpha=fam.alpha, b=fam.b, mix=mix, table=table,
+                         counts=counts, db=db)
+
+
+def _hashes_and_proj(state: LSHIndexState, cfg: IndexConfig, x: Array
+                     ) -> Tuple[Array, Array]:
+    """(..., L, K) int32 hashes and pre-floor projections."""
+    proj = x @ state.alpha.astype(x.dtype) / cfg.r + state.b.astype(x.dtype)
+    proj = proj.reshape(x.shape[:-1] + (cfg.n_tables, cfg.n_hashes))
+    return jnp.floor(proj).astype(jnp.int32), proj
+
+
+def build_index(state: LSHIndexState, cfg: IndexConfig, embeddings: Array
+                ) -> LSHIndexState:
+    """Insert ``embeddings`` (n, N) as items 0..n-1.  Pure & jittable.
+
+    Per table: sort items by bucket, within-bucket rank = position - segment
+    start, drop items ranked beyond capacity (classical LSH behaviour under
+    fixed-size buckets; counts records true occupancy for diagnostics).
+    """
+    n = embeddings.shape[0]
+    hashes, _ = _hashes_and_proj(state, cfg, embeddings.astype(jnp.float32))
+    buckets = _bucket_ids(hashes, state.mix, cfg.log2_buckets)      # (n, L)
+
+    def insert_one_table(b_col: Array, table_l: Array, counts_l: Array):
+        order = jnp.argsort(b_col)                                   # (n,)
+        sb = b_col[order]
+        is_start = jnp.concatenate([jnp.ones((1,), jnp.bool_), sb[1:] != sb[:-1]])
+        seg_start = jax.lax.associative_scan(jnp.maximum,
+                                             jnp.where(is_start, jnp.arange(n), 0))
+        rank = jnp.arange(n) - seg_start
+        flat = table_l.reshape(-1)
+        # overflowed items get an out-of-range position -> dropped by the scatter
+        pos = jnp.where(rank < cfg.bucket_capacity,
+                        sb * cfg.bucket_capacity + rank, flat.shape[0])
+        flat = flat.at[pos].set(order.astype(jnp.int32), mode="drop")
+        counts_l = counts_l.at[b_col].add(1)
+        return flat.reshape(table_l.shape), counts_l
+
+    table, counts = jax.vmap(insert_one_table, in_axes=(1, 0, 0))(
+        buckets, state.table, state.counts)
+    db = state.db.at[:n].set(embeddings.astype(state.db.dtype))
+    return dataclasses.replace(state, table=table, counts=counts, db=db)
+
+
+def _probe_buckets(state: LSHIndexState, cfg: IndexConfig, hashes: Array,
+                   proj: Array, n_probes: int) -> Array:
+    """(..., L, T) bucket ids: base bucket + best (T-1) single-coordinate
+    perturbations ranked by distance-to-boundary (Lv et al. step-wise probing).
+    """
+    frac = proj - jnp.floor(proj)                                    # (..., L, K)
+    # score for delta=+1 is (1 - frac), for delta=-1 is frac; smaller = better.
+    scores = jnp.concatenate([1.0 - frac, frac], axis=-1)            # (..., L, 2K)
+    base = _bucket_ids(hashes, state.mix, cfg.log2_buckets)[..., None]
+    if n_probes <= 1:
+        return base
+    t = min(n_probes - 1, 2 * cfg.n_hashes)
+    _, pick = jax.lax.top_k(-scores, t)                              # (..., L, t)
+    k_idx = pick % cfg.n_hashes
+    delta = jnp.where(pick < cfg.n_hashes, 1, -1).astype(jnp.int32)
+    pert = hashes[..., None, :] + delta[..., :, None] * (
+        jax.nn.one_hot(k_idx, cfg.n_hashes, dtype=jnp.int32))        # (..., L, t, K)
+    pb = _bucket_ids(pert, state.mix[:, None, :], cfg.log2_buckets)  # (..., L, t)
+    return jnp.concatenate([base, pb], axis=-1)
+
+
+def query_index(state: LSHIndexState, cfg: IndexConfig, queries: Array,
+                k: int, n_probes: int = 1, valid_items: Optional[int] = None
+                ) -> Tuple[Array, Array]:
+    """k-NN query.  queries: (nq, N) -> (ids (nq, k), dists (nq, k)).
+
+    ids are -1 (dist +inf) where fewer than k candidates were found.
+    """
+    q = queries.astype(jnp.float32)
+    hashes, proj = _hashes_and_proj(state, cfg, q)
+    buckets = _probe_buckets(state, cfg, hashes, proj, n_probes)     # (nq, L, T)
+    cands = state.table[jnp.arange(cfg.n_tables)[:, None, None],
+                        buckets.transpose(1, 0, 2)]                  # (L, nq, T, S)
+    cands = cands.transpose(1, 0, 2, 3).reshape(q.shape[0], -1)      # (nq, L*T*S)
+
+    # Dedup: sort ids; mark repeats as -1.
+    cs = jnp.sort(cands, axis=-1)
+    dup = jnp.concatenate([jnp.zeros_like(cs[:, :1], dtype=bool),
+                           cs[:, 1:] == cs[:, :-1]], axis=-1)
+    cs = jnp.where(dup, -1, cs)
+
+    # Exact re-rank on the embedding vectors (kernels/rerank is the fused path).
+    emb = state.db[jnp.clip(cs, 0, state.db.shape[0] - 1)]           # (nq, C, N)
+    if cfg.p == 2.0:
+        d = jnp.linalg.norm(emb - q[:, None, :], axis=-1)
+    else:
+        d = jnp.sum(jnp.abs(emb - q[:, None, :]) ** cfg.p, axis=-1) ** (1.0 / cfg.p)
+    invalid = cs < 0
+    if valid_items is not None:
+        invalid = invalid | (cs >= valid_items)
+    d = jnp.where(invalid, jnp.inf, d)
+    neg, idx = jax.lax.top_k(-d, k)
+    ids = jnp.take_along_axis(cs, idx, axis=-1)
+    dist = -neg
+    ids = jnp.where(jnp.isinf(dist), -1, ids)
+    return ids, dist
+
+
+def brute_force_topk(db: Array, queries: Array, k: int, p: float = 2.0,
+                     valid_items: Optional[int] = None) -> Tuple[Array, Array]:
+    """Exact k-NN oracle for recall measurement."""
+    q = queries.astype(jnp.float32)
+    if p == 2.0:
+        d = jnp.linalg.norm(db[None, :, :] - q[:, None, :], axis=-1)
+    else:
+        d = jnp.sum(jnp.abs(db[None, :, :] - q[:, None, :]) ** p, axis=-1) ** (1.0 / p)
+    if valid_items is not None:
+        mask = jnp.arange(db.shape[0]) >= valid_items
+        d = jnp.where(mask[None, :], jnp.inf, d)
+    neg, ids = jax.lax.top_k(-d, k)
+    return ids, -neg
+
+
+def recall_at_k(lsh_ids: Array, exact_ids: Array) -> Array:
+    """Fraction of exact top-k retrieved by the LSH query (per query, averaged)."""
+    hit = (lsh_ids[:, :, None] == exact_ids[:, None, :]) & (exact_ids[:, None, :] >= 0)
+    per_q = hit.any(axis=1).sum(axis=-1) / jnp.maximum((exact_ids >= 0).sum(axis=-1), 1)
+    return per_q.mean()

@@ -1,0 +1,146 @@
+"""1-D Wasserstein distances and their LSH embeddings (paper Sec. 2.2, Eq. 3,
+Remark 1, and the third numerical experiment).
+
+W^p(f, g) = || F^{-1} - G^{-1} ||_{L^p([0,1])}  for distributions on R with
+d(x, y) = |x - y| -- so hashing W^p reduces to hashing inverse CDFs with the
+function-space L^p hash.  Inverse CDFs are hashed on the clipped interval
+[delta, 1 - delta] (delta = 1e-3, paper footnote 1).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import basis, montecarlo
+
+Array = jax.Array
+
+CLIP = 1e-3
+
+
+# ---------------------------------------------------------------------------
+# Closed forms (oracles)
+# ---------------------------------------------------------------------------
+
+
+def gaussian_w2(mu1: Array, s1: Array, mu2: Array, s2: Array) -> Array:
+    """Olkin & Pukelsheim closed form for 1-D Gaussians:
+    W2 = sqrt((mu1 - mu2)^2 + (sigma1 - sigma2)^2)."""
+    return jnp.sqrt((mu1 - mu2) ** 2 + (s1 - s2) ** 2)
+
+
+def gaussian_icdf(u: Array, mu: Array, sigma: Array) -> Array:
+    """Inverse CDF of N(mu, sigma^2); broadcasts mu/sigma against u."""
+    return mu + sigma * jax.scipy.special.ndtri(u)
+
+
+# ---------------------------------------------------------------------------
+# Empirical quantile functions (samples -> inverse CDF)
+# ---------------------------------------------------------------------------
+
+
+def empirical_icdf(samples: Array, u: Array) -> Array:
+    """Step-function quantile of an empirical distribution.
+
+    samples: (..., m) raw draws (unsorted ok); u: (n,) in (0,1).
+    Returns (..., n).  F^{-1}(u) = x_(ceil(u m)) = sorted[floor(u m)] (clipped).
+    """
+    srt = jnp.sort(samples, axis=-1)
+    m = samples.shape[-1]
+    idx = jnp.clip(jnp.floor(u * m).astype(jnp.int32), 0, m - 1)
+    return jnp.take(srt, idx, axis=-1)
+
+
+def wasserstein_1d_exact(samples_f: Array, samples_g: Array, p: float = 2.0) -> Array:
+    """Exact W^p between two empirical 1-D distributions with m and n atoms
+    (possibly m != n): piecewise integration of |F^{-1} - G^{-1}|^p over the
+    merged quantile breakpoints {i/m} U {j/n}.  O(m + n).  Oracle for tests."""
+    sf = jnp.sort(samples_f)
+    sg = jnp.sort(samples_g)
+    m, n = sf.shape[-1], sg.shape[-1]
+    grid = jnp.sort(jnp.concatenate([jnp.arange(m + 1) / m, jnp.arange(n + 1) / n]))
+    lengths = jnp.diff(grid)                    # (m + n + 1,)
+    mid = (grid[:-1] + grid[1:]) / 2.0
+    fi = jnp.clip(jnp.floor(mid * m).astype(jnp.int32), 0, m - 1)
+    gi = jnp.clip(jnp.floor(mid * n).astype(jnp.int32), 0, n - 1)
+    diff = jnp.abs(sf[fi] - sg[gi]) ** p
+    return (diff * lengths).sum() ** (1.0 / p)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings of inverse CDFs (Remark 1)
+# ---------------------------------------------------------------------------
+
+
+def icdf_nodes_mc(key: jax.Array, n: int, clip: float = CLIP) -> Tuple[Array, float]:
+    """Uniform MC nodes on [clip, 1-clip]; returns (nodes, volume)."""
+    u = montecarlo.mc_nodes(key, n, 1, (clip, 1.0 - clip))[:, 0]
+    return u, 1.0 - 2.0 * clip
+
+
+def icdf_nodes_qmc(n: int, clip: float = CLIP, sequence: str = "sobol"
+                   ) -> Tuple[Array, float]:
+    u = montecarlo.qmc_nodes(n, 1, (clip, 1.0 - clip), sequence)[:, 0]
+    return u, 1.0 - 2.0 * clip
+
+
+def icdf_nodes_cheb(n: int, clip: float = CLIP) -> Array:
+    """Chebyshev (first-kind) nodes on [clip, 1-clip] for the basis method."""
+    return basis.cheb_nodes(n, (clip, 1.0 - clip))
+
+
+def embed_icdf_mc(icdf_vals: Array, volume: float, p: float = 2.0) -> Array:
+    """Monte Carlo embedding of an inverse CDF sampled at shared nodes."""
+    return montecarlo.mc_embedding(icdf_vals, volume, p)
+
+
+def embed_icdf_cheb(icdf_vals: Array, clip: float = CLIP) -> Array:
+    """Orthonormal-basis embedding (p = 2 only) of an inverse CDF sampled at
+    icdf_nodes_cheb nodes."""
+    return basis.cheb_l2_coeffs(icdf_vals, (clip, 1.0 - clip))
+
+
+def w2_embedding_gaussian(mu: Array, sigma: Array, nodes: Array,
+                          volume: float | None, method: str = "mc") -> Array:
+    """End-to-end embedding of N(mu, sigma^2) for W^2 hashing.
+
+    mu, sigma: (...,) batched parameters; nodes: (N,) quantile levels."""
+    vals = gaussian_icdf(nodes, mu[..., None], sigma[..., None])
+    if method == "mc":
+        return embed_icdf_mc(vals, volume)
+    if method == "cheb":
+        return embed_icdf_cheb(vals)
+    raise ValueError(method)
+
+
+def w2_embedding_samples(samples: Array, nodes: Array, volume: float | None,
+                         method: str = "mc") -> Array:
+    """Embedding of an empirical distribution given raw draws (..., m)."""
+    vals = empirical_icdf(samples, nodes)
+    if method == "mc":
+        return embed_icdf_mc(vals, volume)
+    if method == "cheb":
+        return embed_icdf_cheb(vals)
+    raise ValueError(method)
+
+
+def w2_embedding_logits(logits: Array, support: Array, nodes: Array,
+                        volume: float) -> Array:
+    """Embedding of a categorical distribution over a numeric ``support`` grid
+    (e.g. a model's softmax output viewed as a distribution on token scores).
+
+    Used by the serving-path LSH semantic cache: logits (..., V) ->
+    inverse-CDF values at ``nodes`` -> MC embedding.  Fully jittable.
+    """
+    probs = jax.nn.softmax(logits, axis=-1)
+    cdf = jnp.cumsum(probs, axis=-1)
+    # F^{-1}(u) = smallest support[i] with cdf[i] >= u, via searchsorted-free
+    # formulation: count of cdf < u.
+    idx = (cdf[..., None, :] < nodes[:, None]).sum(axis=-1)  # (..., N)
+    idx = jnp.clip(idx, 0, support.shape[-1] - 1)
+    vals = jnp.take(support, idx, axis=-1)
+    return montecarlo.mc_embedding(vals.astype(jnp.float32), volume)

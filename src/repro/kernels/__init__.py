@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the LSH hot spots (validated via interpret=True).
+
+hash_mm      -- fused p-stable hash: floor((X @ A)/r + b)
+simhash_pack -- fused matmul + sign + 32-bit pack
+dct_mm       -- DCT-as-matmul Chebyshev embedding (MXU, no FFT)
+rerank       -- masked L^p candidate re-ranking
+ops          -- jit'd wrappers; ref -- pure-jnp oracles
+"""
+from . import ops, ref

@@ -1,0 +1,71 @@
+"""Fused p-stable hash kernel:  H = floor((X @ A) / r + b)  (paper Eq. 5).
+
+The hot spot of the whole system: hashing a batch of B embeddings with
+L*K hash functions is a (B x N) @ (N x LK) matmul (MXU) fused with the
+scale / offset / floor epilogue (VPU) so the projection matrix never
+round-trips to HBM between the matmul and the quantization.
+
+Tiling: grid (B/bm, LK/bk, N/bn); the f32 accumulator lives in VMEM scratch
+and the epilogue runs once, on the last N-step.  Block shapes default to
+128x128 (MXU-aligned); N is padded by the wrapper if needed.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _hash_mm_kernel(x_ref, a_ref, b_ref, o_ref, acc_ref, *, nsteps: int,
+                    inv_r: float):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], a_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _epilogue():
+        proj = acc_ref[...] * inv_r + b_ref[...]
+        o_ref[...] = jnp.floor(proj).astype(jnp.int32)
+
+
+def hash_mm(x: Array, alpha: Array, b: Array, r: float,
+            bm: int = 128, bk: int = 128, bn: int = 128,
+            interpret: bool = True) -> Array:
+    """floor((x @ alpha) / r + b).
+
+    x: (B, N) float; alpha: (N, K) float; b: (K,) float. Returns (B, K) int32.
+    Dimensions are zero-padded up to block multiples (zeros do not change the
+    matmul result; padded K columns are sliced off).
+    """
+    B, N = x.shape
+    N2, K = alpha.shape
+    assert N == N2 and b.shape == (K,)
+    Bp, Np, Kp = (-B % bm + B), (-N % bn + N), (-K % bk + K)
+    xp = jnp.pad(x, ((0, Bp - B), (0, Np - N))).astype(jnp.float32)
+    ap = jnp.pad(alpha, ((0, Np - N), (0, Kp - K))).astype(jnp.float32)
+    bp = jnp.pad(b, (0, Kp - K)).astype(jnp.float32)[None, :]
+
+    grid = (Bp // bm, Kp // bk, Np // bn)
+    out = pl.pallas_call(
+        functools.partial(_hash_mm_kernel, nsteps=grid[2], inv_r=1.0 / r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bk), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Kp), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )(xp, ap, bp)
+    return out[:B, :K]

@@ -1,0 +1,54 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels run compiled (interpret=False); on CPU (this container)
+they execute under ``interpret=True`` which runs the kernel body in Python --
+correct but slow, so the wrappers also expose a ``use_kernel=False`` escape to
+the jnp oracle for CPU-side production paths (benchmarks compare both).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .dct_mm import dct_mm
+from .hash_mm import hash_mm
+from .rerank import rerank_distances
+from .simhash_pack import simhash_pack
+
+_ON_TPU = jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("r", "use_kernel"))
+def pstable_hash(x, alpha, b, r: float, use_kernel: bool = True):
+    """floor((x @ alpha)/r + b) -> int32, batched; Eq. (5) for K hashes."""
+    if use_kernel:
+        return hash_mm(x, alpha, b, r, interpret=not _ON_TPU)
+    return ref.hash_mm_ref(x, alpha, b, r)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def simhash_signature(x, alpha, use_kernel: bool = True):
+    """Packed sign signature (B, K/32) int32."""
+    if use_kernel:
+        return simhash_pack(x, alpha, interpret=not _ON_TPU)
+    return ref.simhash_pack_ref(x, alpha)
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def cheb_embed(fvals, dct_t, scale, use_kernel: bool = True):
+    """Fused DCT + orthonormal scaling: (B, N) samples -> (B, N) coefficients."""
+    if use_kernel:
+        return dct_mm(fvals, dct_t, scale, interpret=not _ON_TPU)
+    return ref.dct_mm_ref(fvals, dct_t, scale)
+
+
+@functools.partial(jax.jit, static_argnames=("p", "use_kernel"))
+def candidate_distances(q, emb, ids, p: float = 2.0, use_kernel: bool = True):
+    """Masked L^p re-rank distances (B, C)."""
+    if use_kernel:
+        return rerank_distances(q, emb, ids, p=p, interpret=not _ON_TPU)
+    return ref.rerank_ref(q, emb, ids, p)

@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the `ref.py` contract).
+
+Tests sweep shapes/dtypes and assert_allclose kernel-vs-oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def hash_mm_ref(x: Array, alpha: Array, b: Array, r: float) -> Array:
+    proj = x.astype(jnp.float32) @ alpha.astype(jnp.float32)
+    return jnp.floor(proj / r + b.astype(jnp.float32)).astype(jnp.int32)
+
+
+def simhash_pack_ref(x: Array, alpha: Array) -> Array:
+    bits = (x.astype(jnp.float32) @ alpha.astype(jnp.float32) >= 0).astype(jnp.int32)
+    k = bits.shape[-1]
+    words = bits.reshape(bits.shape[:-1] + (k // 32, 32))
+    shifts = jnp.arange(32, dtype=jnp.int32)
+    return (words << shifts).sum(axis=-1).astype(jnp.int32)
+
+
+def dct_mm_ref(fvals: Array, dct_t: Array, scale: Array) -> Array:
+    return (fvals.astype(jnp.float32) @ dct_t.astype(jnp.float32)) * scale
+
+
+def rerank_ref(q: Array, emb: Array, ids: Array, p: float = 2.0) -> Array:
+    diff = emb.astype(jnp.float32) - q.astype(jnp.float32)[:, None, :]
+    if p == 2.0:
+        d = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    elif p == 1.0:
+        d = jnp.sum(jnp.abs(diff), axis=-1)
+    else:
+        d = jnp.sum(jnp.abs(diff) ** p, axis=-1) ** (1.0 / p)
+    return jnp.where(ids < 0, jnp.inf, d)

@@ -1,0 +1,67 @@
+"""Fused SimHash kernel:  matmul + sign + 32-bit pack (Charikar 2002).
+
+sig = pack32(X @ A >= 0): a (B x N) @ (N x K) matmul on the MXU whose epilogue
+converts each group of 32 sign bits into one int32 word via a (32,)-vector
+contraction (bit-weights 2^j) -- no per-bit control flow, VPU-friendly.
+
+Tiling: grid (B/bm, K/bk, N/bn), accumulate in VMEM, pack once on the last
+N-step.  bk must be a multiple of 32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _simhash_kernel(x_ref, a_ref, o_ref, acc_ref, *, nsteps: int, bm: int,
+                    bk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], a_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == nsteps - 1)
+    def _pack():
+        bits = (acc_ref[...] >= 0.0).astype(jnp.int32)      # (bm, bk)
+        groups = bits.reshape(bm, bk // 32, 32)
+        weights = (jnp.int32(1) << jnp.arange(32, dtype=jnp.int32))
+        o_ref[...] = jnp.sum(groups * weights, axis=-1, dtype=jnp.int32)
+
+
+def simhash_pack(x: Array, alpha: Array, bm: int = 128, bk: int = 128,
+                 bn: int = 128, interpret: bool = True) -> Array:
+    """Packed sign signature of x @ alpha.
+
+    x: (B, N); alpha: (N, K), K a multiple of 32. Returns (B, K // 32) int32.
+    """
+    B, N = x.shape
+    N2, K = alpha.shape
+    assert N == N2 and K % 32 == 0
+    assert bk % 32 == 0
+    Bp, Np, Kp = (-B % bm + B), (-N % bn + N), (-K % bk + K)
+    xp = jnp.pad(x, ((0, Bp - B), (0, Np - N))).astype(jnp.float32)
+    ap = jnp.pad(alpha, ((0, Np - N), (0, Kp - K))).astype(jnp.float32)
+
+    grid = (Bp // bm, Kp // bk, Np // bn)
+    out = pl.pallas_call(
+        functools.partial(_simhash_kernel, nsteps=grid[2], bm=bm, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bk // 32), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Bp, Kp // 32), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
+        interpret=interpret,
+    )(xp, ap)
+    return out[:B, :K // 32]

@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. eval_shape's params / optimizer / cache (ShapeDtypeStructs -- zero
+     allocation),
+  3. jits the train_step or serve_step with the sharding rules,
+  4. ``.lower().compile()`` -- any sharding mismatch / unsupported collective
+     / compile-OOM here is a bug in the system,
+  5. prints ``memory_analysis()`` (fits-in-HBM proof) and ``cost_analysis()``,
+  6. derives the three-term roofline (launch/roofline.py) and appends the cell
+     to an incremental JSON results file.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-3b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out experiments/dryrun.json
+
+NOTE: the XLA_FLAGS line above MUST run before any jax import (device count
+locks on first init), which is why it is the first statement of this module.
+Do not import this module from processes that need 1 CPU device.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Optional
+
+import jax
+
+from ..configs.base import SHAPES
+from ..configs.registry import ARCH_IDS, get_config
+from ..launch import roofline as rl
+from ..launch import specs
+from ..launch.mesh import make_production_mesh
+from ..models.model import get_model
+from ..optim import adamw
+from ..runtime import steps as rt
+
+
+def runnable(cfg, shape) -> Optional[str]:
+    """None if the cell runs; else the documented skip reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return "long_500k skipped: pure full-attention arch (DESIGN.md §5)"
+    return None
+
+
+def _compile_once(cfg, shape, mesh, api, p_shape):
+    if shape.kind == "train":
+        opt_cfg = adamw.OptConfig(moment_dtype=cfg.opt_dtype)
+        o_shape = jax.eval_shape(lambda p: adamw.init(opt_cfg, p), p_shape)
+        b_shape = specs.batch_specs(cfg, shape)
+        with mesh:
+            step, *_ = rt.shard_train_step(
+                api, cfg, opt_cfg, mesh, shape, p_shape, b_shape)
+            return step.lower(p_shape, o_shape, b_shape).compile()
+    if shape.kind == "prefill":
+        b_shape = specs.batch_specs(cfg, shape)
+        from ..sharding import rules
+        pspec = rules.param_specs(cfg, p_shape, mesh)
+        bspec = rules.batch_specs(cfg, b_shape, mesh, shape.global_batch)
+        fwd = jax.jit(api.forward,
+                      in_shardings=(rules.named(mesh, pspec),
+                                    rules.named(mesh, bspec)),
+                      out_shardings=None)
+        with mesh:
+            return fwd.lower(p_shape, b_shape).compile()
+    c_shape = specs.cache_shape(api, cfg, shape)
+    tok, pos = specs.decode_inputs(cfg, shape)
+    with mesh:
+        step, *_ = rt.shard_serve_step(
+            api, cfg, mesh, shape, p_shape, c_shape,
+            lsh=None if not cfg.lsh_cache else _lsh_shape(cfg))
+        return step.lower(p_shape, c_shape, tok, pos).compile()
+
+
+def _depth_variants(cfg):
+    """(cfg_d1, cfg_d2, multiplier): two reduced-depth configs whose
+    (unrolled) cost difference is exactly one repeated unit, plus how many
+    additional units the real config has beyond cfg_d1.
+
+    Works because layers inside each scan are identical; cost(real) =
+    cost(d1) + multiplier * (cost(d2) - cost(d1)).
+
+    Depths (2, 3) rather than (1, 2): at depth 1 GSPMD occasionally picks a
+    different (worse) layout for the single layer, which corrupts the delta
+    (observed: internlm L=1 flops > L=2 flops)."""
+    if cfg.family == "hybrid":
+        period = len(cfg.block_pattern)
+        tail = cfg.n_layers - (cfg.n_layers // period) * period
+        d1 = dataclasses.replace(cfg, n_layers=2 * period + tail)
+        d2 = dataclasses.replace(cfg, n_layers=3 * period + tail)
+        return d1, d2, cfg.n_layers // period - 2
+    if cfg.family == "encdec":
+        d1 = dataclasses.replace(cfg, n_layers=2, encoder_layers=2)
+        d2 = dataclasses.replace(cfg, n_layers=3, encoder_layers=3)
+        return d1, d2, cfg.n_layers - 2  # enc and dec vary together
+    d1 = dataclasses.replace(cfg, n_layers=2)
+    d2 = dataclasses.replace(cfg, n_layers=3)
+    return d1, d2, cfg.n_layers - 2
+
+
+def _extrapolate(c1, c2, mult: int, chips: int):
+    """Linear depth extrapolation of cost_analysis + collective parse."""
+    f1, f2 = c1.cost_analysis(), c2.cost_analysis()
+    flops = f1.get("flops", 0.0) + mult * (f2.get("flops", 0.0)
+                                           - f1.get("flops", 0.0))
+    bts = f1.get("bytes accessed", 0.0) + mult * (
+        f2.get("bytes accessed", 0.0) - f1.get("bytes accessed", 0.0))
+    p1 = rl.parse_collectives(c1.as_text())
+    p2 = rl.parse_collectives(c2.as_text())
+    colls = {}
+    for kind in p1:
+        colls[kind] = {
+            "count": p1[kind]["count"] + mult * (p2[kind]["count"]
+                                                 - p1[kind]["count"]),
+            "bytes": p1[kind]["bytes"] + mult * (p2[kind]["bytes"]
+                                                 - p1[kind]["bytes"]),
+        }
+    return float(flops), float(bts), colls
+
+
+def lower_cell(arch_id: str, shape_name: str, multi_pod: bool):
+    """Three compiles per cell:
+
+    * ROLLED scan at real depth (production form): proves the cell compiles
+      as deployed and gives realistic per-device memory (while-loop body
+      buffers counted once, matching runtime buffer reuse).
+    * UNROLLED at depth 1 and depth 2 (grad_accum=1): XLA's cost_analysis
+      counts a while body once, NOT x trip-count, so FLOPs / bytes /
+      collectives come from exact linear depth extrapolation
+      cost(L) = cost(1) + (L-1) * [cost(2) - cost(1)]  (layers identical).
+      grad_accum=1 is cost-neutral: same tokens, 1/accum-size activations x
+      accum steps.
+    """
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    skip = runnable(cfg, shape)
+    if skip:
+        return {"status": "skipped", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = 1
+    for v in mesh.shape.values():
+        chips *= v
+    api = get_model(cfg)
+    p_shape = specs.params_shape(api)
+
+    t0 = time.time()
+    os.environ["REPRO_SCAN_UNROLL"] = ""
+    rolled = _compile_once(cfg, shape, mesh, api, p_shape)
+    mem = rolled.memory_analysis()
+    print(f"  memory_analysis (rolled): args={mem.argument_size_in_bytes/2**30:.2f}GiB "
+          f"out={mem.output_size_in_bytes/2**30:.2f}GiB "
+          f"temp={mem.temp_size_in_bytes/2**30:.2f}GiB "
+          f"alias={mem.alias_size_in_bytes/2**30:.2f}GiB")
+
+    os.environ["REPRO_SCAN_UNROLL"] = "full"
+    d1, d2, mult = _depth_variants(dataclasses.replace(cfg, grad_accum=1))
+    api1 = get_model(d1)
+    c1 = _compile_once(d1, shape, mesh, api1, specs.params_shape(api1))
+    api2 = get_model(d2)
+    c2 = _compile_once(d2, shape, mesh, api2, specs.params_shape(api2))
+    os.environ["REPRO_SCAN_UNROLL"] = ""
+    compile_s = time.time() - t0
+
+    flops, bts, colls = _extrapolate(c1, c2, mult, chips)
+    coll_bytes = sum(v["bytes"] for v in colls.values())
+    n_active = cfg.active_param_count()
+    r = rl.Roofline(
+        flops_per_chip=flops, bytes_per_chip=bts,
+        collective_bytes_per_chip=coll_bytes, chips=chips,
+        model_flops_global=rl.model_flops(shape.kind, n_active,
+                                          shape.global_batch, shape.seq_len),
+        collectives=colls,
+        memory_stats={
+            "argument_bytes": float(mem.argument_size_in_bytes),
+            "output_bytes": float(mem.output_size_in_bytes),
+            "temp_bytes": float(mem.temp_size_in_bytes),
+            "alias_bytes": float(mem.alias_size_in_bytes),
+            "peak_bytes": float(mem.argument_size_in_bytes
+                                + mem.output_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                - mem.alias_size_in_bytes),
+            "hbm_bytes": float(rl.HBM_BYTES),
+        })
+    print(f"  cost (depth-extrapolated): flops={flops:.3e} bytes={bts:.3e} "
+          f"coll={coll_bytes:.3e}")
+    result = {"status": "ok", "compile_s": compile_s,
+              "mesh": "multi" if multi_pod else "single",
+              "roofline": r.to_dict()}
+    return result
+
+
+def _lsh_shape(cfg):
+    """Build real (tiny) LSH serve params -- they are static data, not
+    ShapeDtypeStructs, and small enough to materialize."""
+    return rt.LshServeParams.create(jax.random.PRNGKey(7), cfg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun.json")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    cells = []
+    archs = ARCH_IDS if args.all or not args.arch else (args.arch,)
+    shapes = tuple(SHAPES) if args.all or not args.shape else (args.shape,)
+    meshes = {"single": (False,), "multi": (True,),
+              "both": (False, True)}[args.mesh]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    for arch_id, shape_name, mp in cells:
+        key = f"{'multi' if mp else 'single'}/{arch_id}/{shape_name}"
+        if key in results and results[key].get("status") in ("ok", "skipped") \
+                and not args.force:
+            print(f"[dryrun] {key}: cached ({results[key]['status']})")
+            continue
+        print(f"[dryrun] {key}: lowering...")
+        try:
+            res = lower_cell(arch_id, shape_name, mp)
+        except Exception as e:  # a failure here is a bug; record it loudly
+            res = {"status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(f"[dryrun] {key}: ERROR {e}")
+        else:
+            if res["status"] == "ok":
+                r = res["roofline"]
+                print(f"[dryrun] {key}: ok compile={res['compile_s']:.1f}s "
+                      f"bottleneck={r['bottleneck']} "
+                      f"t=({r['t_compute']:.4f},{r['t_memory']:.4f},"
+                      f"{r['t_collective']:.4f})s mfu_bound={r['mfu_bound']:.3f}")
+            else:
+                print(f"[dryrun] {key}: {res['status']} "
+                      f"({res.get('reason','')})")
+        results[key] = res
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+
+    n_ok = sum(1 for v in results.values() if v["status"] == "ok")
+    n_skip = sum(1 for v in results.values() if v["status"] == "skipped")
+    n_err = sum(1 for v in results.values() if v["status"] == "error")
+    print(f"[dryrun] done: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"-> {args.out}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,43 @@
+"""Render EXPERIMENTS.md roofline tables from experiments/dryrun.json."""
+
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict
+
+
+def fmt_cell(key: str, res: Dict) -> str:
+    if res["status"] == "skipped":
+        return f"| {key} | skipped | | | | | | {res['reason'][:40]} |"
+    if res["status"] != "ok":
+        return f"| {key} | ERROR | | | | | | {res.get('error','')[:60]} |"
+    r = res["roofline"]
+    mem = r["memory_stats"]
+    fits = "Y" if mem["peak_bytes"] <= mem["hbm_bytes"] else "OVER"
+    return ("| {k} | {tc:.4f} | {tm:.4f} | {tl:.4f} | {bn} | {ur:.2f} | "
+            "{mfu:.3f} | peak {pk:.1f}GiB {fits} |".format(
+                k=key, tc=r["t_compute"], tm=r["t_memory"],
+                tl=r["t_collective"], bn=r["bottleneck"],
+                ur=r["useful_flops_ratio"], mfu=r["mfu_bound"],
+                pk=mem["peak_bytes"] / 2 ** 30, fits=fits))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="experiments/dryrun.json")
+    ap.add_argument("--mesh", default=None, choices=(None, "single", "multi"))
+    args = ap.parse_args()
+    with open(args.json) as f:
+        results = json.load(f)
+    print("| cell | t_compute (s) | t_memory (s) | t_collective (s) | "
+          "bottleneck | useful_flops | mfu_bound | memory |")
+    print("|---|---|---|---|---|---|---|---|")
+    for key in sorted(results):
+        if args.mesh and not key.startswith(args.mesh):
+            continue
+        print(fmt_cell(key, results[key]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Batched serving launcher with the W^2-LSH semantic cache.
+
+    python -m repro.launch.serve --arch llama3.2-3b --steps 16 --batch 8
+
+Decodes a batch of synthetic requests; every step the paper's technique runs
+in-path: each sequence's output distribution is embedded (inverse CDF at QMC
+nodes, Eq. 3) and hashed (p-stable, Eq. 5).  The server maintains an LSH
+index over past signatures:
+
+* exact signature collisions within a step -> duplicate generation states
+  (compute once, fan out);
+* index hits across steps -> 'seen this state before' (semantic cache).
+"""
+
+import argparse
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-3b")
+    ap.add_argument("--steps", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--cache-len", type=int, default=128)
+    args = ap.parse_args()
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..configs import smoke_config
+    from ..core import index as lidx
+    from ..models import get_model
+    from ..runtime import steps as rt
+
+    key = jax.random.PRNGKey(0)
+    cfg = smoke_config(args.arch)
+    api = get_model(cfg)
+    params = api.init(key)
+    lsh = rt.LshServeParams.create(jax.random.fold_in(key, 1), cfg,
+                                   n_embed=64, n_hashes=16, r=0.2)
+    serve = jax.jit(rt.make_serve_step(api, cfg, lsh))
+
+    b = args.batch
+    cache = api.init_cache(b, args.cache_len)
+    # synthetic requests: half duplicated prompts to exercise the dedup path
+    prompts = jnp.asarray(
+        np.random.default_rng(0).integers(0, cfg.vocab_size // 2,
+                                          (b, 1)).repeat(1, 1), jnp.int32)
+    prompts = prompts.at[b // 2:].set(prompts[: b - b // 2])
+
+    seen: dict = {}
+    dedup_hits = cache_hits = 0
+    toks = prompts
+    for step in range(args.steps):
+        out, cache = serve(params, cache, toks, jnp.int32(step))
+        sig = np.asarray(out["lsh_sig"])
+        groups: dict = {}
+        for i, row in enumerate(map(tuple, sig)):
+            groups.setdefault(row, []).append(i)
+            if row in seen and seen[row] != step:
+                cache_hits += 1
+            seen[row] = step
+        dedup_hits += sum(len(g) - 1 for g in groups.values())
+        toks = out["next"]
+    total = args.steps * b
+    print(f"[serve] {args.steps} steps x {b} seqs: "
+          f"within-step dedup={dedup_hits}/{total} "
+          f"cross-step cache hits={cache_hits}")
+    print("[serve] OK")
+
+
+if __name__ == "__main__":
+    main()

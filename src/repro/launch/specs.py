@@ -1,0 +1,51 @@
+"""ShapeDtypeStruct stand-ins for every model input -- weak-type-correct,
+shardable, no device allocation (the dry-run contract)."""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..models.model import ModelApi
+
+SDS = jax.ShapeDtypeStruct
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Training / prefill batch stand-ins.
+
+    [audio]/[vlm] archs get precomputed frame/patch embeddings (stub
+    frontend), per the assignment sheet.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": SDS((b, s), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = SDS((b, s, cfg.d_model), jnp.bfloat16
+                              if cfg.dtype == "bfloat16" else jnp.float32)
+    if cfg.modality == "vision":
+        batch["patches"] = SDS((b, cfg.frontend_len, cfg.d_model),
+                               jnp.bfloat16 if cfg.dtype == "bfloat16"
+                               else jnp.float32)
+    return batch
+
+
+def params_shape(api: ModelApi) -> Any:
+    return jax.eval_shape(api.init, jax.random.PRNGKey(0))
+
+
+def cache_shape(api: ModelApi, cfg: ArchConfig, shape: ShapeConfig) -> Any:
+    b = shape.global_batch
+    if cfg.family == "encdec":
+        return jax.eval_shape(
+            functools.partial(api.init_cache, b, shape.seq_len,
+                              enc_len=cfg.frontend_len))
+    return jax.eval_shape(functools.partial(api.init_cache, b, shape.seq_len))
+
+
+def decode_inputs(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[Any, Any]:
+    """(tokens, pos) stand-ins for one decode step."""
+    return SDS((shape.global_batch, 1), jnp.int32), SDS((), jnp.int32)

@@ -1,0 +1,2 @@
+"""Config-driven model substrate for the 10 assigned architectures."""
+from .model import ModelApi, get_model

@@ -1,0 +1,348 @@
+"""Shared building blocks: norms, RoPE / M-RoPE, GQA attention (train+decode),
+gated FFNs, embeddings.  Pure functions over param pytrees (dicts)."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+
+Array = jax.Array
+
+NEG_INF = -2.0e38
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in: Optional[int] = None):
+    fan_in = fan_in or shape[0]
+    scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: Array, head_dim: int, theta: float,
+                mrope_sections: Tuple[int, ...] = ()) -> Tuple[Array, Array]:
+    """cos/sin tables.
+
+    positions: (B, S) int32 for standard RoPE, or (3, B, S) for M-RoPE
+    (temporal / height / width position ids; for pure text all three rows are
+    equal and M-RoPE coincides with RoPE).  Returns cos, sin: (B, S, head_dim/2).
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 2:
+        ang = positions.astype(jnp.float32)[..., None] * inv_freq  # (B,S,half)
+    else:
+        ang3 = positions.astype(jnp.float32)[..., None] * inv_freq  # (3,B,S,half)
+        secs = mrope_sections or (half,)
+        idx = np.zeros((half,), np.int32)
+        start = 0
+        for i, s in enumerate(secs):
+            idx[start:start + s] = i
+            start += s
+        ang = jnp.take_along_axis(
+            ang3.transpose(1, 2, 3, 0), jnp.asarray(idx)[None, None, :, None],
+            axis=-1)[..., 0]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2).  Llama-style rotate-half."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[:, :, None, :].astype(x.dtype)
+    s = sin[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ArchConfig, d_model: Optional[int] = None) -> dict:
+    """Query/output heads are allocated at cfg.h_eff (padded up to the TP
+    axis); the padded heads' contribution is zero-masked in attention(), so
+    the function equals the unpadded arch exactly while every tensor dim
+    divides the mesh."""
+    d = d_model or cfg.d_model
+    h, kv, hd = cfg.h_eff, cfg.n_kv_heads, cfg.head_dim
+    pd = pdtype_of(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, (d, h, hd), pd, fan_in=d),
+        "wk": dense_init(k2, (d, kv, hd), pd, fan_in=d),
+        "wv": dense_init(k3, (d, kv, hd), pd, fan_in=d),
+        "wo": dense_init(k4, (h, hd, d), pd, fan_in=cfg.n_heads * hd),
+    }
+
+
+def _kv_map(cfg: ArchConfig) -> np.ndarray:
+    """Static head -> kv-head map (REAL grouping h // g for real heads; padded
+    heads read kv head 0 and are masked out)."""
+    g = cfg.n_heads // cfg.n_kv_heads
+    idx = np.zeros((cfg.h_eff,), np.int32)
+    idx[:cfg.n_heads] = np.arange(cfg.n_heads) // g
+    return idx
+
+
+def _head_mask(cfg: ArchConfig) -> np.ndarray:
+    return (np.arange(cfg.h_eff) < cfg.n_heads).astype(np.float32)
+
+
+def _gqa_scores(q: Array, k: Array) -> Array:
+    """q: (B,Q,KV,G,D), k: (B,T,KV,D) -> (B,KV,G,Q,T) (grouped, no kv repeat)."""
+    return jnp.einsum("bqhgd,bthd->bhgqt", q, k)
+
+
+def _gqa_out(probs: Array, v: Array) -> Array:
+    return jnp.einsum("bhgqt,bthd->bqhgd", probs, v)
+
+
+FLASH_BLOCK = 1024
+FLASH_MIN_SEQ = 2048
+
+
+def _flash_attention(q: Array, kx: Array, v: Array, window: int = 0,
+                     block_k: int = FLASH_BLOCK) -> Array:
+    """Blockwise causal attention with online softmax (flash-style, pure JAX).
+
+    q, kx, v: (B, S, H, D), q pre-scaled.  Scans over key blocks carrying the
+    running (max, denominator, accumulator), so the (S, S) score matrix is
+    never materialized: peak score memory is (B, H, S, block_k) -- e.g. 17 GB
+    -> 0.5 GB per layer at prefill_32k.  Each scan step is remat'd, so the
+    backward pass recomputes per-block scores instead of storing them.
+    """
+    b, s, h, hd = q.shape
+    nb = s // block_k
+    dt = q.dtype
+    kb = kx.reshape(b, nb, block_k, h, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, block_k, h, hd).transpose(1, 0, 2, 3, 4)
+    iq = jnp.arange(s)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, jbase = blk
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kblk).astype(jnp.float32)
+        j = jbase + jnp.arange(block_k)
+        mask = j[None, :] <= iq[:, None]
+        if window > 0:
+            mask = mask & (j[None, :] > iq[:, None] - window)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        p = jnp.exp(scores - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bqhd", p.astype(dt), vblk)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] + pv.astype(jnp.float32)
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, h, s), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, s), jnp.float32),
+            jnp.zeros((b, s, h, hd), jnp.float32))
+    jb = jnp.arange(nb) * block_k
+    (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), init, (kb, vb, jb))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(dt)
+
+
+def attention(params: dict, cfg: ArchConfig, x: Array, cos: Array, sin: Array,
+              window: int = 0) -> Array:
+    """Causal self-attention over a full sequence (training / prefill).
+
+    GQA is computed by *replicating KV heads up to H query heads* with a
+    static gather (idx = h // G) rather than the grouped (KV, G) reshape: the
+    (KV, G) split cannot be sharded by GSPMD when the TP axis exceeds
+    n_kv_heads, which silently replicates the whole quadratic-attention
+    compute across the model axis (measured 6x FLOP inflation at 16-way TP).
+    With head-repeat, every einsum is embarrassingly parallel over H.
+
+    window > 0 => local (sliding-window) attention.
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.h_eff, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    kx = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q = apply_rope(q, cos, sin)
+    kx = apply_rope(kx, cos, sin)
+    if h != kv:  # repeat kv heads (static gather -> TP-shardable over H)
+        idx = _kv_map(cfg)
+        kx = kx[:, :, idx, :]
+        v = v[:, :, idx, :]
+    q = q * (hd ** -0.5)
+    if s >= FLASH_MIN_SEQ and s % FLASH_BLOCK == 0:
+        out = _flash_attention(q, kx, v, window=window)
+    else:
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, kx).astype(jnp.float32)
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        mask = j <= i
+        if window > 0:
+            mask = mask & (j > i - window)
+        scores = jnp.where(mask, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    if cfg.h_eff != cfg.n_heads:   # zero padded heads (exactness + zero grads)
+        out = out * jnp.asarray(_head_mask(cfg), dt)[None, None, :, None]
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+
+
+def attention_decode(params: dict, cfg: ArchConfig, x: Array, cache_k: Array,
+                     cache_v: Array, pos: Array, cos: Array, sin: Array,
+                     window: int = 0) -> Tuple[Array, Array, Array]:
+    """One-token decode with a KV cache.
+
+    x: (B, 1, d); cache_k/v: (B, T, KV, D) (ring buffer for local attention);
+    pos: scalar int32 current position.  Returns (out (B,1,d), new_k, new_v).
+
+    Decode keeps the grouped (KV, G) formulation -- the cache stays at KV
+    heads so its reads (the decode roofline) are not inflated by head repeat.
+    With padded query heads, a static permutation maps heads into (KV, G_eff)
+    groups that preserve the REAL grouping h // g; padded group slots are
+    masked before the output projection.
+    """
+    b, _, d = x.shape
+    h, kv, hd = cfg.h_eff, cfg.n_kv_heads, cfg.head_dim
+    g_real = cfg.n_heads // kv
+    g = h // kv
+    t = cache_k.shape[1]
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    kx = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    q = apply_rope(q, cos, sin)
+    kx = apply_rope(kx, cos, sin)
+    slot = pos % t if window > 0 else pos   # ring buffer for local attention
+    cache_k = jax.lax.dynamic_update_slice(cache_k, kx.astype(cache_k.dtype),
+                                           (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                           (0, slot, 0, 0))
+    if h != cfg.n_heads:
+        # grouped slot (kv_i, j) <- real head kv_i * g_real + j (pads -> 0)
+        perm = np.zeros((h,), np.int32)
+        for kv_i in range(kv):
+            for j in range(g):
+                perm[kv_i * g + j] = kv_i * g_real + j if j < g_real else 0
+        q = q[:, :, perm, :]
+    q = q.reshape(b, 1, kv, g, hd) * (hd ** -0.5)
+    scores = _gqa_scores(q, cache_k.astype(dt)).astype(jnp.float32)  # (B,KV,G,1,T)
+    j = jnp.arange(t)
+    if window > 0:
+        valid = (j <= slot) | (pos >= t)     # ring buffer fully valid once wrapped
+    else:
+        valid = j <= pos
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+    out = _gqa_out(probs, cache_v.astype(dt)).reshape(b, 1, h, hd)
+    if h != cfg.n_heads:
+        inv = np.zeros((h,), np.int32)
+        for rh in range(cfg.n_heads):
+            inv[rh] = (rh // g_real) * g + (rh % g_real)
+        out = out[:, :, inv, :] * jnp.asarray(_head_mask(cfg), dt)[None, None, :, None]
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def ffn_init(key, d: int, ff: int, cfg: ArchConfig, gated: bool = True) -> dict:
+    pd = pdtype_of(cfg)
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"up": dense_init(k1, (d, ff), pd),
+         "down": dense_init(k2, (ff, d), pd, fan_in=ff)}
+    if gated:
+        p["gate"] = dense_init(k3, (d, ff), pd)
+    return p
+
+
+def _act(name: str, x: Array) -> Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(name)
+
+
+def ffn(params: dict, cfg: ArchConfig, x: Array) -> Array:
+    dt = x.dtype
+    up = x @ params["up"].astype(dt)
+    if "gate" in params:
+        up = _act(cfg.act, x @ params["gate"].astype(dt)) * up
+    else:
+        up = _act(cfg.act, up)
+    return up @ params["down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, cfg: ArchConfig) -> dict:
+    """Tables allocated at cfg.v_eff (vocab padded to the TP axis); padded
+    logits get a -inf additive mask in logits() so softmax/CE are exact."""
+    pd = pdtype_of(cfg)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": embed_init(k1, (cfg.v_eff, cfg.d_model), pd)}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(k2, (cfg.d_model, cfg.v_eff), pd)
+    return p
+
+
+def embed_tokens(params: dict, cfg: ArchConfig, tokens: Array) -> Array:
+    return params["tok"].astype(dtype_of(cfg))[tokens]
+
+
+def logits(params: dict, cfg: ArchConfig, x: Array) -> Array:
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        lg = x @ params["tok"].astype(dt).T
+    else:
+        lg = x @ params["out"].astype(dt)
+    if cfg.v_eff != cfg.vocab_size:
+        vmask = np.zeros((cfg.v_eff,), np.float32)
+        vmask[cfg.vocab_size:] = NEG_INF
+        lg = lg + jnp.asarray(vmask, lg.dtype)
+    return lg

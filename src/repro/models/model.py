@@ -1,0 +1,518 @@
+"""Unified, config-driven model assembly for all 10 assigned architectures.
+
+Every family exposes the same functional API (``ModelApi``):
+
+  init(key) -> params                         (stacked-by-layer leaves)
+  forward(params, batch) -> (logits, aux)     (training / prefill)
+  init_cache(batch, cache_len) -> cache       (decode state)
+  decode_step(params, cache, tokens, pos) -> (logits, cache)
+
+Layers are stacked (leading L axis) and iterated with ``lax.scan`` so the HLO
+is O(1 layer) regardless of depth -- essential for 88-layer compile times and
+for making the per-layer collective schedule optimizable once (DESIGN.md §6).
+Remat policy per config: none | dots | full.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import common, moe, rglru, ssm
+from .common import (attention, attention_decode, attn_init, dtype_of,
+                     embed_tokens, embedding_init, ffn, ffn_init, logits,
+                     rmsnorm, rmsnorm_init, rope_angles)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable[..., Any]
+    forward: Callable[..., Tuple[Array, Array]]
+    init_cache: Callable[..., Any]
+    decode_step: Callable[..., Tuple[Array, Any]]
+    forward_hidden: Optional[Callable[..., Tuple[Array, Array]]] = None
+
+
+def _remat(cfg: ArchConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _scan(body, init, xs):
+    """lax.scan whose unrolling is env-switchable: the dry-run sets
+    REPRO_SCAN_UNROLL=full so XLA's cost_analysis (which counts a while-loop
+    body ONCE, not x trip-count) sees every layer.  Real runs keep the rolled
+    loop (O(1-layer) HLO, flat compile times)."""
+    unroll = os.environ.get("REPRO_SCAN_UNROLL", "")
+    return jax.lax.scan(body, init, xs,
+                        unroll=True if unroll == "full" else 1)
+
+
+def _stack_init(layer_init_fn, key, n: int):
+    return jax.vmap(layer_init_fn)(jax.random.split(key, n))
+
+
+# ===========================================================================
+# Decoder-only transformer (dense / moe / vlm)
+# ===========================================================================
+
+
+def _tf_layer_init(cfg: ArchConfig):
+    def one(key):
+        k1, k2 = jax.random.split(key)
+        p = {"ln1": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg)),
+             "ln2": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg)),
+             "attn": attn_init(k1, cfg)}
+        if cfg.family == "moe":
+            p["moe"] = moe.moe_init(k2, cfg)
+        else:
+            p["ffn"] = ffn_init(k2, cfg.d_model, cfg.d_ff, cfg)
+        return p
+    return one
+
+
+def _tf_layer_fwd(cfg: ArchConfig, x, p, cos, sin):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    x = x + attention(p["attn"], cfg, h, cos, sin)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, aux = moe.moe_ffn(p["moe"], cfg, h)
+    else:
+        y, aux = ffn(p["ffn"], cfg, h), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def _tf_layer_decode(cfg: ArchConfig, x, p, ck, cv, pos, cos, sin):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, ck, cv = attention_decode(p["attn"], cfg, h, ck, cv, pos, cos, sin)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.family == "moe":
+        y, _ = moe.moe_ffn(p["moe"], cfg, h)
+    else:
+        y = ffn(p["ffn"], cfg, h)
+    return x + y, ck, cv
+
+
+def _positions_for(cfg: ArchConfig, b: int, s: int, offset=0):
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.mrope_sections:
+        return jnp.broadcast_to(pos[None], (3, b, s))  # text: t = h = w
+    return pos
+
+
+def make_transformer(cfg: ArchConfig) -> ModelApi:
+    layer_init = _tf_layer_init(cfg)
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {
+            "embed": embedding_init(k1, cfg),
+            "layers": _stack_init(layer_init, k2, cfg.n_layers),
+            "ln_f": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg)),
+        }
+
+    def forward(params, batch, return_hidden=False):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_tokens(params["embed"], cfg, tokens)
+        if cfg.modality == "vision" and "patches" in batch:
+            # stub frontend: precomputed patch embeddings prefix the text
+            x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+            s = x.shape[1]
+        pos = _positions_for(cfg, b, s)
+        cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta,
+                               cfg.mrope_sections)
+
+        body = _remat(cfg, lambda x_, p: _tf_layer_fwd(cfg, x_, p, cos, sin))
+        x, auxs = _scan(body, x, params["layers"])
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        if return_hidden:
+            return x, auxs.mean()
+        return logits(params["embed"], cfg, x), auxs.mean()
+
+    def init_cache(batch: int, cache_len: int):
+        shape = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype_of(cfg)),
+                "v": jnp.zeros(shape, dtype_of(cfg))}
+
+    def decode_step(params, cache, tokens, pos):
+        b = tokens.shape[0]
+        x = embed_tokens(params["embed"], cfg, tokens)
+        ppos = _positions_for(cfg, b, 1, offset=pos)
+        cos, sin = rope_angles(ppos, cfg.head_dim, cfg.rope_theta,
+                               cfg.mrope_sections)
+
+        def body(x_, layer):
+            p, ck, cv = layer
+            x_, ck, cv = _tf_layer_decode(cfg, x_, p, ck, cv, pos, cos, sin)
+            return x_, (ck, cv)
+
+        x, (nk, nv) = _scan(body, x, (params["layers"], cache["k"],
+                                             cache["v"]))
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        return logits(params["embed"], cfg, x), {"k": nk, "v": nv}
+
+    return ModelApi(cfg, init, forward, init_cache, decode_step,
+                    forward_hidden=functools.partial(forward,
+                                                     return_hidden=True))
+
+
+# ===========================================================================
+# Mamba2 (ssm)
+# ===========================================================================
+
+
+def make_mamba(cfg: ArchConfig) -> ModelApi:
+    def layer_init(key):
+        return {"ln": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg)),
+                "mamba": ssm.mamba_init(key, cfg)}
+
+    def init(key):
+        k1, k2 = jax.random.split(key)
+        return {"embed": embedding_init(k1, cfg),
+                "layers": _stack_init(layer_init, k2, cfg.n_layers),
+                "ln_f": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg))}
+
+    def forward(params, batch, return_hidden=False):
+        x = embed_tokens(params["embed"], cfg, batch["tokens"])
+
+        def body(x_, p):
+            h = rmsnorm(p["ln"], x_, cfg.norm_eps)
+            return x_ + ssm.mamba_forward(p["mamba"], cfg, h), jnp.zeros((), jnp.float32)
+
+        x, _ = _scan(_remat(cfg, body), x, params["layers"])
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        if return_hidden:
+            return x, jnp.zeros((), jnp.float32)
+        return logits(params["embed"], cfg, x), jnp.zeros((), jnp.float32)
+
+    def init_cache(batch: int, cache_len: int):
+        one = ssm.mamba_cache_init(cfg, batch, dtype_of(cfg))
+        return jax.tree.map(
+            lambda t: jnp.zeros((cfg.n_layers,) + t.shape, t.dtype), one)
+
+    def decode_step(params, cache, tokens, pos):
+        x = embed_tokens(params["embed"], cfg, tokens)
+
+        def body(x_, layer):
+            p, c = layer
+            h = rmsnorm(p["ln"], x_, cfg.norm_eps)
+            y, nc = ssm.mamba_decode(p["mamba"], cfg, h, c)
+            return x_ + y, nc
+
+        x, ncache = _scan(body, x, (params["layers"], cache))
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        return logits(params["embed"], cfg, x), ncache
+
+    return ModelApi(cfg, init, forward, init_cache, decode_step,
+                    forward_hidden=functools.partial(forward,
+                                                     return_hidden=True))
+
+
+# ===========================================================================
+# RecurrentGemma (hybrid): groups of (rglru, rglru, local-attn) + rglru tail
+# ===========================================================================
+
+
+def _hy_counts(cfg: ArchConfig) -> Tuple[int, int]:
+    period = len(cfg.block_pattern)          # 3
+    n_groups = cfg.n_layers // period
+    tail = cfg.n_layers - n_groups * period  # leftover rglru layers
+    return n_groups, tail
+
+
+def make_hybrid(cfg: ArchConfig) -> ModelApi:
+    n_groups, tail = _hy_counts(cfg)
+    pd = functools.partial(rmsnorm_init, cfg.d_model)
+
+    def rg_layer_init(key):
+        k1, k2 = jax.random.split(key)
+        return {"ln1": pd(common.pdtype_of(cfg)), "ln2": pd(common.pdtype_of(cfg)),
+                "rg": rglru.rglru_init(k1, cfg),
+                "ffn": ffn_init(k2, cfg.d_model, cfg.d_ff, cfg, gated=True)}
+
+    def at_layer_init(key):
+        k1, k2 = jax.random.split(key)
+        return {"ln1": pd(common.pdtype_of(cfg)), "ln2": pd(common.pdtype_of(cfg)),
+                "attn": attn_init(k1, cfg),
+                "ffn": ffn_init(k2, cfg.d_model, cfg.d_ff, cfg, gated=True)}
+
+    def group_init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"rg1": rg_layer_init(k1), "rg2": rg_layer_init(k2),
+                "attn": at_layer_init(k3)}
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        p = {"embed": embedding_init(k1, cfg),
+             "groups": _stack_init(group_init, k2, n_groups),
+             "ln_f": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg))}
+        if tail:
+            p["tail"] = _stack_init(rg_layer_init, k3, tail)
+        return p
+
+    def rg_fwd(p, x):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        x = x + rglru.rglru_forward(p["rg"], cfg, h)
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x + ffn(p["ffn"], cfg, h)
+
+    def at_fwd(p, x, cos, sin):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        x = x + attention(p["attn"], cfg, h, cos, sin, window=cfg.local_window)
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x + ffn(p["ffn"], cfg, h)
+
+    def forward(params, batch, return_hidden=False):
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_tokens(params["embed"], cfg, tokens)
+        pos = _positions_for(cfg, b, s)
+        cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+
+        def gbody(x_, p):
+            x_ = rg_fwd(p["rg1"], x_)
+            x_ = rg_fwd(p["rg2"], x_)
+            x_ = at_fwd(p["attn"], x_, cos, sin)
+            return x_, jnp.zeros((), jnp.float32)
+
+        x, _ = _scan(_remat(cfg, gbody), x, params["groups"])
+        if tail:
+            def tbody(x_, p):
+                return rg_fwd(p, x_), jnp.zeros((), jnp.float32)
+            x, _ = _scan(_remat(cfg, tbody), x, params["tail"])
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        if return_hidden:
+            return x, jnp.zeros((), jnp.float32)
+        return logits(params["embed"], cfg, x), jnp.zeros((), jnp.float32)
+
+    def init_cache(batch: int, cache_len: int):
+        win = min(cfg.local_window, cache_len)
+        rg_one = rglru.rglru_cache_init(cfg, batch, dtype_of(cfg))
+        kv = (batch, win, cfg.n_kv_heads, cfg.head_dim)
+        group = {
+            "rg1": rg_one, "rg2": jax.tree.map(jnp.copy, rg_one),
+            "k": jnp.zeros(kv, dtype_of(cfg)), "v": jnp.zeros(kv, dtype_of(cfg)),
+        }
+        cache = {"groups": jax.tree.map(
+            lambda t: jnp.zeros((n_groups,) + t.shape, t.dtype), group)}
+        if tail:
+            cache["tail"] = jax.tree.map(
+                lambda t: jnp.zeros((tail,) + t.shape, t.dtype), rg_one)
+        return cache
+
+    def rg_dec(p, x, c):
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        y, nc = rglru.rglru_decode(p["rg"], cfg, h, c)
+        x = x + y
+        h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        return x + ffn(p["ffn"], cfg, h), nc
+
+    def decode_step(params, cache, tokens, pos):
+        b = tokens.shape[0]
+        x = embed_tokens(params["embed"], cfg, tokens)
+        ppos = _positions_for(cfg, b, 1, offset=pos)
+        cos, sin = rope_angles(ppos, cfg.head_dim, cfg.rope_theta)
+
+        def gbody(x_, layer):
+            p, c = layer
+            x_, nrg1 = rg_dec(p["rg1"], x_, c["rg1"])
+            x_, nrg2 = rg_dec(p["rg2"], x_, c["rg2"])
+            h = rmsnorm(p["attn"]["ln1"], x_, cfg.norm_eps)
+            a, nk, nv = attention_decode(p["attn"]["attn"], cfg, h, c["k"],
+                                         c["v"], pos, cos, sin,
+                                         window=cfg.local_window)
+            x_ = x_ + a
+            h = rmsnorm(p["attn"]["ln2"], x_, cfg.norm_eps)
+            x_ = x_ + ffn(p["attn"]["ffn"], cfg, h)
+            return x_, {"rg1": nrg1, "rg2": nrg2, "k": nk, "v": nv}
+
+        x, ngroups = _scan(gbody, x, (params["groups"], cache["groups"]))
+        ncache = {"groups": ngroups}
+        if tail:
+            def tbody(x_, layer):
+                p, c = layer
+                x_, nc = rg_dec(p, x_, c)
+                return x_, nc
+            x, ntail = _scan(tbody, x, (params["tail"], cache["tail"]))
+            ncache["tail"] = ntail
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        return logits(params["embed"], cfg, x), ncache
+
+    return ModelApi(cfg, init, forward, init_cache, decode_step,
+                    forward_hidden=functools.partial(forward,
+                                                     return_hidden=True))
+
+
+# ===========================================================================
+# Encoder-decoder (seamless-m4t): audio-frontend stub + text decoder
+# ===========================================================================
+
+
+def make_encdec(cfg: ArchConfig) -> ModelApi:
+    gated = False  # classic transformer FFN (relu)
+
+    def enc_layer_init(key):
+        k1, k2 = jax.random.split(key)
+        return {"ln1": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg)),
+                "ln2": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg)),
+                "attn": attn_init(k1, cfg),
+                "ffn": ffn_init(k2, cfg.d_model, cfg.d_ff, cfg, gated=gated)}
+
+    def dec_layer_init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"ln1": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg)),
+                "ln2": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg)),
+                "ln3": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg)),
+                "self": attn_init(k1, cfg),
+                "cross": attn_init(k2, cfg),
+                "ffn": ffn_init(k3, cfg.d_model, cfg.d_ff, cfg, gated=gated)}
+
+    def init(key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {"embed": embedding_init(k1, cfg),
+                "enc": _stack_init(enc_layer_init, k2, cfg.encoder_layers),
+                "dec": _stack_init(dec_layer_init, k3, cfg.n_layers),
+                "ln_enc": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg)),
+                "ln_f": rmsnorm_init(cfg.d_model, common.pdtype_of(cfg))}
+
+    def _enc_attention(p, x, cos, sin):
+        """Bidirectional self-attention (no causal mask)."""
+        b, s, d = x.shape
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        dt = x.dtype
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+        q = common.apply_rope(q, cos, sin)
+        k = common.apply_rope(k, cos, sin)
+        q = q.reshape(b, s, kv, h // kv, hd) * (hd ** -0.5)
+        scores = common._gqa_scores(q, k).astype(jnp.float32)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = common._gqa_out(probs, v).reshape(b, s, h, hd)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+    def _cross_attention(p, x, mem_k, mem_v):
+        b, s, d = x.shape
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        dt = x.dtype
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+        q = q.reshape(b, s, kv, h // kv, hd) * (hd ** -0.5)
+        scores = common._gqa_scores(q, mem_k.astype(dt)).astype(jnp.float32)
+        probs = jax.nn.softmax(scores, axis=-1).astype(dt)
+        out = common._gqa_out(probs, mem_v.astype(dt)).reshape(b, s, h, hd)
+        return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(dt))
+
+    def encode(params, frames):
+        b, s, _ = frames.shape
+        x = frames.astype(dtype_of(cfg))
+        pos = _positions_for(cfg, b, s)
+        cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+
+        def body(x_, p):
+            h = rmsnorm(p["ln1"], x_, cfg.norm_eps)
+            x_ = x_ + _enc_attention(p["attn"], h, cos, sin)
+            h = rmsnorm(p["ln2"], x_, cfg.norm_eps)
+            return x_ + ffn(p["ffn"], cfg, h), jnp.zeros((), jnp.float32)
+
+        x, _ = _scan(_remat(cfg, body), x, params["enc"])
+        return rmsnorm(params["ln_enc"], x, cfg.norm_eps)
+
+    def _mem_kv(p_cross, mem):
+        dt = mem.dtype
+        k = jnp.einsum("bsd,dhk->bshk", mem, p_cross["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", mem, p_cross["wv"].astype(dt))
+        return k, v
+
+    def forward(params, batch, return_hidden=False):
+        mem = encode(params, batch["frames"])
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_tokens(params["embed"], cfg, tokens)
+        pos = _positions_for(cfg, b, s)
+        cos, sin = rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+
+        def body(x_, p):
+            h = rmsnorm(p["ln1"], x_, cfg.norm_eps)
+            x_ = x_ + attention(p["self"], cfg, h, cos, sin)
+            h = rmsnorm(p["ln2"], x_, cfg.norm_eps)
+            mk, mv = _mem_kv(p["cross"], mem)
+            x_ = x_ + _cross_attention(p["cross"], h, mk, mv)
+            h = rmsnorm(p["ln3"], x_, cfg.norm_eps)
+            return x_ + ffn(p["ffn"], cfg, h), jnp.zeros((), jnp.float32)
+
+        x, _ = _scan(_remat(cfg, body), x, params["dec"])
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        if return_hidden:
+            return x, jnp.zeros((), jnp.float32)
+        return logits(params["embed"], cfg, x), jnp.zeros((), jnp.float32)
+
+    def init_cache(batch: int, cache_len: int, enc_len: Optional[int] = None):
+        enc_len = enc_len or cfg.frontend_len
+        kv = (cfg.n_layers, batch, cache_len, cfg.n_kv_heads, cfg.head_dim)
+        ckv = (cfg.n_layers, batch, enc_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(kv, dtype_of(cfg)),
+                "v": jnp.zeros(kv, dtype_of(cfg)),
+                "ck": jnp.zeros(ckv, dtype_of(cfg)),
+                "cv": jnp.zeros(ckv, dtype_of(cfg))}
+
+    def decode_step(params, cache, tokens, pos):
+        """Cross K/V are precomputed in the cache (fill_cross_cache)."""
+        b = tokens.shape[0]
+        x = embed_tokens(params["embed"], cfg, tokens)
+        ppos = _positions_for(cfg, b, 1, offset=pos)
+        cos, sin = rope_angles(ppos, cfg.head_dim, cfg.rope_theta)
+
+        def body(x_, layer):
+            p, ck_, cv_, xk, xv = layer
+            h = rmsnorm(p["ln1"], x_, cfg.norm_eps)
+            a, ck_, cv_ = attention_decode(p["self"], cfg, h, ck_, cv_, pos,
+                                           cos, sin)
+            x_ = x_ + a
+            h = rmsnorm(p["ln2"], x_, cfg.norm_eps)
+            x_ = x_ + _cross_attention(p["cross"], h, xk, xv)
+            h = rmsnorm(p["ln3"], x_, cfg.norm_eps)
+            return x_ + ffn(p["ffn"], cfg, h), (ck_, cv_)
+
+        x, (nk, nv) = _scan(
+            body, x, (params["dec"], cache["k"], cache["v"], cache["ck"],
+                      cache["cv"]))
+        x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+        return (logits(params["embed"], cfg, x),
+                {"k": nk, "v": nv, "ck": cache["ck"], "cv": cache["cv"]})
+
+    api = ModelApi(cfg, init, forward, init_cache, decode_step,
+                   forward_hidden=functools.partial(forward,
+                                                    return_hidden=True))
+    api.encode = encode  # type: ignore[attr-defined]
+    return api
+
+
+# ===========================================================================
+# Registry
+# ===========================================================================
+
+
+def get_model(cfg: ArchConfig) -> ModelApi:
+    if cfg.family == "ssm":
+        return make_mamba(cfg)
+    if cfg.family == "hybrid":
+        return make_hybrid(cfg)
+    if cfg.family == "encdec":
+        return make_encdec(cfg)
+    return make_transformer(cfg)  # dense | moe | vlm

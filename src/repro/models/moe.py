@@ -1,0 +1,161 @@
+"""Mixture-of-experts layer with sort-based capacity dispatch.
+
+Instead of the GShard one-hot dispatch einsum (whose FLOPs scale as T^2 and
+dwarf the expert math), tokens are routed by *sorting* the (token, expert)
+assignments by expert id and gathering them into a static (E, C) layout --
+the same argsort + segment-rank trick as the LSH bucket insert in
+core/index.py.  Gathers/scatters are memory ops; compiled FLOPs stay at
+top_k * capacity_factor * (expert FFN), which keeps the roofline's
+MODEL_FLOPS / HLO_FLOPs ratio honest.
+
+Variants:
+* qwen2-moe: 60 routed experts top-4 + 4 shared experts (fused into one wide
+  shared FFN) + sigmoid shared-gate.
+* arctic: 128 routed top-2 + a dense FFN residual running in parallel.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import dense_init, ffn, ffn_init, pdtype_of
+
+Array = jax.Array
+
+_TP = "model"
+
+
+def _constrain(x: Array, spec) -> Array:
+    """with_sharding_constraint iff a mesh is registered (sharding.context)."""
+    from ..sharding import context
+    return context.constrain(x, spec, axes=(_TP,))
+
+
+def moe_init(key, cfg: ArchConfig) -> dict:
+    """Expert stacks allocated at cfg.e_eff (padded to the TP axis); the
+    router only emits cfg.n_experts logits, so padded experts are never
+    routed to -- their capacity rows stay zero."""
+    d, e, ff = cfg.d_model, cfg.e_eff, cfg.moe_d_ff
+    pd = pdtype_of(cfg)
+    keys = jax.random.split(key, 6)
+    p = {
+        "router": dense_init(keys[0], (d, cfg.n_experts), pd),
+        "w_gate": dense_init(keys[1], (e, d, ff), pd, fan_in=d),
+        "w_up": dense_init(keys[2], (e, d, ff), pd, fan_in=d),
+        "w_down": dense_init(keys[3], (e, ff, d), pd, fan_in=ff),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = ffn_init(keys[4], d, cfg.n_shared_experts * ff, cfg)
+        p["shared_gate"] = dense_init(keys[5], (d, 1), pd)
+    if cfg.dense_residual:
+        p["dense"] = ffn_init(keys[4], d, cfg.dense_d_ff, cfg)
+    return p
+
+
+def _capacity(cfg: ArchConfig, n_tokens: int) -> int:
+    c = int(cfg.capacity_factor * n_tokens * cfg.n_experts_per_token
+            / cfg.n_experts) + 1
+    return max(8, -(-c // 8) * 8)  # round up to 8 (sublane alignment)
+
+
+def _dispatch_row(cfg: ArchConfig, xt: Array, top_e: Array, top_w: Array,
+                  cap: int) -> Tuple[Array, Array, Array]:
+    """Sort-based dispatch for ONE token group (a sequence): (S, d) tokens ->
+    (E, C, d) slots.  All sort/segment/scatter work is group-local, so under
+    a batch-sharded mesh it never leaves the data shard (the global-argsort
+    variant all-gathers the entire token array per layer -- measured 74 s of
+    collective time per step at qwen2-moe train_4k; see EXPERIMENTS.md §Perf).
+    """
+    s, d = xt.shape
+    e, k = cfg.e_eff, cfg.n_experts_per_token
+    flat_e = top_e.reshape(-1)                                  # (S*k,)
+    flat_t = jnp.repeat(jnp.arange(s), k)
+    flat_w = top_w.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    n = se.shape[0]
+    is_start = jnp.concatenate([jnp.ones((1,), jnp.bool_), se[1:] != se[:-1]])
+    seg_start = jax.lax.associative_scan(
+        jnp.maximum, jnp.where(is_start, jnp.arange(n), 0))
+    rank = jnp.arange(n) - seg_start
+    slot = jnp.where(rank < cap, se * cap + rank, e * cap)      # overflow drop
+    slot_tok = jnp.full((e * cap + 1,), -1, jnp.int32).at[slot].set(
+        st.astype(jnp.int32), mode="drop")[:-1]
+    slot_w = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        sw, mode="drop")[:-1]
+    gathered = jnp.where(slot_tok[:, None] >= 0,
+                         xt[jnp.clip(slot_tok, 0, s - 1)], 0.0)
+    return gathered.reshape(e, cap, d), slot_tok, slot_w
+
+
+def _combine_row(y: Array, slot_tok: Array, slot_w: Array, s: int, d: int
+                 ) -> Array:
+    """Weighted scatter-add (E*C, d) slots back to (S, d) tokens (per group).
+
+    Stays in y.dtype (bf16): an f32 combine forces the whole backward pass of
+    the expert stack into f32, doubling every MoE collective (measured)."""
+    yw = y.reshape(-1, d) * slot_w[:, None].astype(y.dtype)
+    return jnp.zeros((s + 1, d), y.dtype).at[
+        jnp.where(slot_tok >= 0, slot_tok, s)].add(yw, mode="drop")[:-1]
+
+
+def moe_ffn(params: dict, cfg: ArchConfig, x: Array) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar).
+
+    Router: softmax over experts, top-k, renormalized combine weights
+    (qwen2-moe convention).  Aux loss: Switch-style load-balancing.
+
+    Dispatch is GROUPED per batch row (vmap of the sort-based dispatch):
+    routing stays local to each data shard and the only cross-shard traffic
+    is the (B, E, C, d) <-> expert-sharded all-to-all around the expert
+    einsums, exactly the GShard/Switch communication pattern.
+    """
+    b, s, d = x.shape
+    e, k = cfg.e_eff, cfg.n_experts_per_token   # padded expert count
+    cap = _capacity(cfg, s)                     # per-row capacity
+    dt = x.dtype
+
+    router_logits = (x @ params["router"].astype(dt)).astype(jnp.float32)
+    probs = jax.nn.softmax(router_logits, axis=-1)              # (B, S, E_real)
+    top_w, top_e = jax.lax.top_k(probs, k)                      # (B, S, k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch): E * sum_e f_e * p_e  (real experts).
+    me = probs.mean(axis=(0, 1))
+    one_hot_top = jax.nn.one_hot(top_e, cfg.n_experts, dtype=jnp.float32)
+    ce = one_hot_top.sum(axis=(0, 1, 2)) / (b * s * k)
+    aux = cfg.n_experts * jnp.sum(me * ce)
+
+    gx, slot_tok, slot_w = jax.vmap(
+        lambda xr, er, wr: _dispatch_row(cfg, xr, er, wr, cap))(
+        x, top_e, top_w)                                        # (B, E, C, d)
+
+    # ---- expert FFN batched over E (honest active FLOPs).  Constraints pin
+    # the GShard pattern: all-to-all the SMALL (B,E,C,d) tensors to
+    # expert-sharded layout, compute the f-wide intermediates shard-local,
+    # all-to-all back -- instead of letting GSPMD gather the (B,E,C,f)
+    # intermediates (4.4x more bytes at qwen2-moe scale) ----
+    from jax.sharding import PartitionSpec as P
+    UNC = P.UNCONSTRAINED
+    gx = _constrain(gx, P(UNC, _TP, None, None))
+    h = jnp.einsum("becd,edf->becf", gx, params["w_up"].astype(dt))
+    g = jnp.einsum("becd,edf->becf", gx, params["w_gate"].astype(dt))
+    h = _constrain(jax.nn.silu(g) * h, P(UNC, _TP, None, None))
+    y = jnp.einsum("becf,efd->becd", h, params["w_down"].astype(dt))
+    y = _constrain(y, P(UNC, _TP, None, None))
+
+    out = jax.vmap(lambda yr, tr, wr: _combine_row(yr, tr, wr, s, d))(
+        y, slot_tok, slot_w).astype(dt)                         # (B, S, d)
+
+    xt = x.reshape(b * s, d)
+    if cfg.n_shared_experts:
+        sg = jax.nn.sigmoid((xt @ params["shared_gate"].astype(dt))
+                            .astype(jnp.float32)).astype(dt)
+        out = out + (sg * ffn(params["shared"], cfg, xt)).reshape(b, s, d)
+    if cfg.dense_residual:
+        out = out + ffn(params["dense"], cfg, xt).reshape(b, s, d)
+    return out, aux

@@ -1,0 +1,111 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin)  [arXiv:2402.19427].
+
+Block: two input projections to lru_width; one branch goes conv1d(4) -> RG-LRU,
+the other is a GeLU gate; product -> output projection.
+
+RG-LRU:  r_t = sigmoid(W_a x_t + b_a),  i_t = sigmoid(W_x x_t + b_x),
+         a_t = exp(-c * softplus(Lambda) * r_t)   (c = 8),
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t).
+
+Training runs the recurrence with an associative scan over the sequence;
+decode is the single-step update (O(1) state -- this plus the bounded local
+attention window is why long_500k runs for the hybrid arch).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import dense_init, pdtype_of
+
+Array = jax.Array
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: ArchConfig) -> dict:
+    d, lw = cfg.d_model, cfg.lru_width
+    pd = pdtype_of(cfg)
+    keys = jax.random.split(key, 6)
+    return {
+        "in_x": dense_init(keys[0], (d, lw), pd),
+        "in_gate": dense_init(keys[1], (d, lw), pd),
+        "conv_w": dense_init(keys[2], (cfg.d_conv, lw), pd, fan_in=cfg.d_conv),
+        "conv_b": jnp.zeros((lw,), pd),
+        "w_a": dense_init(keys[3], (lw, lw), pd),
+        "b_a": jnp.zeros((lw,), pd),
+        "w_i": dense_init(keys[4], (lw, lw), pd),
+        "b_i": jnp.zeros((lw,), pd),
+        # Lambda init so that a^c spans ~(0.9, 0.999) as in the paper
+        "lam": jnp.asarray(jax.random.uniform(keys[5], (lw,), minval=2.0,
+                                              maxval=6.0), pd),
+        "out": dense_init(keys[5], (lw, d), pd, fan_in=lw),
+    }
+
+
+def _gates(params: dict, x: Array) -> Tuple[Array, Array]:
+    """log_a (float32) and gated input contribution b_t."""
+    dt = x.dtype
+    r = jax.nn.sigmoid((x @ params["w_a"].astype(dt)
+                        + params["b_a"].astype(dt)).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ params["w_i"].astype(dt)
+                        + params["b_i"].astype(dt)).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(params["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0, None)) * i * x.astype(jnp.float32)
+    return a, b
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def rglru_forward(params: dict, cfg: ArchConfig, x: Array) -> Array:
+    """Full-sequence recurrent block.  x: (B, S, d_model)."""
+    dt = x.dtype
+    gate = jax.nn.gelu(x @ params["in_gate"].astype(dt))
+    u = x @ params["in_x"].astype(dt)
+    u = _causal_conv(u, params["conv_w"].astype(dt), params["conv_b"].astype(dt))
+    a, b = _gates(params, u)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(dt) * gate
+    return h @ params["out"].astype(dt)
+
+
+def rglru_cache_init(cfg: ArchConfig, batch: int, dtype) -> dict:
+    lw = cfg.lru_width
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, lw), dtype),
+        "h": jnp.zeros((batch, lw), jnp.float32),
+    }
+
+
+def rglru_decode(params: dict, cfg: ArchConfig, x: Array, cache: dict
+                 ) -> Tuple[Array, dict]:
+    """One-token decode.  x: (B, 1, d_model)."""
+    dt = x.dtype
+    x0 = x[:, 0]
+    gate = jax.nn.gelu(x0 @ params["in_gate"].astype(dt))
+    u = x0 @ params["in_x"].astype(dt)
+    hist = jnp.concatenate([cache["conv"], u[:, None, :]], axis=1)
+    u = jnp.einsum("bkc,kc->bc", hist, params["conv_w"].astype(dt)) \
+        + params["conv_b"].astype(dt)
+    a, b = _gates(params, u)
+    h = a * cache["h"] + b
+    out = (h.astype(dt) * gate) @ params["out"].astype(dt)
+    return out[:, None, :], {"conv": hist[:, 1:], "h": h}

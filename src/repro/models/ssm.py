@@ -1,0 +1,164 @@
+"""Mamba2 / SSD (state-space duality) block  [arXiv:2405.21060].
+
+Training uses the chunked SSD algorithm: intra-chunk quadratic term (MXU
+matmuls over chunk length Q) + inter-chunk linear recurrence (associative scan
+over chunks) -- O(S Q) work, sub-quadratic in S, which is what makes the
+long_500k cell runnable for this arch.  Decode is the O(1) state recurrence.
+
+Layout: d_inner = expand * d_model, H = d_inner / headdim heads, state N,
+n_groups = 1 (B and C shared across heads).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .common import dense_init, pdtype_of, rmsnorm, rmsnorm_init
+
+Array = jax.Array
+
+
+def mamba_init(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    din, ns, hh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * ns
+    pd = pdtype_of(cfg)
+    keys = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * din + 2 * ns + hh), pd),
+        "conv_w": dense_init(keys[1], (cfg.d_conv, conv_dim), pd, fan_in=cfg.d_conv),
+        "conv_b": jnp.zeros((conv_dim,), pd),
+        "A_log": jnp.zeros((hh,), pd),          # A = -exp(A_log) = -1 at init
+        "D": jnp.ones((hh,), pd),
+        "dt_bias": jnp.zeros((hh,), pd),
+        "norm": rmsnorm_init(din, pd),
+        "out_proj": dense_init(keys[2], (din, d), pd, fan_in=din),
+    }
+
+
+def _split_proj(cfg: ArchConfig, proj: Array):
+    din, ns, hh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :din]
+    xbc = proj[..., din:din + din + 2 * ns]
+    dt = proj[..., din + din + 2 * ns:]
+    return z, xbc, dt
+
+
+def _causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv: x (B,S,C), w (K,C) -> (B,S,C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(k):
+        out = out + xp[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def mamba_forward(params: dict, cfg: ArchConfig, x: Array) -> Array:
+    """Full-sequence SSD.  x: (B, S, d_model) -> (B, S, d_model).
+    S must be a multiple of cfg.ssm_chunk."""
+    bsz, s, _ = x.shape
+    din, ns, hh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    q = cfg.ssm_chunk
+    nc = s // q
+    dt_ = x.dtype
+
+    proj = x @ params["in_proj"].astype(dt_)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+    xbc = jax.nn.silu(_causal_conv(xbc, params["conv_w"].astype(dt_),
+                                   params["conv_b"].astype(dt_)))
+    xin = xbc[..., :din].reshape(bsz, s, hh, p)
+    Bm = xbc[..., din:din + ns]                      # (B,S,N)
+    Cm = xbc[..., din + ns:]                         # (B,S,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # (H,)
+
+    # chunked views
+    def ch(t, trail):  # (B, S, ...) -> (B, nc, Q, ...)
+        return t.reshape((bsz, nc, q) + trail)
+
+    a = ch(dt * A, (hh,))                            # (B,nc,Q,H) log-decay increments
+    cs = jnp.cumsum(a, axis=2)                       # inclusive cumsum
+    xdt = ch(xin.astype(jnp.float32) * dt[..., None], (hh, p))
+    Bc = ch(Bm.astype(jnp.float32), (ns,))
+    Cc = ch(Cm.astype(jnp.float32), (ns,))
+
+    # intra-chunk (quadratic in Q): M[i,j,h] = exp(cs_i - cs_j) * (C_i . B_j), j <= i
+    decay = jnp.exp(cs[:, :, :, None, :] - cs[:, :, None, :, :])  # (B,nc,Qi,Qj,H)
+    ii = jnp.arange(q)
+    mask = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)
+    M = G[..., None] * jnp.where(mask, decay, 0.0)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M, xdt)
+
+    # chunk states: S_c = sum_j exp(cs_last - cs_j) B_j (x dt)_j
+    w_end = jnp.exp(cs[:, :, -1:, :] - cs)                         # (B,nc,Q,H)
+    S_c = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, w_end, xdt)     # (B,nc,H,P,N)
+
+    # inter-chunk recurrence via associative scan over chunks
+    d_tot = jnp.exp(cs[:, :, -1, :])                               # (B,nc,H)
+
+    def combine(l, r):
+        dl, sl = l
+        dr, sr = r
+        return dl * dr, dr[..., None, None] * sl + sr
+
+    d_inc, s_inc = jax.lax.associative_scan(combine, (d_tot, S_c), axis=1)
+    # state BEFORE chunk c:
+    s_prev = jnp.concatenate([jnp.zeros_like(s_inc[:, :1]), s_inc[:, :-1]], axis=1)
+
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp", Cc, s_prev, jnp.exp(cs))
+    y = (y_intra + y_inter).reshape(bsz, s, hh, p)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] \
+        * xin.astype(jnp.float32)
+    y = y.reshape(bsz, s, din).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    return y @ params["out_proj"].astype(dt_)
+
+
+def mamba_cache_init(cfg: ArchConfig, batch: int, dtype) -> dict:
+    din, ns = cfg.d_inner, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, din + 2 * ns), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_headdim, ns), jnp.float32),
+    }
+
+
+def mamba_decode(params: dict, cfg: ArchConfig, x: Array, cache: dict
+                 ) -> Tuple[Array, dict]:
+    """One-token decode.  x: (B, 1, d_model)."""
+    bsz = x.shape[0]
+    din, ns, hh, p = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    dt_ = x.dtype
+
+    proj = x[:, 0] @ params["in_proj"].astype(dt_)
+    z, xbc, dt_raw = _split_proj(cfg, proj)
+
+    conv_hist = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)
+    w = params["conv_w"].astype(dt_)                 # (K, C)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", conv_hist, w)
+                      + params["conv_b"].astype(dt_))
+    new_conv = conv_hist[:, 1:]
+
+    xin = xbc[..., :din].reshape(bsz, hh, p).astype(jnp.float32)
+    Bm = xbc[..., din:din + ns].astype(jnp.float32)
+    Cm = xbc[..., din + ns:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    da = jnp.exp(dt * A)                                           # (B,H)
+
+    new_ssm = (da[:, :, None, None] * cache["ssm"]
+               + jnp.einsum("bn,bhp,bh->bhpn", Bm, xin, dt))
+    y = jnp.einsum("bn,bhpn->bhp", Cm, new_ssm)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xin
+    y = y.reshape(bsz, din).astype(dt_) * jax.nn.silu(z)
+    y = rmsnorm(params["norm"], y, cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(dt_))[:, None, :]
+    return out, {"conv": new_conv, "ssm": new_ssm}

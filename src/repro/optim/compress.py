@@ -1,0 +1,76 @@
+"""Int8 gradient compression with error feedback (distributed-optimization
+trick for the cross-pod all-reduce -- DESIGN.md §6).
+
+The classic EF-SGD scheme: each worker quantizes (gradient + carried error) to
+int8 with a per-tensor scale, all-reduces the int8 payload (8x less ICI bytes
+on the slow cross-pod links), dequantizes, and carries the quantization
+residual into the next step.  Error feedback preserves convergence
+(Karimireddy et al. 2019).
+
+``compressed_psum`` is designed for use inside a ``shard_map`` over the 'pod'
+axis; quantize/dequantize/error-feedback are pure functions unit-tested on
+their contraction property.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def quantize_int8(x: Array) -> Tuple[Array, Array]:
+    """Per-tensor symmetric int8 quantization: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / 127.0, 1e-30)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array) -> Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress(grads: Any, error: Any) -> Tuple[Any, Any, Any]:
+    """(grads + error) -> (q_tree, scale_tree, new_error_tree)."""
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected)
+        deq = dequantize_int8(q, s)
+        return q, s, corrected - deq
+
+    out = jax.tree.map(one, grads, error)
+    q = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    ne = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return q, s, ne
+
+
+def compressed_psum(grads: Any, error: Any, axis_name: str
+                    ) -> Tuple[Any, Any]:
+    """All-reduce-mean gradients over ``axis_name`` in int8 with error feedback.
+
+    Must be called inside shard_map/pmap with ``axis_name`` bound.  Returns
+    (mean_grads_f32, new_error).  Scales are all-gathered (tiny) so each pod
+    dequantizes every peer's payload exactly; the int8 tensors are the only
+    large payload on the wire.
+    """
+    n = jax.lax.psum(1, axis_name)
+    q, s, new_error = ef_compress(grads, error)
+
+    def reduce_one(qt, st):
+        all_q = jax.lax.all_gather(qt, axis_name)       # (pods, ...) int8
+        all_s = jax.lax.all_gather(st, axis_name)       # (pods,)
+        deq = all_q.astype(jnp.float32) * all_s.reshape(
+            (-1,) + (1,) * qt.ndim)
+        return deq.sum(axis=0) / n
+
+    mean = jax.tree.map(reduce_one, q, s)
+    return mean, new_error
+
+
+def ef_init(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

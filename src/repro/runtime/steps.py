@@ -1,0 +1,224 @@
+"""train_step / serve_step factories: pjit-sharded, donated, remat'd.
+
+``make_train_step``: CE loss (next-token) + MoE aux -> grads -> global-norm
+clip -> AdamW.  Params/opt-state donated; gradients reduce over the data axes
+implicitly via XLA SPMD (reduce-scatter + all-gather under FSDP).
+
+``make_serve_step``: one-token decode against a donated KV/state cache.  When
+``cfg.lsh_cache`` is on, the paper's technique runs in the serving path: the
+step also emits a W^2-LSH signature of each sequence's output distribution
+(softmax -> inverse CDF at QMC nodes -> Eq. 3 embedding -> p-stable hash),
+which the server uses for semantic dedup / similar-state lookup (launch/serve).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..core import montecarlo
+from ..models.model import ModelApi
+from ..optim import adamw
+from ..sharding import context as shctx
+from ..sharding import rules
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def cross_entropy(logits: Array, targets: Array) -> Array:
+    """Mean next-token CE.  logits: (B, S, V) predicting targets (B, S)."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def make_loss_fn(api: ModelApi, cfg: ArchConfig, aux_weight: float = 0.01,
+                 loss_chunks: int = 8):
+    """Chunked next-token CE.
+
+    Full (B, S, V) fp32 logits would be the largest tensor of the whole train
+    step (e.g. 33 GiB/device for llama3.2-3b at train_4k).  Instead the final
+    projection + softmax-CE run inside a remat'd scan over S-chunks: logits
+    only ever exist for S/loss_chunks positions, and the backward pass
+    recomputes them per chunk.
+    """
+    from ..models import common as mcommon
+
+    def loss_fn(params, batch):
+        hidden, aux = api.forward_hidden(params, batch)
+        ntok = batch["tokens"]
+        if cfg.modality == "vision":  # patch prefix positions carry no loss
+            hidden = hidden[:, -ntok.shape[1]:]
+        b, s, d = hidden.shape
+        # targets: next token; final position masked out
+        tgt = jnp.concatenate(
+            [ntok[:, 1:], jnp.zeros((b, 1), ntok.dtype)], axis=1)
+        wgt = jnp.concatenate(
+            [jnp.ones((b, s - 1), jnp.float32), jnp.zeros((b, 1), jnp.float32)],
+            axis=1)
+        nch = loss_chunks if s % loss_chunks == 0 else 1
+        hc = hidden.reshape(b, nch, s // nch, d).swapaxes(0, 1)
+        tc = tgt.reshape(b, nch, s // nch).swapaxes(0, 1)
+        wc = wgt.reshape(b, nch, s // nch).swapaxes(0, 1)
+
+        def chunk_ce(carry, xs):
+            hk, tk, wk = xs
+            lg = mcommon.logits(params["embed"], cfg, hk).astype(jnp.float32)
+            lse = jax.scipy.special.logsumexp(lg, axis=-1)
+            gold = jnp.take_along_axis(lg, tk[..., None], axis=-1)[..., 0]
+            return carry + ((lse - gold) * wk).sum(), None
+
+        from ..models.model import _scan  # unroll-aware (dry-run flop counting)
+        total, _ = _scan(jax.checkpoint(chunk_ce), jnp.zeros((), jnp.float32),
+                         (hc, tc, wc))
+        ce = total / jnp.maximum(wgt.sum(), 1.0)
+        return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# train_step
+# ---------------------------------------------------------------------------
+
+def make_train_step(api: ModelApi, cfg: ArchConfig, opt_cfg: adamw.OptConfig):
+    """Gradient-accumulated train step: cfg.grad_accum microbatches per
+    optimizer update (scan over microbatches -> activation residency divided
+    by grad_accum; the fp32 grad accumulator is sharded like the params)."""
+    loss_fn = make_loss_fn(api, cfg)
+    accum = max(1, cfg.grad_accum)
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            (loss, metrics), grads = grads_of(params, batch)
+        else:
+            # interleaved split (B -> (B/accum, accum) -> transpose): keeps
+            # every data shard contributing rows to EVERY microbatch; the
+            # blocked reshape would strand each microbatch on B/accum shards.
+            micro = jax.tree.map(
+                lambda x: x.reshape((x.shape[0] // accum, accum) + x.shape[1:])
+                .swapaxes(0, 1), batch)
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def mb(carry, mbatch):
+                gsum, lsum = carry
+                (l, m), g = grads_of(params, mbatch)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                    gsum, g)
+                return (gsum, lsum + l), m
+
+            from ..models.model import _scan
+            (gsum, lsum), ms = _scan(mb, (gzero, jnp.zeros((), jnp.float32)),
+                                     micro)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+            metrics = jax.tree.map(lambda m: m[-1], ms)
+        new_params, new_state, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        metrics = dict(metrics, loss=loss, **opt_metrics)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def shard_train_step(api: ModelApi, cfg: ArchConfig, opt_cfg: adamw.OptConfig,
+                     mesh: Mesh, shape: ShapeConfig, params_shape: Any,
+                     batch_shape: Any):
+    """jit the train step with explicit in/out shardings + donation."""
+    pspec = rules.param_specs(cfg, params_shape, mesh)
+    ospec = {"m": pspec, "v": pspec, "step": P()}
+    bspec = rules.batch_specs(cfg, batch_shape, mesh, shape.global_batch)
+    mspec = P()
+    shctx.set_mesh(mesh)   # enable in-model sharding constraints
+    step = make_train_step(api, cfg, opt_cfg)
+    return jax.jit(
+        step,
+        in_shardings=(rules.named(mesh, pspec), rules.named(mesh, ospec),
+                      rules.named(mesh, bspec)),
+        out_shardings=(rules.named(mesh, pspec), rules.named(mesh, ospec),
+                       None),
+        donate_argnums=(0, 1),
+    ), pspec, ospec, bspec
+
+
+# ---------------------------------------------------------------------------
+# serve_step (+ LSH semantic-cache signatures: the paper in the serving path)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LshServeParams:
+    """Static hashing state for the serving-path semantic cache."""
+    nodes: Array      # (N,) quantile levels (QMC)
+    volume: float
+    support: Array    # (V,) numeric support grid for the output distribution
+    alpha: Array      # (N, K) p-stable projections
+    b: Array          # (K,)
+    r: float
+
+    @classmethod
+    def create(cls, key: jax.Array, cfg: ArchConfig, n_embed: int = 64,
+               n_hashes: int = 16, r: float = 1.0) -> "LshServeParams":
+        from ..core import hashes, wasserstein
+        nodes, vol = wasserstein.icdf_nodes_qmc(n_embed)
+        fam = hashes.PStableHash.create(key, n_embed, n_hashes, r=r, p=2.0)
+        support = jnp.linspace(-1.0, 1.0, cfg.vocab_size)
+        return cls(nodes=nodes, volume=vol, support=support,
+                   alpha=fam.alpha, b=fam.b, r=r)
+
+
+def lsh_signature(lsh: LshServeParams, logits: Array) -> Array:
+    """W^2-LSH signature of the per-sequence output distribution.
+
+    logits: (B, 1, V) -> int32 (B, K).  This is Remark 1 end-to-end: treat the
+    softmax as a distribution over the numeric support, embed its inverse CDF
+    (Eq. 3) with the MC method, hash with the p-stable family.
+    """
+    from ..core import wasserstein
+    emb = wasserstein.w2_embedding_logits(
+        logits[:, 0, :], lsh.support, lsh.nodes, lsh.volume)   # (B, N)
+    proj = emb @ lsh.alpha / lsh.r + lsh.b
+    return jnp.floor(proj).astype(jnp.int32)
+
+
+def make_serve_step(api: ModelApi, cfg: ArchConfig,
+                    lsh: Optional[LshServeParams] = None):
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = api.decode_step(params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out = {"logits": logits, "next": next_tok}
+        if lsh is not None and cfg.lsh_cache:
+            out["lsh_sig"] = lsh_signature(lsh, logits)
+        return out, new_cache
+
+    return serve_step
+
+
+def shard_serve_step(api: ModelApi, cfg: ArchConfig, mesh: Mesh,
+                     shape: ShapeConfig, params_shape: Any, cache_shape: Any,
+                     lsh: Optional[LshServeParams] = None):
+    pspec = rules.param_specs(cfg, params_shape, mesh)
+    cspec = rules.cache_specs(cfg, cache_shape, mesh, shape.global_batch)
+    bx = rules.batch_axis(mesh, shape.global_batch)
+    shctx.set_mesh(mesh)   # enable in-model sharding constraints
+    step = make_serve_step(api, cfg, lsh)
+    return jax.jit(
+        step,
+        in_shardings=(rules.named(mesh, pspec), rules.named(mesh, cspec),
+                      NamedSharding(mesh, P(bx, None)), None),
+        out_shardings=(None, rules.named(mesh, cspec)),
+        donate_argnums=(1,),
+    ), pspec, cspec

@@ -1,0 +1,44 @@
+"""Ambient mesh context for in-model sharding constraints.
+
+Model code is mesh-agnostic; step factories (runtime/steps.py, launch/dryrun)
+register the mesh they are about to trace under so layers can pin GSPMD
+layouts (e.g. the MoE all-to-all pattern) with with_sharding_constraint.
+"""
+
+from __future__ import annotations
+
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+
+_MESH: Optional[jax.sharding.Mesh] = None
+
+
+def set_mesh(mesh: Optional[jax.sharding.Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[jax.sharding.Mesh]:
+    return _MESH
+
+
+@contextmanager
+def use_mesh(mesh: jax.sharding.Mesh):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        yield
+    finally:
+        _MESH = prev
+
+
+def constrain(x, spec: jax.sharding.PartitionSpec, axes=("model",)):
+    """with_sharding_constraint iff a registered mesh carries ``axes``."""
+    mesh = _MESH
+    if mesh is None or any(a not in mesh.axis_names for a in axes):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

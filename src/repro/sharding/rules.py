@@ -1,0 +1,205 @@
+"""Logical-axis sharding rules (MaxText-style) mapping every parameter /
+activation / cache tensor onto the (pod, data, model) mesh.
+
+Policies (DESIGN.md §6):
+* TP  -- heads / d_ff / experts / lru width sharded over 'model'.
+* DP  -- batch over ('pod', 'data') when divisible (falls back gracefully for
+         global_batch=1 decode).
+* FSDP/ZeRO-3 -- for cfg.fsdp_params archs, the d_model (or equivalent) axis of
+         each weight is additionally sharded over ('pod', 'data'); XLA SPMD
+         inserts the per-layer all-gather inside the scan (the FSDP prefetch
+         pattern) and reduce-scatters gradients.
+* SP  -- KV-cache *length* sharded over 'model' for decode shapes (GQA head
+         counts rarely divide a 16-way axis; sequence sharding always does).
+* Vocab -- token embedding sharded over 'model' on the vocab axis; logits come
+         out vocab-sharded, so the softmax/loss runs distributed.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+
+TP = "model"
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Data-parallel mesh axes: ('pod', 'data') on multi-pod, ('data',) else."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _divisible(n: int, mesh: Mesh, axes) -> bool:
+    if isinstance(axes, str):
+        axes = (axes,)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    return n % size == 0 and n >= size
+
+
+def batch_axis(mesh: Mesh, global_batch: int):
+    """Largest prefix of dp axes that divides the batch (None if batch=1)."""
+    axes = dp_axes(mesh)
+    while axes and not _divisible(global_batch, mesh, axes):
+        axes = axes[:-1]
+    return axes if axes else None
+
+
+def param_specs(cfg: ArchConfig, params: Any, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching a (stacked-layer) param pytree.
+
+    Stacked leaves carry a leading n_layers axis (never sharded -- scan walks
+    it).  Dispatch is by leaf path name.
+    """
+    fsdp = dp_axes(mesh) if cfg.fsdp_params else None
+
+    def spec_for(path, leaf) -> P:
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = names[-1] if names else ""
+        parent = names[-2] if len(names) > 1 else ""
+        shape = leaf.shape
+        stacked = any(n in ("layers", "groups", "tail", "enc", "dec")
+                      for n in names[:-1])
+        lead: Tuple = (None,) if stacked and len(shape) > 0 else ()
+
+        def pads(*rest):
+            return P(*(lead + rest))
+
+        # ---- embeddings ----
+        if name == "tok":
+            return P(TP, None) if _divisible(shape[0], mesh, TP) else P(None, TP)
+        if name == "out" and parent == "embed":
+            return P(None, TP)
+        # ---- norms / scalars / biases ----
+        core = shape[len(lead):]
+        if len(core) <= 1:
+            return pads(*((None,) * len(core)))
+        # ---- attention ----
+        # Query/output heads are config-padded to divide the TP axis (h_eff);
+        # never leaving heads unsharded matters: without it the whole
+        # quadratic attention replicates across TP (measured 6x FLOP
+        # inflation).  KV heads are usually < TP: keep those weights
+        # replicated on the head dim (tiny) -- the head-repeat gather in
+        # attention() re-establishes H-sharded compute.
+        if name in ("wq",):
+            return pads(fsdp, TP, None)
+        if name in ("wk", "wv"):
+            head_ax = TP if _divisible(core[1], mesh, TP) else None
+            return pads(fsdp, head_ax, None)
+        if name == "wo":
+            return pads(TP, None, fsdp)
+        # ---- FFN ----
+        if name in ("gate", "up"):
+            return pads(fsdp, TP)
+        if name == "down":
+            return pads(TP, fsdp)
+        # ---- MoE ----
+        if name == "router":
+            return pads(None, None)
+        if name in ("w_gate", "w_up"):
+            return pads(TP, fsdp, None)
+        if name == "w_down":
+            return pads(TP, None, fsdp)
+        # ---- mamba ----
+        if name == "in_proj":
+            return pads(fsdp, TP)
+        if name == "conv_w":
+            return pads(None, TP)
+        if name == "out_proj":
+            return pads(TP, fsdp)
+        # ---- rglru ----
+        if name in ("in_x", "in_gate"):
+            return pads(fsdp, TP)
+        if name in ("w_a", "w_i"):
+            return pads(TP, None)
+        if name == "out" and len(core) == 2:
+            return pads(TP, fsdp)
+        # ---- fallback: shard the biggest core dim over model if divisible ----
+        big = max(range(len(core)), key=lambda i: core[i])
+        if _divisible(core[big], mesh, TP):
+            spec = [None] * len(core)
+            spec[big] = TP
+            return pads(*spec)
+        return pads(*((None,) * len(core)))
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def batch_specs(cfg: ArchConfig, batch: Any, mesh: Mesh, global_batch: int) -> Any:
+    bx = batch_axis(mesh, global_batch)
+
+    def spec_for(leaf):
+        nd = leaf.ndim if hasattr(leaf, "ndim") else 0
+        if nd == 0:
+            return P()
+        return P(bx, *((None,) * (nd - 1)))
+
+    return jax.tree.map(spec_for, batch)
+
+
+def cache_specs(cfg: ArchConfig, cache: Any, mesh: Mesh, global_batch: int) -> Any:
+    """Decode-cache specs: stacked (L, B, T, KV, D) KV caches get batch over dp
+    and SP (length over 'model'); recurrent states shard their width."""
+    bx = batch_axis(mesh, global_batch)
+
+    def spec_for(path, leaf):
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        if name in ("k", "v", "ck", "cv"):
+            if len(shape) == 5:      # (L, B, T, KV, D)
+                t = shape[2]
+                sp = TP if _divisible(t, mesh, TP) else None
+                return P(None, bx, sp, None, None)
+            if len(shape) == 4:      # (B, T, KV, D) -- hybrid group-stacked adds L
+                t = shape[1]
+                sp = TP if _divisible(t, mesh, TP) else None
+                return P(bx, sp, None, None)
+        if name == "ssm":            # (L, B, H, P, N)
+            h = shape[2]
+            sp = TP if _divisible(h, mesh, TP) else None
+            return P(None, bx, sp, None, None)
+        if name == "conv":           # (L, B, K-1, C)
+            c = shape[-1]
+            sp = TP if _divisible(c, mesh, TP) else None
+            return P(None, bx, None, sp)
+        if name == "h":              # (L, B, lru)
+            c = shape[-1]
+            sp = TP if _divisible(c, mesh, TP) else None
+            return P(None, bx, sp)
+        # hybrid caches carry an extra leading groups axis; recurse by shape
+        if len(shape) >= 2:
+            return P(*( (None,) * len(shape) ))
+        return P()
+
+    # hybrid group caches: (G, B, ...) -- treat leading G like L above
+    def spec_for_hybrid(path, leaf):
+        names = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        if name in ("k", "v") and len(shape) == 5:
+            t = shape[2]
+            sp = TP if _divisible(t, mesh, TP) else None
+            return P(None, bx, sp, None, None)
+        if name == "conv" and len(shape) == 4:
+            c = shape[-1]
+            return P(None, bx, None, TP if _divisible(c, mesh, TP) else None)
+        if name == "h" and len(shape) == 3:
+            c = shape[-1]
+            return P(None, bx, TP if _divisible(c, mesh, TP) else None)
+        if name == "ssm" and len(shape) == 5:
+            h = shape[2]
+            return P(None, bx, TP if _divisible(h, mesh, TP) else None, None, None)
+        return P(*((None,) * len(shape)))
+
+    fn = spec_for_hybrid if cfg.family == "hybrid" else spec_for
+    return jax.tree_util.tree_map_with_path(fn, cache)
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

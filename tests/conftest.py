@@ -1,0 +1,13 @@
+import os
+
+# Tests must see ONE CPU device (the dry-run sets its own 512-device flag in
+# its own process).  Keep jax platform deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,116 @@
+"""Attention-path equivalences: flash (blockwise online-softmax) vs dense,
+RoPE / M-RoPE properties, local windows, head padding."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import common
+
+
+def _qkv(key, b, s, h, hd):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (b, s, h, hd)) * 0.5
+    k = jax.random.normal(ks[1], (b, s, h, hd)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, hd)) * 0.5
+    return q, k, v
+
+
+@pytest.mark.parametrize("window", [0, 512])
+def test_flash_matches_dense(rng_key, window):
+    """The blockwise kernel must reproduce dense masked softmax-attention."""
+    b, s, h, hd = 2, 2048, 4, 32
+    q, k, v = _qkv(rng_key, b, s, h, hd)
+    out_flash = common._flash_attention(q, k, v, window=window, block_k=512)
+    # dense reference
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = j <= i
+    if window > 0:
+        mask = mask & (j > i - window)
+    scores = jnp.where(mask, scores, common.NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    ref = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q.dtype), v)
+    np.testing.assert_allclose(np.asarray(out_flash), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_gradients_match_dense(rng_key):
+    """AD through the remat'd flash scan == AD through dense attention."""
+    b, s, h, hd = 1, 2048, 2, 16
+    q, k, v = _qkv(rng_key, b, s, h, hd)
+
+    def loss_flash(q_):
+        return common._flash_attention(q_, k, v, block_k=512).sum()
+
+    def loss_dense(q_):
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q_, k).astype(jnp.float32)
+        i = jnp.arange(s)[:, None]
+        j = jnp.arange(s)[None, :]
+        scores = jnp.where(j <= i, scores, common.NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(q_.dtype), v).sum()
+
+    g1 = jax.grad(loss_flash)(q)
+    g2 = jax.grad(loss_dense)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               atol=5e-4, rtol=5e-4)
+
+
+def test_attention_uses_flash_above_threshold(rng_key):
+    """End-to-end layer path at S >= FLASH_MIN_SEQ equals the dense-path
+    result computed at the same weights (same function, different kernel)."""
+    cfg = smoke_config("glm4-9b")
+    params = common.attn_init(rng_key, cfg)
+    s = common.FLASH_MIN_SEQ
+    x = jax.random.normal(jax.random.fold_in(rng_key, 1),
+                          (1, s, cfg.d_model)) * 0.1
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :]
+    cos, sin = common.rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+    out_flash = common.attention(params, cfg, x, cos, sin)
+    # force the dense path by lowering the module threshold
+    orig = common.FLASH_MIN_SEQ
+    try:
+        common.FLASH_MIN_SEQ = s + 1
+        out_dense = common.attention(params, cfg, x, cos, sin)
+    finally:
+        common.FLASH_MIN_SEQ = orig
+    np.testing.assert_allclose(np.asarray(out_flash), np.asarray(out_dense),
+                               atol=3e-5, rtol=3e-5)
+
+
+def test_rope_is_rotation(rng_key):
+    """RoPE preserves norms and relative-position inner products."""
+    hd = 64
+    x = jax.random.normal(rng_key, (1, 8, 2, hd))
+    pos = jnp.arange(8, dtype=jnp.int32)[None, :]
+    cos, sin = common.rope_angles(pos, hd, 10000.0)
+    y = common.apply_rope(x, cos, sin)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # relative property: <R_m q, R_n k> depends only on m - n
+    q = jax.random.normal(jax.random.fold_in(rng_key, 1), (hd,))
+    k = jax.random.normal(jax.random.fold_in(rng_key, 2), (hd,))
+    def ip(m, n):
+        p = jnp.asarray([[m, n]], jnp.int32)
+        c, s_ = common.rope_angles(p, hd, 10000.0)
+        qk = common.apply_rope(jnp.stack([q, k])[None, :, None, :], c, s_)
+        return float(jnp.dot(qk[0, 0, 0], qk[0, 1, 0]))
+    assert abs(ip(3, 5) - ip(10, 12)) < 1e-3
+
+
+def test_mrope_text_equals_rope(rng_key):
+    """For text (t = h = w positions), M-RoPE coincides with standard RoPE."""
+    hd = 128
+    pos = jnp.arange(16, dtype=jnp.int32)[None, :]
+    pos3 = jnp.broadcast_to(pos[None], (3, 1, 16))
+    c1, s1 = common.rope_angles(pos, hd, 1e6)
+    c2, s2 = common.rope_angles(pos3, hd, 1e6, (16, 24, 24))
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-6)

@@ -1,0 +1,88 @@
+"""Sec. 3.1: orthonormal-basis embeddings (isometry, truncation, DCT)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import basis, functional
+
+SET = dict(deadline=None, max_examples=15)
+
+
+def test_cheb_nodes_range():
+    x = basis.cheb_nodes(64, (0.0, 1.0))
+    assert float(x.min()) > 0.0 and float(x.max()) < 1.0
+
+
+def test_dct_matmul_matches_fft_dct(rng_key):
+    f = jax.random.normal(rng_key, (8, 96))
+    c_mm = basis.cheb_coeffs(f, use_matmul=True)
+    c_fft = basis.cheb_coeffs(f, use_matmul=False)
+    np.testing.assert_allclose(np.asarray(c_mm), np.asarray(c_fft),
+                               atol=2e-4, rtol=2e-4)
+
+
+@settings(**SET)
+@given(st.integers(0, 10_000))
+def test_cheb_lebesgue_isometry_sines(seed):
+    """||T(f) - T(g)|| ~= ||f - g||_{L^2([0,1])} (closed form for sines)."""
+    key = jax.random.PRNGKey(seed)
+    d = functional.random_sines(key, 2)
+    nodes = basis.cheb_nodes(96, (0.0, 1.0))
+    g = basis.cheb_l2_coeffs(functional.sine_values(d, nodes), (0.0, 1.0))
+    emb = float(jnp.linalg.norm(g[0] - g[1]))
+    true = float(functional.sine_l2_dist(d[0], d[1]))
+    assert abs(emb - true) < 5e-3 + 0.02 * true
+
+
+@settings(**SET)
+@given(st.integers(0, 10_000))
+def test_legendre_isometry_sines(seed):
+    key = jax.random.PRNGKey(seed)
+    d = functional.random_sines(key, 2)
+    nodes = basis.legendre_nodes(64, (0.0, 1.0), n_quad=128)
+    g = basis.legendre_l2_coeffs(functional.sine_values(d, nodes), (0.0, 1.0),
+                                 n_coeff=64)
+    emb = float(jnp.linalg.norm(g[0] - g[1]))
+    true = float(functional.sine_l2_dist(d[0], d[1]))
+    assert abs(emb - true) < 1e-3 + 0.01 * true
+
+
+def test_cheb_theta_isometry_exact_for_cosine_series(rng_key):
+    """Band-limited g(theta): the theta-mode embedding is an exact isometry."""
+    n = 64
+    j = jnp.arange(n)
+    theta = jnp.pi * (j + 0.5) / n
+    # g = 0.3 + 0.5 cos(theta) - 0.2 cos(3 theta)
+    g = 0.3 + 0.5 * jnp.cos(theta) - 0.2 * jnp.cos(3 * theta)
+    gamma = basis.cheb_l2_coeffs(g[None, :], (-1.0, 1.0), measure="theta")
+    norm_emb = float(jnp.linalg.norm(gamma))
+    true = float(jnp.sqrt(jnp.pi * (0.3 ** 2) + jnp.pi / 2 * (0.5 ** 2 + 0.2 ** 2)))
+    assert abs(norm_emb - true) < 1e-5
+
+
+def test_choose_nf_plateau():
+    c = jnp.asarray([[1.0, 0.5, 0.1, 1e-9, 1e-10, 0.0]])
+    nf = basis.choose_Nf(c, tol=1e-6)
+    assert int(nf[0]) == 3
+
+
+def test_truncate_pad_shapes():
+    c = jnp.ones((4, 10))
+    out = basis.truncate_pad(c, 6, 16)
+    assert out.shape == (4, 16)
+    assert float(out[:, 6:].sum()) == 0.0
+    out2 = basis.truncate_pad(c, 10, 8)
+    assert out2.shape == (4, 8)
+
+
+def test_parseval_norm(rng_key):
+    """||T(f)||_2 ~= ||f||_{L^2} for a smooth non-periodic function."""
+    f = lambda x: jnp.exp(x) * jnp.sin(3 * x)
+    nodes = basis.cheb_nodes(128, (0.0, 1.0))
+    g = basis.cheb_l2_coeffs(f(nodes)[None], (0.0, 1.0))
+    xs = np.linspace(0, 1, 40001)
+    ref = np.sqrt(np.trapezoid(np.asarray(f(jnp.asarray(xs))) ** 2, xs))
+    assert abs(float(jnp.linalg.norm(g)) - ref) < 2e-3 * ref + 1e-4

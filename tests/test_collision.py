@@ -1,0 +1,84 @@
+"""Collision-probability theory: Eq. 7/8 closed forms + Theorem 1 bounds."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import collision
+
+SET = dict(deadline=None, max_examples=50)
+
+
+def test_closed_forms_match_mc_estimator():
+    for p in (1.0, 2.0):
+        for c in (0.3, 0.7, 1.5, 4.0):
+            closed = float(collision.pstable_collision_prob(c, 1.0, p))
+            mc = float(collision._pstable_collision_prob_mc(c, 1.0, p))
+            assert abs(closed - mc) < 0.01, (p, c)
+
+
+@settings(**SET)
+@given(st.floats(0.05, 10.0))
+def test_p2_monotone_decreasing_in_c(c):
+    p1 = float(collision.pstable_collision_prob(c, 1.0, 2.0))
+    p2 = float(collision.pstable_collision_prob(c * 1.1, 1.0, 2.0))
+    assert p2 <= p1 + 1e-9
+    assert 0.0 <= p1 <= 1.0
+
+
+@settings(**SET)
+@given(st.floats(-1.0, 1.0))
+def test_simhash_prob_range(s):
+    p = float(collision.simhash_collision_prob(s))
+    assert 0.0 <= p <= 1.0
+    # s=1 -> always collide; s=-1 -> never
+    assert abs(float(collision.simhash_collision_prob(1.0)) - 1.0) < 1e-6
+    assert abs(float(collision.simhash_collision_prob(-1.0))) < 1e-6
+
+
+@settings(**SET)
+@given(st.floats(0.2, 5.0), st.floats(0.001, 0.15))
+def test_theorem1_bounds_order(c, eps_frac):
+    """lower <= P <= upper, and bounds shrink to P as eps -> 0 (Thm 1)."""
+    eps = eps_frac * c
+    P = float(collision.pstable_collision_prob(c, 1.0, 2.0))
+    lo, hi = collision.theorem1_bounds(c, 1.0, eps, 2.0)
+    lo, hi = float(lo), float(hi)
+    assert lo <= P + 1e-9 and P <= hi + 1e-9
+    lo2, hi2 = collision.theorem1_bounds(c, 1.0, eps / 10, 2.0)
+    assert float(hi2) - float(lo2) <= (hi - lo) + 1e-9
+    # O(eps/c) convergence of the bound width
+    assert (hi - lo) <= 3.0 * eps / c + 1e-9
+
+
+@settings(**SET)
+@given(st.floats(0.2, 5.0), st.floats(0.001, 0.1))
+def test_theorem1_corrected_bounds_contain_perturbed_probability(c, eps_frac):
+    """The true collision probability at any c' in [c-eps, c+eps] must lie
+    within the CORRECTED Theorem-1 bounds (the paper's lower bound drops a
+    boundary integral -- see collision.theorem1_bounds erratum note)."""
+    eps = eps_frac * c
+    lo, hi = collision.theorem1_bounds_corrected(c, 1.0, eps, 2.0)
+    for cp in (c - eps, c - eps / 2, c + eps / 2, c + eps):
+        p = float(collision.pstable_collision_prob(max(cp, 1e-6), 1.0, 2.0))
+        # 1e-4 slack: float32 rounding in the closed-form evaluation
+        assert float(lo) - 1e-4 <= p <= float(hi) + 1e-4
+
+
+@settings(**SET)
+@given(st.floats(0.2, 5.0), st.floats(0.001, 0.1))
+def test_theorem1_paper_bound_near_miss_is_second_order(c, eps_frac):
+    """The paper's (uncorrected) lower bound holds up to the dropped
+    O(eps^2) boundary term -- quantifies the erratum."""
+    eps = eps_frac * c
+    lo, _ = collision.theorem1_bounds(c, 1.0, eps, 2.0)
+    p = float(collision.pstable_collision_prob(c + eps, 1.0, 2.0))
+    slack = collision.fp_sup(2.0) * eps ** 2 / (2 * c * (c + eps) ** 2) + 1e-4
+    assert p >= float(lo) - slack
+
+
+def test_amplification():
+    p = jnp.asarray(0.7)
+    amp = float(collision.expected_collisions_k_l(p, 4, 8))
+    expect = 1 - (1 - 0.7 ** 4) ** 8
+    assert abs(amp - expect) < 1e-6

@@ -1,0 +1,102 @@
+"""LSH families: p-stable sampling, collision rates vs theory, lazy alpha,
+SimHash, ALSH."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import collision, hashes
+
+SET = dict(deadline=None, max_examples=10)
+
+
+def test_pstable_p2_is_normal(rng_key):
+    x = hashes.sample_pstable(rng_key, (20000,), 2.0)
+    assert abs(float(x.mean())) < 0.03
+    assert abs(float(x.std()) - 1.0) < 0.03
+
+
+def test_pstable_p1_is_cauchy(rng_key):
+    x = hashes.sample_pstable(rng_key, (20000,), 1.0)
+    # Cauchy: median 0, |quartiles| = 1
+    q1, q3 = np.percentile(np.asarray(x), [25, 75])
+    assert abs(q1 + 1.0) < 0.1 and abs(q3 - 1.0) < 0.1
+
+
+def test_pstable_general_p_stability(rng_key):
+    """Stability property: (X1 + X2) / 2^(1/p) has the same distribution."""
+    p = 1.5
+    k1, k2 = jax.random.split(rng_key)
+    x1 = hashes.sample_pstable(k1, (30000,), p)
+    x2 = hashes.sample_pstable(k2, (30000,), p)
+    combo = (x1 + x2) / (2.0 ** (1.0 / p))
+    qs = [10, 25, 50, 75, 90]
+    a = np.percentile(np.asarray(x1), qs)
+    b = np.percentile(np.asarray(combo), qs)
+    np.testing.assert_allclose(a, b, atol=0.12)
+
+
+@settings(**SET)
+@given(st.floats(0.3, 3.0), st.integers(0, 100))
+def test_collision_rate_matches_theory(c, seed):
+    """Observed collision frequency over 4096 hashes ~ Eq. 8 (p=2)."""
+    key = jax.random.PRNGKey(seed)
+    fam = hashes.PStableHash.create(key, 16, 4096, r=1.0, p=2.0)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (16,))
+    delta = jax.random.normal(jax.random.fold_in(key, 2), (16,))
+    y = x + delta / jnp.linalg.norm(delta) * c
+    obs = float((fam(x[None]) == fam(y[None])).mean())
+    theory = float(collision.pstable_collision_prob(c, 1.0, 2.0))
+    assert abs(obs - theory) < 0.035
+
+
+def test_lazy_coeffs_growth_invariance(rng_key):
+    """alpha[i] identical regardless of growth path (Algorithm 1 semantics)."""
+    a = hashes.LazyCoeffs(rng_key, 8)
+    b = hashes.LazyCoeffs(rng_key, 8)
+    a.ensure(1000)
+    for n in (10, 130, 600, 1000):
+        b.ensure(n)
+    np.testing.assert_array_equal(np.asarray(a.alpha(1000)),
+                                  np.asarray(b.alpha(1000)))
+
+
+def test_lazy_hash_nf_sparsity(rng_key):
+    """Remark 2: hash of gamma with N_f coords == hash of zero-padded gamma."""
+    lz = hashes.LazyPStableHash.create(rng_key, 32)
+    g = jax.random.normal(jax.random.fold_in(rng_key, 1), (40,))
+    h_short = lz(g)
+    h_padded = lz(jnp.concatenate([g, jnp.zeros(200)]))
+    np.testing.assert_array_equal(np.asarray(h_short), np.asarray(h_padded))
+
+
+def test_simhash_pack_and_hamming(rng_key):
+    sh = hashes.SimHash.create(rng_key, 32, 256)
+    x = jax.random.normal(jax.random.fold_in(rng_key, 1), (4, 32))
+    sig = sh(x)
+    assert sig.shape == (4, 8)
+    assert int(hashes.SimHash.hamming(sig[0], sig[0])) == 0
+    # hamming/K estimates the angle
+    ham = hashes.SimHash.hamming(sig[0], sig[1])
+    cos_est = np.cos(np.pi * float(ham) / 256)
+    true = float(jnp.dot(x[0], x[1])
+                 / (jnp.linalg.norm(x[0]) * jnp.linalg.norm(x[1])))
+    assert abs(cos_est - true) < 0.25
+
+
+def test_alsh_mips_ranking(rng_key):
+    """ALSH signatures rank the max-inner-product item above a random item."""
+    k1, k2 = jax.random.split(rng_key)
+    db = jax.random.normal(k1, (256, 32))
+    q = jax.random.normal(k2, (32,))
+    ips = db @ q
+    best = int(jnp.argmax(ips))
+    al = hashes.ALSH.create(jax.random.fold_in(rng_key, 3), 32, 1024,
+                            variant="sign")
+    db_sig = al.hash_db(db)
+    q_sig = al.hash_query(q[None])[0]
+    ham = np.asarray(jax.vmap(lambda s: hashes.SimHash.hamming(s, q_sig))(db_sig))
+    # the true MIPS answer should be in the best decile by signature distance
+    rank = (ham < ham[best]).sum()
+    assert rank < 26

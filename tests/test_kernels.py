@@ -1,0 +1,68 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import basis
+from repro.kernels import ops, ref
+
+SHAPES_MM = [(8, 16, 32), (100, 64, 128), (256, 150, 300), (33, 200, 65)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("b,n,k", SHAPES_MM)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_hash_mm_sweep(rng_key, b, n, k, dtype):
+    x = jax.random.normal(jax.random.fold_in(rng_key, 1), (b, n), dtype)
+    a = jax.random.normal(jax.random.fold_in(rng_key, 2), (n, k), dtype)
+    bb = jax.random.uniform(jax.random.fold_in(rng_key, 3), (k,), jnp.float32)
+    out = ops.pstable_hash(x, a, bb, 1.0, use_kernel=True)
+    expect = ref.hash_mm_ref(x, a, bb, 1.0)
+    # floor() at bin boundaries can differ by 1 ulp between paths in bf16
+    diff = np.abs(np.asarray(out) - np.asarray(expect))
+    assert (diff <= 1).all() and (diff > 0).mean() < 0.01
+
+
+@pytest.mark.parametrize("b,n,k", [(8, 16, 32), (64, 100, 256), (130, 64, 96)])
+def test_simhash_pack_sweep(rng_key, b, n, k):
+    x = jax.random.normal(jax.random.fold_in(rng_key, 1), (b, n))
+    a = jax.random.normal(jax.random.fold_in(rng_key, 2), (n, k))
+    out = ops.simhash_signature(x, a, use_kernel=True)
+    expect = ref.simhash_pack_ref(x, a)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+@pytest.mark.parametrize("b,n", [(4, 32), (64, 96), (100, 129)])
+def test_dct_mm_sweep(rng_key, b, n):
+    f = jax.random.normal(rng_key, (b, n))
+    dt = basis.dct2_matrix(n).T
+    scale = jnp.concatenate([jnp.full((1,), 0.5 / n), jnp.full((n - 1,), 1.0 / n)])
+    out = ops.cheb_embed(f, dt, scale, use_kernel=True)
+    expect = ref.dct_mm_ref(f, dt, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("b,c,n", [(4, 16, 32), (20, 70, 64), (9, 200, 100)])
+@pytest.mark.parametrize("p", [1.0, 2.0])
+def test_rerank_sweep(rng_key, b, c, n, p):
+    q = jax.random.normal(jax.random.fold_in(rng_key, 1), (b, n))
+    emb = jax.random.normal(jax.random.fold_in(rng_key, 2), (b, c, n))
+    ids = jax.random.randint(jax.random.fold_in(rng_key, 3), (b, c), -1, 50)
+    out = ops.candidate_distances(q, emb, ids, p=p, use_kernel=True)
+    expect = ref.rerank_ref(q, emb, ids, p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_kernel_matches_core_hash_family(rng_key):
+    """ops.pstable_hash == core.hashes.PStableHash for the same params."""
+    from repro.core import hashes
+    fam = hashes.PStableHash.create(rng_key, 64, 128, r=0.7)
+    x = jax.random.normal(jax.random.fold_in(rng_key, 5), (32, 64))
+    h1 = fam(x)
+    h2 = ops.pstable_hash(x, fam.alpha, fam.b, 0.7, use_kernel=True)
+    diff = np.abs(np.asarray(h1) - np.asarray(h2))
+    assert (diff <= 1).all() and (diff > 0).mean() < 0.01

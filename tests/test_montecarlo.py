@@ -1,0 +1,96 @@
+"""Sec. 3.2: MC/QMC embeddings -- samplers and error rates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import functional, montecarlo, wasserstein
+
+SET = dict(deadline=None, max_examples=10)
+
+
+def test_sobol_first_points_dim1():
+    """Dimension 1 is the base-2 van der Corput sequence."""
+    pts = montecarlo.sobol(8, 1)[:, 0]
+    expect = np.array([0.0, 0.5, 0.75, 0.25, 0.375, 0.875, 0.625, 0.125])
+    np.testing.assert_allclose(pts, expect, atol=1e-12)
+
+
+def test_sobol_ranges_and_uniqueness():
+    pts = montecarlo.sobol(512, 5)
+    assert pts.shape == (512, 5)
+    assert pts.min() >= 0.0 and pts.max() < 1.0
+    # low discrepancy: each dim's mean close to 1/2 (much closer than MC)
+    np.testing.assert_allclose(pts.mean(axis=0), 0.5, atol=0.01)
+
+
+def test_sobol_balance_powers_of_two():
+    """Every aligned power-of-two block is balanced across [0,1/2)/[1/2,1)."""
+    pts = montecarlo.sobol(256, 3)
+    for d in range(3):
+        assert abs((pts[:, d] < 0.5).mean() - 0.5) < 1e-9
+
+
+def test_halton_low_discrepancy():
+    pts = montecarlo.halton(512, 3)
+    np.testing.assert_allclose(pts.mean(axis=0), 0.5, atol=0.02)
+
+
+def test_mc_embedding_norm_scaling():
+    f = jnp.ones((1, 100))
+    emb = montecarlo.mc_embedding(f, volume=2.0, p=2.0)
+    # ||T(1)||_2 = sqrt(V) for the constant function
+    np.testing.assert_allclose(float(jnp.linalg.norm(emb)), np.sqrt(2.0),
+                               rtol=1e-6)
+
+
+@settings(**SET)
+@given(st.integers(0, 1000))
+def test_mc_distance_estimate_sines(seed):
+    key = jax.random.PRNGKey(seed)
+    d = functional.random_sines(key, 2)
+    nodes = montecarlo.mc_nodes(jax.random.fold_in(key, 1), 2048, 1)[:, 0]
+    emb = montecarlo.mc_embedding(functional.sine_values(d, nodes), 1.0)
+    est = float(jnp.linalg.norm(emb[0] - emb[1]))
+    true = float(functional.sine_l2_dist(d[0], d[1]))
+    assert abs(est - true) < 0.1  # O(1/sqrt(2048)) scale
+
+
+def test_mc_error_decreases_with_n(rng_key):
+    """Monotone-ish O(N^-1/2): error at N=4096 < error at N=64 (averaged)."""
+    mu1, s1 = functional.random_gaussians(jax.random.fold_in(rng_key, 1), 32)
+    mu2, s2 = functional.random_gaussians(jax.random.fold_in(rng_key, 2), 32)
+    ref_nodes, vol = wasserstein.icdf_nodes_qmc(1 << 14)
+    r1 = wasserstein.w2_embedding_gaussian(mu1, s1, ref_nodes, vol, "mc")
+    r2 = wasserstein.w2_embedding_gaussian(mu2, s2, ref_nodes, vol, "mc")
+    true = np.linalg.norm(np.asarray(r1 - r2), axis=-1)
+
+    def err(n, salt):
+        nodes, _ = wasserstein.icdf_nodes_mc(jax.random.fold_in(rng_key, salt), n)
+        e1 = wasserstein.w2_embedding_gaussian(mu1, s1, nodes, vol, "mc")
+        e2 = wasserstein.w2_embedding_gaussian(mu2, s2, nodes, vol, "mc")
+        return np.mean(np.abs(np.linalg.norm(np.asarray(e1 - e2), axis=-1) - true))
+
+    e_small = np.mean([err(64, 10 + i) for i in range(3)])
+    e_big = np.mean([err(4096, 20 + i) for i in range(3)])
+    assert e_big < e_small
+
+
+def test_qmc_beats_mc(rng_key):
+    mu1, s1 = functional.random_gaussians(jax.random.fold_in(rng_key, 1), 32)
+    mu2, s2 = functional.random_gaussians(jax.random.fold_in(rng_key, 2), 32)
+    ref_nodes, vol = wasserstein.icdf_nodes_qmc(1 << 14)
+    r1 = wasserstein.w2_embedding_gaussian(mu1, s1, ref_nodes, vol, "mc")
+    r2 = wasserstein.w2_embedding_gaussian(mu2, s2, ref_nodes, vol, "mc")
+    true = np.linalg.norm(np.asarray(r1 - r2), axis=-1)
+    n = 256
+    qn, _ = wasserstein.icdf_nodes_qmc(n)
+    q1 = wasserstein.w2_embedding_gaussian(mu1, s1, qn, vol, "mc")
+    q2 = wasserstein.w2_embedding_gaussian(mu2, s2, qn, vol, "mc")
+    err_q = np.mean(np.abs(np.linalg.norm(np.asarray(q1 - q2), axis=-1) - true))
+    mn, _ = wasserstein.icdf_nodes_mc(jax.random.fold_in(rng_key, 3), n)
+    m1 = wasserstein.w2_embedding_gaussian(mu1, s1, mn, vol, "mc")
+    m2 = wasserstein.w2_embedding_gaussian(mu2, s2, mn, vol, "mc")
+    err_m = np.mean(np.abs(np.linalg.norm(np.asarray(m1 - m2), axis=-1) - true))
+    assert err_q < err_m

@@ -1,0 +1,145 @@
+"""End-to-end behaviour tests for the paper's system: the full pipeline from
+functions to hashes to index to retrieval, plus the serving-path LSH cache."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core import (basis, collision, functional, hashes, index as lidx,
+                        montecarlo, wasserstein)
+from repro.models import get_model
+from repro.runtime import steps as rt
+
+
+def test_end_to_end_function_similarity_search(rng_key):
+    """Paper pipeline: sample functions -> embed (both methods) -> hash ->
+    index -> retrieve nearest function; observed collision rates track Eq. 8."""
+    n_db, n_dims = 512, 64
+    d_db = functional.random_sines(jax.random.fold_in(rng_key, 1), n_db)
+    d_q = functional.random_sines(jax.random.fold_in(rng_key, 2), 8)
+
+    nodes = basis.cheb_nodes(n_dims, (0.0, 1.0))
+    db = basis.cheb_l2_coeffs(functional.sine_values(d_db, nodes), (0.0, 1.0))
+    q = basis.cheb_l2_coeffs(functional.sine_values(d_q, nodes), (0.0, 1.0))
+
+    cfg = lidx.IndexConfig(n_dims=n_dims, n_tables=16, n_hashes=4,
+                           log2_buckets=9, bucket_capacity=64, r=0.5)
+    state = lidx.create_index(jax.random.fold_in(rng_key, 3), cfg, n_db)
+    state = lidx.build_index(state, cfg, db)
+    ids, dists = lidx.query_index(state, cfg, q, 1, n_probes=4)
+
+    # the retrieved function should be among the truly closest few in phase
+    true_d = functional.sine_l2_dist(d_q[:, None], d_db[None, :])
+    best = jnp.min(true_d, axis=1)
+    got = true_d[jnp.arange(8), jnp.clip(ids[:, 0], 0, n_db - 1)]
+    assert float(((got - best) < 0.2).mean()) > 0.7
+
+
+def test_collision_rate_theory_end_to_end(rng_key):
+    """Single pair, 4096 hashes: |observed - Eq.8| small for BOTH embeddings."""
+    d = functional.random_sines(rng_key, 2)
+    true_c = float(functional.sine_l2_dist(d[0], d[1]))
+    fam = hashes.PStableHash.create(jax.random.fold_in(rng_key, 1), 64, 4096,
+                                    r=1.0)
+    nodes = basis.cheb_nodes(64, (0.0, 1.0))
+    e = basis.cheb_l2_coeffs(functional.sine_values(d, nodes), (0.0, 1.0))
+    obs_b = float((fam(e[0:1]) == fam(e[1:2])).mean())
+    mn = montecarlo.qmc_nodes(64, 1, (0.0, 1.0))[:, 0]
+    m = montecarlo.mc_embedding(functional.sine_values(d, mn), 1.0)
+    obs_m = float((fam(m[0:1]) == fam(m[1:2])).mean())
+    theory = float(collision.pstable_collision_prob(max(true_c, 1e-6), 1.0, 2.0))
+    assert abs(obs_b - theory) < 0.05
+    assert abs(obs_m - theory) < 0.05
+
+
+def test_serving_lsh_cache_detects_similar_states(rng_key):
+    """serve_step emits W2-LSH signatures; similar output distributions
+    collide more often than dissimilar ones."""
+    cfg = smoke_config("llama3.2-3b")
+    api = get_model(cfg)
+    params = api.init(rng_key)
+    lsh = rt.LshServeParams.create(jax.random.fold_in(rng_key, 1), cfg,
+                                   n_hashes=64, r=0.2)
+    serve = jax.jit(rt.make_serve_step(api, cfg, lsh))
+    cache = api.init_cache(4, 16)
+    toks = jnp.asarray([[1], [1], [7], [300]], jnp.int32)
+    out, cache = serve(params, cache, toks, jnp.int32(0))
+    sig = out["lsh_sig"]
+    same = float((sig[0] == sig[1]).mean())    # identical inputs
+    diff = float((sig[0] == sig[3]).mean())    # different inputs
+    assert same == 1.0
+    assert diff <= same
+
+
+def test_theorem1_brackets_observed_rates(rng_key):
+    """Observed collision rate lies within Theorem-1 bounds computed from the
+    actual embedding error eps."""
+    d = functional.random_sines(rng_key, 2)
+    true_c = float(functional.sine_l2_dist(d[0], d[1]))
+    n = 48
+    nodes = basis.cheb_nodes(n, (0.0, 1.0))
+    e = basis.cheb_l2_coeffs(functional.sine_values(d, nodes), (0.0, 1.0))
+    emb_c = float(jnp.linalg.norm(e[0] - e[1]))
+    eps = abs(emb_c - true_c) + 0.02  # measured embedding error + slack
+    fam = hashes.PStableHash.create(jax.random.fold_in(rng_key, 1), n, 8192,
+                                    r=1.0)
+    obs = float((fam(e[0:1]) == fam(e[1:2])).mean())
+    lo, hi = collision.theorem1_bounds(max(true_c, 0.05), 1.0, eps, 2.0)
+    noise = 3 * np.sqrt(0.25 / 8192)
+    assert float(lo) - noise <= obs <= float(hi) + noise
+
+
+def test_kl_divergence_as_mips(rng_key):
+    """Paper Sec. 5: KL-divergence similarity search re-expressed as MIPS.
+
+    D_KL(p || q) = <p, log p> - <p, log q>, so argmin_q D_KL(p || q) =
+    argmax_q <p, log q>_{L^2}.  The MC embedding preserves inner products
+    (Sec. 3.2), so ALSH over T(log q) solves function-space KL search."""
+    import numpy as np
+    n_db, n_nodes = 256, 128
+    key = rng_key
+    # database of 1-D Gaussian densities on [-3, 3]
+    mu, sig = functional.random_gaussians(jax.random.fold_in(key, 1), n_db)
+    sig = sig * 0.5 + 0.5                       # keep densities well-behaved
+    nodes = montecarlo.qmc_nodes(n_nodes, 1, (-3.0, 3.0))[:, 0]
+    vol = 6.0
+
+    def density(m, s):
+        return jnp.exp(-((nodes - m[:, None]) ** 2) / (2 * s[:, None] ** 2)) \
+            / (s[:, None] * jnp.sqrt(2 * jnp.pi))
+
+    q_dens = density(mu, sig)                   # (n_db, nodes)
+    log_q = montecarlo.mc_embedding(jnp.log(q_dens + 1e-12), vol)
+    # centering by the database mean is ranking-invariant for fixed p
+    # (<p, log q - m> = <p, log q> - const) and removes the shared log-tail
+    # component that otherwise dominates every inner product.
+    log_q = log_q - log_q.mean(axis=0, keepdims=True)
+    qm, qs = mu[7], sig[7]
+    p_dens = density(qm[None], qs[None])[0]
+    p_emb = montecarlo.mc_embedding(p_dens, vol)
+
+    # exact KL via quadrature (oracle)
+    kl = jnp.sum(p_dens[None, :] * (jnp.log(p_dens + 1e-12)[None, :]
+                                    - jnp.log(q_dens + 1e-12)),
+                 axis=-1) * (vol / n_nodes)
+    best = int(jnp.argmin(kl))
+    assert best == 7  # self-match sanity
+
+    # embedding-level MIPS is exact: argmax <T(p), T(log q)> == argmin KL
+    ips = log_q @ p_emb
+    assert int(jnp.argmax(ips)) == best
+
+    # MIPS via ALSH signatures over the embedded log-densities (4096 bits:
+    # sign-ALSH is norm-sensitive and these embeddings span a 30x norm range)
+    al = hashes.ALSH.create(jax.random.fold_in(key, 2), n_nodes, 4096,
+                            variant="sign")
+    db_sig = al.hash_db(log_q)
+    q_sig = al.hash_query(p_emb[None])[0]
+    ham = np.asarray(jax.vmap(
+        lambda s_: hashes.SimHash.hamming(s_, q_sig))(db_sig))
+    # the true KL-minimizer must rank in the top decile by signature distance
+    rank = int((ham < ham[best]).sum())
+    assert rank < n_db // 10, rank

@@ -1,0 +1,79 @@
+"""1-D Wasserstein: closed forms, empirical quantiles, embeddings (Eq. 3)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import functional, wasserstein
+
+SET = dict(deadline=None, max_examples=10)
+
+
+def test_gaussian_w2_closed_form():
+    assert float(wasserstein.gaussian_w2(0.0, 1.0, 0.0, 1.0)) == 0.0
+    assert abs(float(wasserstein.gaussian_w2(0.0, 1.0, 3.0, 1.0)) - 3.0) < 1e-6
+    assert abs(float(wasserstein.gaussian_w2(0.0, 1.0, 0.0, 2.0)) - 1.0) < 1e-6
+
+
+@settings(**SET)
+@given(st.integers(0, 1000))
+def test_embedding_distance_matches_closed_form(seed):
+    """MC embedding of inverse CDFs: ||T(F^-1)-T(G^-1)|| ~ W2 (clipped)."""
+    key = jax.random.PRNGKey(seed)
+    mu, s = functional.random_gaussians(key, 2)
+    nodes, vol = wasserstein.icdf_nodes_qmc(2048)
+    emb = wasserstein.w2_embedding_gaussian(mu, s, nodes, vol, "mc")
+    est = float(jnp.linalg.norm(emb[0] - emb[1]))
+    true = float(wasserstein.gaussian_w2(mu[0], s[0], mu[1], s[1]))
+    # clipping the tails loses a little mass; tolerance reflects that
+    assert abs(est - true) < 0.03 + 0.05 * true
+
+
+@settings(**SET)
+@given(st.integers(0, 1000))
+def test_empirical_exact_w2_vs_closed_form(seed):
+    key = jax.random.PRNGKey(seed)
+    mu, s = functional.random_gaussians(key, 2)
+    k1, k2 = jax.random.split(jax.random.fold_in(key, 1))
+    sf = mu[0] + s[0] * jax.random.normal(k1, (8000,))
+    sg = mu[1] + s[1] * jax.random.normal(k2, (6000,))
+    est = float(wasserstein.wasserstein_1d_exact(sf, sg, 2.0))
+    true = float(wasserstein.gaussian_w2(mu[0], s[0], mu[1], s[1]))
+    assert abs(est - true) < 0.08 + 0.1 * true
+
+
+def test_empirical_exact_handles_unequal_sample_counts():
+    a = jnp.asarray([0.0, 1.0])
+    b = jnp.asarray([0.0, 1.0, 2.0])
+    # W1 between empiricals: integrate |F^-1 - G^-1|
+    d = float(wasserstein.wasserstein_1d_exact(a, b, 1.0))
+    # breakpoints: F^-1 = 0 on [0,.5), 1 on [.5,1); G^-1 = 0,[0,1/3) 1,[1/3,2/3) 2 [2/3,1)
+    # |diff|: [0,1/3):0, [1/3,1/2):1, [1/2,2/3):0, [2/3,1):1 -> 1/6+1/3 = 1/2
+    assert abs(d - 0.5) < 1e-6
+
+
+def test_empirical_icdf_step():
+    s = jnp.asarray([3.0, 1.0, 2.0])
+    u = jnp.asarray([0.1, 0.4, 0.9])
+    out = wasserstein.empirical_icdf(s, u)
+    np.testing.assert_allclose(np.asarray(out), [1.0, 2.0, 3.0])
+
+
+def test_w2_embedding_logits_orders_distributions():
+    """Sharper-vs-shifted categorical distributions: embedding distance
+    correlates with distribution difference."""
+    v = 101
+    support = jnp.linspace(-1, 1, v)
+    base = -((support - 0.0) ** 2) * 20
+    near = -((support - 0.1) ** 2) * 20
+    far = -((support - 0.8) ** 2) * 20
+    nodes, vol = wasserstein.icdf_nodes_qmc(64)
+    embs = wasserstein.w2_embedding_logits(
+        jnp.stack([base, near, far]), support, nodes, vol)
+    d_near = float(jnp.linalg.norm(embs[0] - embs[1]))
+    d_far = float(jnp.linalg.norm(embs[0] - embs[2]))
+    assert d_near < d_far
+    # and the distances approximate the mean shifts
+    assert abs(d_near - 0.1) < 0.05
+    assert abs(d_far - 0.8) < 0.1
