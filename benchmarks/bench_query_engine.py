@@ -1,0 +1,84 @@
+"""Query-engine benchmark: jnp-reference vs fused-kernel re-rank tail.
+
+Sweeps database size and times ``query_index`` end to end (hash -> probe ->
+gather -> dedup -> re-rank -> top-k) on both backends:
+
+* ``reference`` -- HBM gather of the (nq, C, N) candidate tensor + jnp
+  re-rank + ``lax.top_k`` (the CPU production path);
+* ``fused``     -- kernels/fused_query, compiled on TPU, Pallas-interpret
+  elsewhere.  Interpret-mode timings measure *correctness cost only*; the
+  HBM-traffic win this kernel exists for shows up on real TPUs (see
+  EXPERIMENTS.md for the roofline expectations).
+
+Also asserts id-level parity between the two paths per size, so the perf
+trajectory in BENCH_results.json is always a trajectory of *correct*
+kernels.  REPRO_BENCH_SMOKE=1 shrinks the sweep for CI.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import index as lidx
+
+from .common import time_us, write_csv
+
+DB_SIZES = (4096, 8192, 16384, 32768, 65536)
+SMOKE_SIZES = (512, 1024)
+N_Q = 16
+N_DIMS = 64
+K = 10
+N_PROBES = 2
+
+
+def _sizes():
+    return SMOKE_SIZES if smoke_mode() else DB_SIZES
+
+
+def smoke_mode() -> bool:
+    """REPRO_BENCH_SMOKE=0/false/empty means OFF, anything else ON."""
+    return os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0", "false")
+
+
+def run(seed: int = 0, out_csv: str = "experiments/query_engine.csv"):
+    key = jax.random.PRNGKey(seed)
+    fused_backend = "fused" if jax.default_backend() == "tpu" else "interpret"
+    rows, results = [], {}
+    for n_db in _sizes():
+        cfg = lidx.IndexConfig(n_dims=N_DIMS, n_tables=4, n_hashes=4,
+                               log2_buckets=12, bucket_capacity=16, r=4.0)
+        db = jax.random.normal(jax.random.fold_in(key, n_db), (n_db, N_DIMS))
+        state = lidx.create_index(jax.random.fold_in(key, n_db + 1), cfg, n_db)
+        state = lidx.build_index(state, cfg, db)
+        q = jax.random.normal(jax.random.fold_in(key, n_db + 2), (N_Q, N_DIMS))
+
+        ref_fn = jax.jit(lambda s, qq: lidx.query_index(
+            s, cfg, qq, K, n_probes=N_PROBES, backend="reference"))
+        fused_fn = jax.jit(lambda s, qq: lidx.query_index(
+            s, cfg, qq, K, n_probes=N_PROBES, backend=fused_backend))
+
+        ids_ref, _ = ref_fn(state, q)
+        ids_fused, _ = fused_fn(state, q)
+        parity = bool((np.asarray(ids_ref) == np.asarray(ids_fused)).all())
+        if not parity:
+            raise AssertionError(
+                f"fused/{fused_backend} ids diverge from reference at "
+                f"n_db={n_db} -- timing a broken kernel is meaningless")
+
+        us_ref = time_us(ref_fn, state, q, iters=5, warmup=1)
+        us_fused = time_us(fused_fn, state, q, iters=2, warmup=1)
+        rows.append((n_db, us_ref, us_fused, fused_backend, parity))
+        results[f"db{n_db}_us_reference"] = round(us_ref, 1)
+        results[f"db{n_db}_us_fused_{fused_backend}"] = round(us_fused, 1)
+        results[f"db{n_db}_ids_parity"] = parity
+    write_csv(out_csv, "n_db,us_reference,us_fused,fused_backend,ids_parity",
+              rows)
+    return results
+
+
+if __name__ == "__main__":
+    print(run())

@@ -1,11 +1,21 @@
 """Benchmark aggregator: one benchmark per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call where timing makes
-sense, else blank; ``derived`` is the figure's summary statistic)."""
+sense, else blank; ``derived`` is the figure's summary statistic) and writes
+every benchmark's metric dict to ``BENCH_results.json`` so the perf
+trajectory is machine-readable across PRs.
+
+``--smoke`` (or REPRO_BENCH_SMOKE=1) shrinks the expensive sweeps for CI.
+"""
 
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
+
+RESULTS_JSON = "BENCH_results.json"
 
 
 def _run(name, fn):
@@ -15,9 +25,13 @@ def _run(name, fn):
     return name, us, res
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if "--smoke" in argv:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+
     from . import (bench_cosine, bench_embed_error, bench_hash_throughput,
-                   bench_index, bench_l2, bench_w2)
+                   bench_index, bench_l2, bench_query_engine, bench_w2)
 
     print("name,us_per_call,derived")
     jobs = [
@@ -27,14 +41,29 @@ def main() -> None:
         ("sec3.2_embed_error", bench_embed_error.run),
         ("index_recall_speedup", bench_index.run),
         ("hash_throughput", bench_hash_throughput.run),
+        ("query_engine", bench_query_engine.run),
     ]
+    all_results = {}
     for name, fn in jobs:
         try:
             n, us, res = _run(name, fn)
             for k, v in res.items():
                 print(f"{n}/{k},{us:.0f},{v}")
+            all_results[name] = {"us_total": round(us), **res}
         except Exception as e:  # keep the harness running; report the failure
             print(f"{name},,ERROR:{type(e).__name__}:{e}")
+            all_results[name] = {"error": f"{type(e).__name__}: {e}"}
+
+    import jax
+
+    from .bench_query_engine import smoke_mode
+    all_results["_meta"] = {
+        "backend": jax.default_backend(),
+        "smoke": smoke_mode(),
+    }
+    with open(RESULTS_JSON, "w") as f:
+        json.dump(all_results, f, indent=2, sort_keys=True)
+    print(f"# wrote {RESULTS_JSON}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -11,24 +11,42 @@ Design (TPU adaptation of the classical pointer-based LSH table):
   single-coordinate +-1 perturbations ranked by boundary distance, computed
   from the pre-floor projections -- vectorized, no per-probe control flow.
 * Query = gather candidate ids from probed buckets -> dedup -> exact re-rank
-  against the stored embeddings -> top-k.  Re-rank is a blocked distance
-  computation (see kernels/rerank).
+  against the stored embeddings -> top-k.
+
+Kernel dispatch: hashing goes through kernels/ops.pstable_hash{,_proj}
+(hash_mm on TPU) and the re-rank/top-k tail goes through
+ops.fused_query_topk (kernels/fused_query on TPU: candidate rows are
+gathered HBM->VMEM by a scalar-prefetch index map, so the (nq, C, N)
+candidate tensor never exists in HBM).  On CPU both default to the jnp
+reference; pass ``backend="interpret"`` (or set REPRO_QUERY_BACKEND) to
+run the fused kernel under the Pallas interpreter for validation.
+
+Hashing is deliberately NOT switchable per call: build- and query-time
+bucket ids must match bitwise, so both sides use the process-constant
+``dispatch.hash_backend()`` implementation.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import dispatch, ops
 from .hashes import PStableHash
 
 Array = jax.Array
 
 GOLDEN = np.uint32(0x9E3779B1)
+
+# Above this many scatter-table elements (nq * n_items) the exact dedup
+# falls back to the O(C log C) sort: the first-seen table costs
+# nq * n_items * 4 bytes of HBM (2**26 elements = 256 MB).
+DEDUP_SCATTER_MAX_ELEMS = 1 << 26
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,10 +111,11 @@ def create_index(key: jax.Array, cfg: IndexConfig, n_items_cap: int) -> LSHIndex
 
 def _hashes_and_proj(state: LSHIndexState, cfg: IndexConfig, x: Array
                      ) -> Tuple[Array, Array]:
-    """(..., L, K) int32 hashes and pre-floor projections."""
-    proj = x @ state.alpha.astype(x.dtype) / cfg.r + state.b.astype(x.dtype)
-    proj = proj.reshape(x.shape[:-1] + (cfg.n_tables, cfg.n_hashes))
-    return jnp.floor(proj).astype(jnp.int32), proj
+    """(..., L, K) int32 hashes and pre-floor projections (kernel-dispatched)."""
+    h, proj = ops.pstable_hash_proj(x, state.alpha, state.b, cfg.r,
+                                    backend=dispatch.hash_backend())
+    shape = x.shape[:-1] + (cfg.n_tables, cfg.n_hashes)
+    return h.reshape(shape), proj.reshape(shape)
 
 
 def build_index(state: LSHIndexState, cfg: IndexConfig, embeddings: Array
@@ -153,41 +172,122 @@ def _probe_buckets(state: LSHIndexState, cfg: IndexConfig, hashes: Array,
     return jnp.concatenate([base, pb], axis=-1)
 
 
-def query_index(state: LSHIndexState, cfg: IndexConfig, queries: Array,
-                k: int, n_probes: int = 1, valid_items: Optional[int] = None
-                ) -> Tuple[Array, Array]:
-    """k-NN query.  queries: (nq, N) -> (ids (nq, k), dists (nq, k)).
+def _dedup_candidates(cands: Array, buckets: Array, cfg: IndexConfig,
+                      n_cap: int) -> Array:
+    """Mark duplicate candidate ids as -1 (first occurrence survives).
 
-    ids are -1 (dist +inf) where fewer than k candidates were found.
+    Replaces the old full sort of the (nq, C) id list (O(C log^2 C)
+    compare-exchange lanes on TPU) with two cheap passes:
+
+    1. *Bucket-local*: an item sits in exactly one bucket per table, so
+       within a table duplicates can only come from the same bucket being
+       probed twice (perturbed hash colliding with the base).  Comparing the
+       (L, T) probed bucket ids pairwise -- O(L*T^2), independent of S --
+       kills whole repeated buckets at once.
+    2. *Cross-table*: scatter-min each id's position into a (nq, n_cap)
+       first-seen table, keep a slot iff it scattered first.  O(C) work and
+       exact; falls back to the sort when the table itself (nq * n_cap)
+       would out-eat the memory it saves.
     """
-    q = queries.astype(jnp.float32)
+    nq, c = cands.shape
+    dup_b = (buckets[..., :, None] == buckets[..., None, :])         # (nq,L,T,T)
+    earlier = jnp.tril(jnp.ones(dup_b.shape[-2:], bool), k=-1)
+    dup_b = (dup_b & earlier).any(axis=-1)                           # (nq, L, T)
+    cands = jnp.where(dup_b[..., None], -1,
+                      cands.reshape(nq, cfg.n_tables, -1, cfg.bucket_capacity)
+                      ).reshape(nq, c)
+
+    if nq * n_cap > DEDUP_SCATTER_MAX_ELEMS:
+        cs = jnp.sort(cands, axis=-1)
+        dup = jnp.concatenate([jnp.zeros_like(cs[:, :1], dtype=bool),
+                               cs[:, 1:] == cs[:, :-1]], axis=-1)
+        return jnp.where(dup, -1, cs)
+
+    rows = jnp.arange(nq)[:, None]
+    pos = jnp.arange(c, dtype=jnp.int32)
+    # -1 slots must not scatter: negative indices WRAP in jnp.at, so send
+    # them to n_cap where mode="drop" discards them.
+    scat = jnp.where(cands >= 0, cands, n_cap)
+    first = jnp.full((nq, n_cap), c, jnp.int32).at[rows, scat].min(
+        pos, mode="drop")
+    seen_at = jnp.take_along_axis(first, jnp.clip(cands, 0, n_cap - 1), axis=1)
+    keep = (cands >= 0) & (seen_at == pos)
+    return jnp.where(keep, cands, -1)
+
+
+def _candidate_ids(state: LSHIndexState, cfg: IndexConfig, q: Array,
+                   n_probes: int) -> Array:
+    """hash -> probe -> gather bucket slots -> dedup: (nq, L*T*S) ids."""
     hashes, proj = _hashes_and_proj(state, cfg, q)
     buckets = _probe_buckets(state, cfg, hashes, proj, n_probes)     # (nq, L, T)
     cands = state.table[jnp.arange(cfg.n_tables)[:, None, None],
                         buckets.transpose(1, 0, 2)]                  # (L, nq, T, S)
     cands = cands.transpose(1, 0, 2, 3).reshape(q.shape[0], -1)      # (nq, L*T*S)
+    return _dedup_candidates(cands, buckets, cfg, state.db.shape[0])
 
-    # Dedup: sort ids; mark repeats as -1.
-    cs = jnp.sort(cands, axis=-1)
-    dup = jnp.concatenate([jnp.zeros_like(cs[:, :1], dtype=bool),
-                           cs[:, 1:] == cs[:, :-1]], axis=-1)
-    cs = jnp.where(dup, -1, cs)
 
-    # Exact re-rank on the embedding vectors (kernels/rerank is the fused path).
-    emb = state.db[jnp.clip(cs, 0, state.db.shape[0] - 1)]           # (nq, C, N)
-    if cfg.p == 2.0:
-        d = jnp.linalg.norm(emb - q[:, None, :], axis=-1)
-    else:
-        d = jnp.sum(jnp.abs(emb - q[:, None, :]) ** cfg.p, axis=-1) ** (1.0 / cfg.p)
-    invalid = cs < 0
-    if valid_items is not None:
-        invalid = invalid | (cs >= valid_items)
-    d = jnp.where(invalid, jnp.inf, d)
-    neg, idx = jax.lax.top_k(-d, k)
-    ids = jnp.take_along_axis(cs, idx, axis=-1)
-    dist = -neg
-    ids = jnp.where(jnp.isinf(dist), -1, ids)
+def query_index(state: LSHIndexState, cfg: IndexConfig, queries: Array,
+                k: int, n_probes: int = 1, valid_items: Optional[int] = None,
+                backend: Optional[str] = None) -> Tuple[Array, Array]:
+    """k-NN query.  queries: (nq, N) -> (ids (nq, k), dists (nq, k)).
+
+    ids are -1 (dist +inf) where fewer than k candidates were found.
+    ``backend`` selects the re-rank tail only (fused / reference /
+    compiled / interpret; default per dispatch.query_backend) -- hashing
+    always uses the process-constant implementation so probed buckets match
+    the build exactly.
+    """
+    q = queries.astype(jnp.float32)
+    cands = _candidate_ids(state, cfg, q, n_probes)
+    dist, ids = ops.fused_query_topk(q, state.db, cands, k, p=cfg.p,
+                                     valid_items=valid_items, backend=backend)
     return ids, dist
+
+
+@functools.lru_cache(maxsize=32)
+def _batched_query_fn(cfg: IndexConfig, k: int, n_probes: int,
+                      valid_items: Optional[int], backend: Optional[str],
+                      donate: bool):
+    fn = functools.partial(query_index, cfg=cfg, k=k, n_probes=n_probes,
+                           valid_items=valid_items, backend=backend)
+    wrapped = lambda state, queries: fn(state, queries=queries)
+    # Donating the query chunk lets XLA reuse its HBM for the outputs on
+    # accelerators; CPU would only warn, so skip it there.
+    return jax.jit(wrapped, donate_argnums=(1,) if donate else ())
+
+
+def query_index_batched(state: LSHIndexState, cfg: IndexConfig,
+                        queries: Array, k: int, n_probes: int = 1,
+                        valid_items: Optional[int] = None,
+                        batch_size: int = 1024,
+                        backend: Optional[str] = None) -> Tuple[Array, Array]:
+    """Streaming k-NN for large query sets: tiles ``queries`` into fixed
+    ``batch_size`` chunks (one compiled program total -- the last chunk is
+    zero-padded, not retraced) and concatenates results.
+
+    Bounds peak memory at O(batch_size * C) for the candidate tables and
+    keeps the fused kernel's scalar-prefetch id table within SMEM limits.
+    """
+    nq = queries.shape[0]
+    if nq <= batch_size:
+        return query_index(state, cfg, queries, k, n_probes, valid_items,
+                           backend)
+    # Resolve the backend BEFORE the lru_cache key is formed: caching on a
+    # raw None would bake the first call's env/platform default into the
+    # trace and silently ignore later REPRO_QUERY_BACKEND changes.
+    mode = dispatch.query_backend(backend)
+    fn = _batched_query_fn(cfg, k, n_probes, valid_items, mode,
+                           donate=jax.default_backend() != "cpu")
+    ids_out, dist_out = [], []
+    for start in range(0, nq, batch_size):
+        chunk = queries[start:start + batch_size]
+        pad = batch_size - chunk.shape[0]
+        if pad:
+            chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
+        ids, dist = fn(state, chunk)
+        ids_out.append(ids if not pad else ids[:-pad])
+        dist_out.append(dist if not pad else dist[:-pad])
+    return jnp.concatenate(ids_out), jnp.concatenate(dist_out)
 
 
 def brute_force_topk(db: Array, queries: Array, k: int, p: float = 2.0,

@@ -1,9 +1,12 @@
 """Pallas TPU kernels for the LSH hot spots (validated via interpret=True).
 
-hash_mm      -- fused p-stable hash: floor((X @ A)/r + b)
+hash_mm      -- fused p-stable hash: floor((X @ A)/r + b), optional proj out
 simhash_pack -- fused matmul + sign + 32-bit pack
 dct_mm       -- DCT-as-matmul Chebyshev embedding (MXU, no FFT)
-rerank       -- masked L^p candidate re-ranking
-ops          -- jit'd wrappers; ref -- pure-jnp oracles
+rerank       -- masked L^p re-ranking of pre-gathered candidates
+fused_query  -- gather + masked L^p + streaming top-k (scalar-prefetch DMA;
+                the (nq, C, N) candidate tensor never touches HBM)
+dispatch     -- lazy backend selection + per-shape block sizes
+ops          -- public wrappers (dispatch-routed); ref -- pure-jnp oracles
 """
-from . import ops, ref
+from . import dispatch, ops, ref

@@ -1,0 +1,138 @@
+"""Fused gather + masked L^p re-rank + partial top-k query kernel.
+
+The classical LSH query tail -- gather candidate embeddings, compute exact
+distances, select top-k -- is memory-bound: the naive jnp path materializes
+a ``(nq, C, N)`` candidate tensor in HBM (C = tables x probes x capacity,
+routinely 10^3), then a same-shape difference tensor, then sorts.  This
+kernel never builds either:
+
+* the grid is ``(nq, C)`` -- one candidate row per step;
+* candidate **ids** ride in scalar-prefetch memory (SMEM), and the db row
+  for step ``(i, c)`` is DMA'd HBM->VMEM by the BlockSpec index map
+  ``ids[i, c]`` itself (the block-sparse scalar-prefetch idiom), so Pallas
+  double-buffers the gather against the distance math of the previous row;
+* the masked L^p distance and a running top-k (replace-worst-if-better,
+  provably exact for "k smallest seen so far") live in VMEM scratch;
+* the epilogue selection-sorts the k best and writes ``(nq, k)`` ids +
+  distances -- the only HBM traffic besides the row gathers themselves.
+
+Invalid candidates (id < 0, or id >= valid_items for partially-filled
+databases) are forced to +inf / id -1, matching ``ref.fused_query_topk_ref``
+bit-for-bit on ids when distances are distinct.
+
+VMEM per step: one (1, N) row + (1, N) query + 2 x (1, KP) scratch -- N can
+be far larger than the rerank.py variant allowed, since C no longer
+multiplies it.  SMEM holds the full (nq, C) id table; chunk queries (see
+core.index.query_index_batched) if nq*C*4 bytes threatens SMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_KP = 128  # top-k scratch width: lane-aligned; k <= _KP enforced by wrapper
+
+
+def _lp(diff: Array, p: float) -> Array:
+    if p == 2.0:
+        return jnp.sqrt(jnp.sum(diff * diff))
+    if p == 1.0:
+        return jnp.sum(jnp.abs(diff))
+    return jnp.sum(jnp.abs(diff) ** p) ** (1.0 / p)
+
+
+def _fused_query_kernel(ids_ref, q_ref, row_ref, od_ref, oi_ref, dacc, iacc,
+                        *, k: int, p: float, valid: int):
+    i, c = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        dacc[...] = jnp.full_like(dacc, jnp.inf)
+        iacc[...] = jnp.full_like(iacc, -1)
+
+    cid = ids_ref[i, c]
+    d = _lp(row_ref[...] - q_ref[...], p)
+    ok = (cid >= 0) & (cid < valid)
+    d = jnp.where(ok, d, jnp.inf)
+
+    # Streaming top-k: replace the current worst slot iff the new distance
+    # beats it.  Invariant: scratch always holds the KP smallest seen.
+    cur = dacc[...]                                     # (1, KP)
+    lane = jax.lax.broadcasted_iota(jnp.int32, cur.shape, 1)
+    hit = (lane == jnp.argmax(cur)) & (d < jnp.max(cur))
+    dacc[...] = jnp.where(hit, d, cur)
+    iacc[...] = jnp.where(hit, cid, iacc[...])
+
+    @pl.when(c == pl.num_programs(1) - 1)
+    def _epilogue():
+        # Selection-sort the k best ascending (k static => unrolled).
+        dv, iv = dacc[...], iacc[...]
+        il = jax.lax.broadcasted_iota(jnp.int32, dv.shape, 1)
+        out_d, out_i = [], []
+        for _ in range(k):
+            m = jnp.argmin(dv)
+            one = il == m
+            dm = jnp.min(dv)
+            im = jnp.sum(jnp.where(one, iv, 0))
+            out_d.append(dm)
+            out_i.append(jnp.where(jnp.isinf(dm), -1, im))
+            dv = jnp.where(one, jnp.inf, dv)
+        od_ref[...] = jnp.stack(out_d).reshape(1, k)
+        oi_ref[...] = jnp.stack(out_i).reshape(1, k).astype(jnp.int32)
+
+
+def fused_query_topk(q: Array, db: Array, ids: Array, k: int, p: float = 2.0,
+                     valid_items: int | None = None, interpret: bool = True
+                     ) -> tuple[Array, Array]:
+    """Top-k nearest candidates without materializing (nq, C, N).
+
+    q: (nq, N) queries; db: (M, N) stored embeddings; ids: (nq, C) int32
+    candidate ids, -1 = empty/deduped slot.  Returns (dists (nq, k) f32,
+    ids (nq, k) int32) sorted ascending, id -1 / dist +inf where fewer than
+    k valid candidates exist.
+    """
+    nq, n = q.shape
+    m, n2 = db.shape
+    c = ids.shape[1]
+    assert n == n2 and ids.shape == (nq, c)
+    assert k <= c, f"k={k} exceeds candidate count C={c}"
+    assert k <= _KP, f"k={k} exceeds kernel top-k width {_KP}"
+    valid = m if valid_items is None else int(valid_items)
+
+    npad = -n % 128  # lane-align the row blocks; zeros don't move L^p
+    qp = jnp.pad(q.astype(jnp.float32), ((0, 0), (0, npad)))
+    dbp = jnp.pad(db.astype(jnp.float32), ((0, 0), (0, npad)))
+    nl = n + npad
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nq, c),
+        in_specs=[
+            pl.BlockSpec((1, nl), lambda i, c, ids: (i, 0)),
+            # The gather: the scalar-prefetched id IS the block index.
+            pl.BlockSpec((1, nl), lambda i, c, ids: (jnp.maximum(ids[i, c], 0), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, k), lambda i, c, ids: (i, 0)),
+            pl.BlockSpec((1, k), lambda i, c, ids: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, _KP), jnp.float32),
+            pltpu.VMEM((1, _KP), jnp.int32),
+        ],
+    )
+    dists, out_ids = pl.pallas_call(
+        functools.partial(_fused_query_kernel, k=k, p=p, valid=valid),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((nq, k), jnp.float32),
+                   jax.ShapeDtypeStruct((nq, k), jnp.int32)),
+        interpret=interpret,
+    )(ids.astype(jnp.int32), qp, dbp)
+    return dists, out_ids

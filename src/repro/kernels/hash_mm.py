@@ -22,8 +22,13 @@ from jax.experimental.pallas import tpu as pltpu
 Array = jax.Array
 
 
-def _hash_mm_kernel(x_ref, a_ref, b_ref, o_ref, acc_ref, *, nsteps: int,
-                    inv_r: float):
+def _hash_mm_kernel(x_ref, a_ref, b_ref, *rest, nsteps: int, r: float,
+                    want_proj: bool):
+    if want_proj:
+        o_ref, p_ref, acc_ref = rest
+    else:
+        (o_ref, acc_ref), p_ref = rest, None
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
@@ -33,18 +38,24 @@ def _hash_mm_kernel(x_ref, a_ref, b_ref, o_ref, acc_ref, *, nsteps: int,
 
     @pl.when(pl.program_id(2) == nsteps - 1)
     def _epilogue():
-        proj = acc_ref[...] * inv_r + b_ref[...]
+        # True division (not *1/r): bitwise-identical to the jnp reference,
+        # so kernel-hashed and reference-hashed indexes agree on buckets.
+        proj = acc_ref[...] / r + b_ref[...]
         o_ref[...] = jnp.floor(proj).astype(jnp.int32)
+        if want_proj:
+            p_ref[...] = proj
 
 
 def hash_mm(x: Array, alpha: Array, b: Array, r: float,
             bm: int = 128, bk: int = 128, bn: int = 128,
-            interpret: bool = True) -> Array:
-    """floor((x @ alpha) / r + b).
+            interpret: bool = True, return_proj: bool = False):
+    """floor((x @ alpha) / r + b), optionally with the pre-floor projections.
 
-    x: (B, N) float; alpha: (N, K) float; b: (K,) float. Returns (B, K) int32.
-    Dimensions are zero-padded up to block multiples (zeros do not change the
-    matmul result; padded K columns are sliced off).
+    x: (B, N) float; alpha: (N, K) float; b: (K,) float. Returns (B, K) int32,
+    or (hashes, proj (B, K) f32) when ``return_proj`` (multi-probe ranking
+    needs the fractional parts; emitting them from the same epilogue avoids a
+    second matmul).  Dimensions are zero-padded up to block multiples (zeros
+    do not change the matmul result; padded K columns are sliced off).
     """
     B, N = x.shape
     N2, K = alpha.shape
@@ -55,17 +66,25 @@ def hash_mm(x: Array, alpha: Array, b: Array, r: float,
     bp = jnp.pad(b, (0, Kp - K)).astype(jnp.float32)[None, :]
 
     grid = (Bp // bm, Kp // bk, Np // bn)
+    out_shape = jax.ShapeDtypeStruct((Bp, Kp), jnp.int32)
+    out_specs = pl.BlockSpec((bm, bk), lambda i, j, k: (i, j))
+    if return_proj:
+        out_shape = (out_shape, jax.ShapeDtypeStruct((Bp, Kp), jnp.float32))
+        out_specs = (out_specs, pl.BlockSpec((bm, bk), lambda i, j, k: (i, j)))
     out = pl.pallas_call(
-        functools.partial(_hash_mm_kernel, nsteps=grid[2], inv_r=1.0 / r),
+        functools.partial(_hash_mm_kernel, nsteps=grid[2], r=r,
+                          want_proj=return_proj),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j, k: (i, k)),
             pl.BlockSpec((bn, bk), lambda i, j, k: (k, j)),
             pl.BlockSpec((1, bk), lambda i, j, k: (0, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bk), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Bp, Kp), jnp.int32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[pltpu.VMEM((bm, bk), jnp.float32)],
         interpret=interpret,
     )(xp, ap, bp)
+    if return_proj:
+        return out[0][:B, :K], out[1][:B, :K]
     return out[:B, :K]

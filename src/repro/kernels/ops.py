@@ -1,54 +1,151 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""Public wrappers around the Pallas kernels, routed through kernels/dispatch.
 
-On TPU the kernels run compiled (interpret=False); on CPU (this container)
-they execute under ``interpret=True`` which runs the kernel body in Python --
-correct but slow, so the wrappers also expose a ``use_kernel=False`` escape to
-the jnp oracle for CPU-side production paths (benchmarks compare both).
+Each public function is a thin Python shim that resolves the execution mode
+("compiled" Mosaic on TPU / "interpret" on CPU / pure-jnp "reference") and
+per-shape block sizes *before* jit, then calls a jit'd implementation with
+those choices baked in as static arguments.  Resolving pre-jit keeps the
+``REPRO_KERNEL_BACKEND`` env override effective even though jit caches
+aggressively: a changed override produces different static args and hence a
+fresh trace, never a stale one.
+
+``use_kernel=False`` is the legacy escape hatch (equivalent to
+``backend="reference"``) and is kept for callers/tests that predate dispatch.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 
 import jax
-import jax.numpy as jnp
 
-from . import ref
+from . import dispatch, ref
 from .dct_mm import dct_mm
+from .fused_query import _KP as _FUSED_TOPK_WIDTH
+from .fused_query import fused_query_topk as _fused_query_kernel_call
 from .hash_mm import hash_mm
 from .rerank import rerank_distances
 from .simhash_pack import simhash_pack
 
-_ON_TPU = jax.default_backend() == "tpu"
+
+def _interp(mode: str) -> bool:
+    return mode != "compiled"
 
 
-@functools.partial(jax.jit, static_argnames=("r", "use_kernel"))
-def pstable_hash(x, alpha, b, r: float, use_kernel: bool = True):
+# -- p-stable hashing --------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("r", "mode", "blocks"))
+def _pstable_hash_impl(x, alpha, b, r, mode, blocks):
+    if mode == "reference":
+        return ref.hash_mm_ref(x, alpha, b, r)
+    bm, bn, bk = blocks
+    return hash_mm(x, alpha, b, r, bm=bm, bk=bk, bn=bn, interpret=_interp(mode))
+
+
+def pstable_hash(x, alpha, b, r: float, use_kernel: bool = True,
+                 backend: str | None = None):
     """floor((x @ alpha)/r + b) -> int32, batched; Eq. (5) for K hashes."""
-    if use_kernel:
-        return hash_mm(x, alpha, b, r, interpret=not _ON_TPU)
-    return ref.hash_mm_ref(x, alpha, b, r)
+    mode = dispatch.kernel_mode(backend, use_kernel)
+    blocks = dispatch.matmul_blocks(x.shape[0], x.shape[1], alpha.shape[1])
+    return _pstable_hash_impl(x, alpha, b, r, mode, blocks)
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
-def simhash_signature(x, alpha, use_kernel: bool = True):
+@functools.partial(jax.jit, static_argnames=("r", "mode", "blocks"))
+def _pstable_hash_proj_impl(x, alpha, b, r, mode, blocks):
+    if mode == "reference":
+        return ref.hash_mm_proj_ref(x, alpha, b, r)
+    bm, bn, bk = blocks
+    return hash_mm(x, alpha, b, r, bm=bm, bk=bk, bn=bn,
+                   interpret=_interp(mode), return_proj=True)
+
+
+def pstable_hash_proj(x, alpha, b, r: float, use_kernel: bool = True,
+                      backend: str | None = None):
+    """(hashes int32, pre-floor projections f32) -- the multi-probe pair."""
+    mode = dispatch.kernel_mode(backend, use_kernel)
+    blocks = dispatch.matmul_blocks(x.shape[0], x.shape[1], alpha.shape[1])
+    return _pstable_hash_proj_impl(x, alpha, b, r, mode, blocks)
+
+
+# -- simhash -----------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _simhash_impl(x, alpha, mode):
+    if mode == "reference":
+        return ref.simhash_pack_ref(x, alpha)
+    return simhash_pack(x, alpha, interpret=_interp(mode))
+
+
+def simhash_signature(x, alpha, use_kernel: bool = True,
+                      backend: str | None = None):
     """Packed sign signature (B, K/32) int32."""
-    if use_kernel:
-        return simhash_pack(x, alpha, interpret=not _ON_TPU)
-    return ref.simhash_pack_ref(x, alpha)
+    return _simhash_impl(x, alpha, dispatch.kernel_mode(backend, use_kernel))
 
 
-@functools.partial(jax.jit, static_argnames=("use_kernel",))
-def cheb_embed(fvals, dct_t, scale, use_kernel: bool = True):
+# -- Chebyshev / DCT embedding ----------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def _cheb_impl(fvals, dct_t, scale, mode):
+    if mode == "reference":
+        return ref.dct_mm_ref(fvals, dct_t, scale)
+    return dct_mm(fvals, dct_t, scale, interpret=_interp(mode))
+
+
+def cheb_embed(fvals, dct_t, scale, use_kernel: bool = True,
+               backend: str | None = None):
     """Fused DCT + orthonormal scaling: (B, N) samples -> (B, N) coefficients."""
-    if use_kernel:
-        return dct_mm(fvals, dct_t, scale, interpret=not _ON_TPU)
-    return ref.dct_mm_ref(fvals, dct_t, scale)
+    return _cheb_impl(fvals, dct_t, scale, dispatch.kernel_mode(backend, use_kernel))
 
 
-@functools.partial(jax.jit, static_argnames=("p", "use_kernel"))
-def candidate_distances(q, emb, ids, p: float = 2.0, use_kernel: bool = True):
-    """Masked L^p re-rank distances (B, C)."""
-    if use_kernel:
-        return rerank_distances(q, emb, ids, p=p, interpret=not _ON_TPU)
-    return ref.rerank_ref(q, emb, ids, p)
+# -- candidate re-ranking ----------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("p", "mode", "blocks"))
+def _rerank_impl(q, emb, ids, p, mode, blocks):
+    if mode == "reference":
+        return ref.rerank_ref(q, emb, ids, p)
+    bb, bc = blocks
+    return rerank_distances(q, emb, ids, p=p, bb=bb, bc=bc,
+                            interpret=_interp(mode))
+
+
+def candidate_distances(q, emb, ids, p: float = 2.0, use_kernel: bool = True,
+                        backend: str | None = None):
+    """Masked L^p re-rank distances (B, C) over pre-gathered embeddings."""
+    mode = dispatch.kernel_mode(backend, use_kernel)
+    blocks = dispatch.rerank_blocks(q.shape[0], ids.shape[1])
+    return _rerank_impl(q, emb, ids, p, mode, blocks)
+
+
+# -- fused gather + rerank + top-k (the query-engine hot path) --------------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "p", "valid_items", "mode"))
+def _fused_query_impl(q, db, ids, k, p, valid_items, mode):
+    if mode == "reference":
+        return ref.fused_query_topk_ref(q, db, ids, k, p, valid_items)
+    return _fused_query_kernel_call(q, db, ids, k, p=p, valid_items=valid_items,
+                                    interpret=_interp(mode))
+
+
+def fused_query_topk(q, db, ids, k: int, p: float = 2.0,
+                     valid_items: int | None = None,
+                     backend: str | None = None):
+    """Candidate ids -> (dists (nq, k), ids (nq, k)) without the (nq, C, N)
+    HBM gather.  ``backend`` accepts fused/reference/compiled/interpret.
+
+    The kernel's top-k scratch is ``fused_query._KP`` lanes wide; larger k
+    falls back to the reference path (with a warning -- it reintroduces the
+    HBM gather).
+    """
+    mode = dispatch.query_backend(backend)
+    if mode != "reference" and k > _FUSED_TOPK_WIDTH:
+        warnings.warn(
+            f"fused_query_topk: k={k} exceeds the kernel's "
+            f"{_FUSED_TOPK_WIDTH}-lane top-k scratch; falling back to the "
+            "memory-bound reference path", stacklevel=2)
+        mode = "reference"
+    return _fused_query_impl(q, db, ids, k, p, valid_items, mode)

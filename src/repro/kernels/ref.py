@@ -37,3 +37,31 @@ def rerank_ref(q: Array, emb: Array, ids: Array, p: float = 2.0) -> Array:
     else:
         d = jnp.sum(jnp.abs(diff) ** p, axis=-1) ** (1.0 / p)
     return jnp.where(ids < 0, jnp.inf, d)
+
+
+def hash_mm_proj_ref(x: Array, alpha: Array, b: Array, r: float
+                     ) -> tuple[Array, Array]:
+    """(floor-hashes int32, pre-floor projections f32) -- multi-probe needs
+    both; identical arithmetic to hash_mm_ref so hashes agree bitwise."""
+    proj = (x.astype(jnp.float32) @ alpha.astype(jnp.float32)) / r \
+        + b.astype(jnp.float32)
+    return jnp.floor(proj).astype(jnp.int32), proj
+
+
+def fused_query_topk_ref(q: Array, db: Array, ids: Array, k: int,
+                         p: float = 2.0, valid_items=None
+                         ) -> tuple[Array, Array]:
+    """Oracle for kernels/fused_query: HBM gather + rerank + lax.top_k.
+
+    This IS the memory-bound path the fused kernel exists to kill: the
+    gather materializes (nq, C, N) before any arithmetic happens.
+    """
+    m = db.shape[0]
+    emb = db[jnp.clip(ids, 0, m - 1)]                    # (nq, C, N) in HBM
+    d = rerank_ref(q, emb, ids, p)
+    if valid_items is not None:
+        d = jnp.where(ids >= valid_items, jnp.inf, d)
+    neg, idx = jax.lax.top_k(-d, k)
+    out_ids = jnp.take_along_axis(ids, idx, axis=-1)
+    dist = -neg
+    return dist, jnp.where(jnp.isinf(dist), -1, out_ids)

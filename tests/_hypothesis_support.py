@@ -1,0 +1,18 @@
+"""Shared guard for property-based test modules.
+
+``hypothesis`` is an optional dev dependency (see pyproject.toml).  Modules
+that use it import ``given``/``settings``/``st`` from here instead of from
+``hypothesis`` directly, so environments without it skip those modules at
+collection time rather than erroring the whole run.
+"""
+
+import pytest
+
+_hypothesis = pytest.importorskip(
+    "hypothesis",
+    reason="optional dependency 'hypothesis' not installed "
+           "(pip install repro[test])")
+
+given = _hypothesis.given
+settings = _hypothesis.settings
+st = _hypothesis.strategies

@@ -1,0 +1,129 @@
+"""Fused query engine: kernel path vs jnp reference path parity.
+
+The acceptance contract for the query engine is *bit-identical ids* (and
+fp-tolerance distances) between ``backend="interpret"`` (the fused Pallas
+kernel under the interpreter -- same code path the TPU compiles) and
+``backend="reference"`` (HBM gather + jnp re-rank + lax.top_k).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import index as lidx
+from repro.kernels import dispatch, ops, ref
+
+
+def _build(key, p=2.0, cap=16, n_db=512, n_dims=32):
+    cfg = lidx.IndexConfig(n_dims=n_dims, n_tables=4, n_hashes=4,
+                           log2_buckets=9, bucket_capacity=cap, r=2.0, p=p)
+    db = jax.random.normal(jax.random.fold_in(key, 1), (n_db, n_dims))
+    state = lidx.create_index(jax.random.fold_in(key, 2), cfg, n_db)
+    state = lidx.build_index(state, cfg, db)
+    return cfg, db, state
+
+
+def _assert_query_parity(state, cfg, q, k, **kw):
+    ids_r, d_r = lidx.query_index(state, cfg, q, k, backend="reference", **kw)
+    ids_f, d_f = lidx.query_index(state, cfg, q, k, backend="interpret", **kw)
+    np.testing.assert_array_equal(np.asarray(ids_r), np.asarray(ids_f))
+    dr, df = np.asarray(d_r), np.asarray(d_f)
+    finite = np.isfinite(dr)
+    assert (finite == np.isfinite(df)).all()
+    np.testing.assert_allclose(df[finite], dr[finite], atol=1e-5, rtol=1e-5)
+    return ids_r
+
+
+@pytest.mark.parametrize("p", [1.0, 2.0])
+@pytest.mark.parametrize("n_probes", [1, 4])
+def test_fused_matches_reference(rng_key, p, n_probes):
+    cfg, db, state = _build(rng_key, p=p)
+    q = jax.random.normal(jax.random.fold_in(rng_key, 3), (8, 32))
+    _assert_query_parity(state, cfg, q, 10, n_probes=n_probes)
+
+
+def test_parity_with_overflowed_and_padded_buckets(rng_key):
+    """capacity=2 forces bucket overflow (dropped items) AND many -1-padded
+    slots; undersized db forces fewer-than-k results (-1 ids, +inf dists)."""
+    cfg, db, state = _build(rng_key, cap=2, n_db=256)
+    q = jax.random.normal(jax.random.fold_in(rng_key, 3), (8, 32))
+    ids = _assert_query_parity(state, cfg, q, 10, n_probes=2)
+    # with C = 4*2*2 = 16 slots, some queries genuinely come up short of 10
+    assert (np.asarray(ids) == -1).any()
+
+
+def test_parity_with_valid_items_mask(rng_key):
+    cfg, db, state = _build(rng_key)
+    q = jax.random.normal(jax.random.fold_in(rng_key, 3), (6, 32))
+    _assert_query_parity(state, cfg, q, 5, n_probes=2, valid_items=300)
+
+
+def test_fused_topk_op_unit(rng_key):
+    """ops.fused_query_topk on handcrafted ids: -1 slots, out-of-valid ids."""
+    nq, c, n, m = 4, 40, 24, 100
+    q = jax.random.normal(jax.random.fold_in(rng_key, 1), (nq, n))
+    db = jax.random.normal(jax.random.fold_in(rng_key, 2), (m, n))
+    ids = jax.random.randint(jax.random.fold_in(rng_key, 3), (nq, c), -1, m)
+    for p in (1.0, 2.0):
+        for valid in (None, 60):
+            d_k, i_k = ops.fused_query_topk(q, db, ids, 7, p=p,
+                                            valid_items=valid,
+                                            backend="interpret")
+            d_r, i_r = ref.fused_query_topk_ref(q, db, ids, 7, p=p,
+                                                valid_items=valid)
+            np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+            fin = np.isfinite(np.asarray(d_r))
+            np.testing.assert_allclose(np.asarray(d_k)[fin],
+                                       np.asarray(d_r)[fin],
+                                       atol=1e-5, rtol=1e-5)
+
+
+def test_batched_query_matches_unbatched(rng_key):
+    cfg, db, state = _build(rng_key)
+    q = jax.random.normal(jax.random.fold_in(rng_key, 3), (37, 32))
+    ids, dists = lidx.query_index(state, cfg, q, 5, n_probes=2)
+    ids_b, dists_b = lidx.query_index_batched(state, cfg, q, 5, n_probes=2,
+                                              batch_size=16)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_b))
+    fin = np.isfinite(np.asarray(dists))
+    np.testing.assert_allclose(np.asarray(dists_b)[fin],
+                               np.asarray(dists)[fin], atol=1e-6)
+
+
+def test_hash_proj_kernel_matches_reference(rng_key):
+    """The multi-probe pair (hashes, projections) from the kernel epilogue."""
+    x = jax.random.normal(jax.random.fold_in(rng_key, 1), (33, 48))
+    alpha = jax.random.normal(jax.random.fold_in(rng_key, 2), (48, 24))
+    b = jax.random.uniform(jax.random.fold_in(rng_key, 3), (24,))
+    h_k, p_k = ops.pstable_hash_proj(x, alpha, b, 0.7, backend="interpret")
+    h_r, p_r = ref.hash_mm_proj_ref(x, alpha, b, 0.7)
+    np.testing.assert_array_equal(np.asarray(h_k), np.asarray(h_r))
+    np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_r),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_dedup_is_exact(rng_key):
+    """After _candidate_ids, no id (except -1) appears twice for a query."""
+    cfg, db, state = _build(rng_key, n_db=256)
+    q = jax.random.normal(jax.random.fold_in(rng_key, 3), (16, 32))
+    cands = np.asarray(lidx._candidate_ids(state, cfg, q.astype(jnp.float32), 4))
+    for row in cands:
+        real = row[row >= 0]
+        assert len(real) == len(set(real.tolist()))
+
+
+def test_dispatch_resolution(monkeypatch):
+    assert dispatch.kernel_mode(use_kernel=False) == "reference"
+    assert dispatch.kernel_mode("interpret") == "interpret"
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "reference")
+    assert dispatch.kernel_mode() == "reference"
+    monkeypatch.setenv("REPRO_QUERY_BACKEND", "reference")
+    assert dispatch.query_backend() == "reference"
+    monkeypatch.setenv("REPRO_QUERY_BACKEND", "interpret")
+    assert dispatch.query_backend() == "interpret"
+    with pytest.raises(ValueError):
+        dispatch.kernel_mode("mosaic")
+    # per-shape blocks: saturated dims -> 128; small dims -> 8-quantum
+    assert dispatch.matmul_blocks(512, 64, 300) == (128, 64, 128)
+    assert dispatch.rerank_blocks(4, 200) == (8, 128)

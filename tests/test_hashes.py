@@ -4,7 +4,7 @@ SimHash, ALSH."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_support import given, settings, st
 
 from repro.core import collision, hashes
 
