@@ -1,0 +1,181 @@
+"""Serve-layer benchmark: streaming mutability + admission batching.
+
+Two experiments, reported into BENCH_results.json:
+
+1. **Insert/query interleave sweep** -- a fresh SegmentedIndex absorbs
+   insert and query operations interleaved at mixes 4:1 / 1:1 / 1:4
+   (ingest-heavy -> read-heavy), wall-clock timed.  The invariant the serve
+   layer exists for is asserted here: the number of distinct jit shapes
+   dispatched stays bounded by the chunk palette (queries) and the insert
+   chunk (inserts) -- i.e. sustained mixed traffic triggers **zero**
+   per-request recompiles.
+
+2. **Batcher latency/throughput curve** -- the deadline dial.  Requests
+   arrive on a *simulated* clock (deterministic, CI-friendly) at a fixed
+   inter-arrival gap; for each max_delay setting we record queueing latency
+   percentiles (in simulated time), mean batch fill (real rows / padded
+   rows), and batches dispatched.  Larger deadlines buy fuller batches
+   (higher device efficiency) at higher admission latency -- the curve makes
+   the trade-off visible per PR.
+
+REPRO_BENCH_SMOKE=1 shrinks both sweeps for CI.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.index import IndexConfig
+from repro.serve.batcher import MicroBatcher
+from repro.serve.segments import SegmentedIndex
+from repro.serve.stats import occupancy_report, recall_proxy
+
+from .bench_query_engine import smoke_mode
+
+N_DIMS = 32
+K = 10
+N_PROBES = 2
+CHUNK_SIZES = (8, 32, 128)
+INSERT_CHUNK = 128
+
+
+def _cfg() -> IndexConfig:
+    return IndexConfig(n_dims=N_DIMS, n_tables=4, n_hashes=4,
+                       log2_buckets=10, bucket_capacity=32, r=4.0)
+
+
+def _fresh_index(segment_capacity: int) -> SegmentedIndex:
+    return SegmentedIndex(_cfg(), segment_capacity=segment_capacity,
+                          insert_chunk=INSERT_CHUNK, seed=0)
+
+
+def _interleave_sweep(rng: np.ndarray, n_ops: int, segment_capacity: int
+                      ) -> dict:
+    """Mixed insert+query traffic; returns per-mix throughput + shape audit."""
+    out = {}
+    for mix_name, (ins_w, q_w) in (("4:1", (4, 1)), ("1:1", (1, 1)),
+                                   ("1:4", (1, 4))):
+        idx = _fresh_index(segment_capacity)
+        batcher = MicroBatcher(
+            lambda q, k, npb: tuple(map(np.asarray,
+                                        idx.query(q, k, n_probes=npb))),
+            chunk_sizes=CHUNK_SIZES, max_delay_ms=2.0)
+        pattern = [True] * ins_w + [False] * q_w
+        ins_rows = q_rows = 0
+        deleted = 0
+        # warmup compiles (excluded from timing)
+        idx.insert(rng.normal(size=(INSERT_CHUNK, N_DIMS)))
+        batcher.query(rng.normal(size=(8, N_DIMS)), K, N_PROBES)
+        t0 = time.perf_counter()
+        for op in range(n_ops):
+            if pattern[op % len(pattern)]:
+                gids = idx.insert(rng.normal(size=(INSERT_CHUNK, N_DIMS)))
+                ins_rows += len(gids)
+                if op % 7 == 3:       # churn: tombstone a stripe
+                    deleted += idx.delete(gids[::8])
+            else:
+                q = rng.normal(size=(int(rng.integers(1, 24)), N_DIMS))
+                fut = batcher.submit(q, K, N_PROBES)
+                batcher.pump(force=(op % 4 == 3))
+                q_rows += q.shape[0]
+        batcher.flush_all()
+        dt = time.perf_counter() - t0
+        occ = occupancy_report(idx)
+        # THE serve-layer invariant: shapes stay within the static palette
+        # (one insert shape; at most |palette| query shapes per (k, probes))
+        assert batcher.unique_shapes() <= len(CHUNK_SIZES), \
+            f"query recompile storm: {dict(batcher.shape_counts)}"
+        assert len(idx.query_shapes) <= len(CHUNK_SIZES) + 1, \
+            f"index saw unbounded shapes: {idx.query_shapes}"
+        out[mix_name] = {
+            "wall_s": round(dt, 3),
+            "inserts_per_s": round(ins_rows / dt),
+            "queries_per_s": round(q_rows / dt),
+            "rows_inserted": ins_rows,
+            "rows_queried": q_rows,
+            "deleted": deleted,
+            "n_segments": occ["n_segments"],
+            "jit_query_shapes": batcher.unique_shapes(),
+        }
+    return out
+
+
+class _SimClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def _batcher_curve(rng, n_requests: int, segment_capacity: int) -> dict:
+    """Latency/throughput vs deadline on a simulated arrival process."""
+    idx = _fresh_index(segment_capacity)
+    idx.insert(rng.normal(size=(segment_capacity, N_DIMS)))
+    arrival_gap_ms = 0.25          # 4 requests / simulated ms
+    out = {}
+    for delay_ms in (0.5, 2.0, 8.0):
+        clock = _SimClock()
+        fills = []
+        batcher = MicroBatcher(
+            lambda q, k, npb: tuple(map(np.asarray,
+                                        idx.query(q, k, n_probes=npb))),
+            chunk_sizes=CHUNK_SIZES, max_delay_ms=delay_ms, clock=clock,
+            on_batch=lambda real, padded, dt: fills.append(real / padded))
+        submitted, latency = {}, []
+        for i in range(n_requests):
+            clock.advance(arrival_gap_ms / 1e3)
+            nq = int(rng.integers(1, 12))
+            fut = batcher.submit(rng.normal(size=(nq, N_DIMS)), K, N_PROBES)
+            submitted[id(fut)] = (fut, clock())
+            batcher.pump()
+            for fid in [f for f in submitted if submitted[f][0].done()]:
+                fut_, t_sub = submitted.pop(fid)
+                latency.append(clock() - t_sub)
+        clock.advance(delay_ms / 1e3)
+        batcher.pump()
+        for fut_, t_sub in submitted.values():
+            latency.append(clock() - t_sub)
+        lat_ms = np.asarray(latency) * 1e3
+        out[f"{delay_ms}ms"] = {
+            "p50_ms": round(float(np.percentile(lat_ms, 50)), 3),
+            "p95_ms": round(float(np.percentile(lat_ms, 95)), 3),
+            "mean_batch_fill": round(float(np.mean(fills)), 3),
+            "n_batches": batcher.n_batches,
+            "n_requests": batcher.n_requests,
+        }
+    return out
+
+
+def run(seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+    smoke = smoke_mode()
+    n_ops = 20 if smoke else 120
+    n_requests = 60 if smoke else 400
+    segment_capacity = 512 if smoke else 2048
+
+    interleave = _interleave_sweep(rng, n_ops, segment_capacity)
+
+    # recall sanity on the final mixed-traffic index state
+    idx = _fresh_index(segment_capacity)
+    emb = rng.normal(size=(2 * segment_capacity, N_DIMS))
+    gids = idx.insert(emb)
+    idx.delete(gids[:: 5])
+    probes = emb[1::97][:16] + 0.05 * rng.normal(size=emb[1::97][:16].shape)
+    rec = recall_proxy(idx, probes, K, n_probes=6)
+
+    batcher = _batcher_curve(rng, n_requests, segment_capacity)
+
+    flat = {"recall_proxy": round(rec, 3)}
+    for mix, vals in interleave.items():
+        for kk, vv in vals.items():
+            flat[f"interleave_{mix}_{kk}"] = vv
+    for dl, vals in batcher.items():
+        for kk, vv in vals.items():
+            flat[f"batcher_{dl}_{kk}"] = vv
+    return flat

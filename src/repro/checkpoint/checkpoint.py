@@ -36,8 +36,14 @@ def _flatten(tree: Any):
     return out, treedef
 
 
-def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3) -> str:
-    """Blocking save.  Returns the final checkpoint path."""
+def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3,
+         extra: Optional[dict] = None) -> str:
+    """Blocking save.  Returns the final checkpoint path.
+
+    ``extra`` is an optional JSON-serialisable dict stored in the manifest
+    (host-side metadata that isn't an array -- e.g. the serve registry's
+    segment bookkeeping); read it back with ``load_extra``.
+    """
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"tmp.{step}")
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
@@ -46,6 +52,8 @@ def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3) -> str:
     os.makedirs(tmp)
     flat, _ = _flatten(tree)
     manifest = {"step": step, "keys": {}}
+    if extra is not None:
+        manifest["extra"] = extra
     arrays = {}
     for i, (key, leaf) in enumerate(sorted(flat.items())):
         arr = np.asarray(jax.device_get(leaf))
@@ -97,6 +105,13 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
                 os.path.join(ckpt_dir, name, "manifest.json")):
             steps.append(int(name[len("step_"):]))
     return max(steps) if steps else None
+
+
+def load_extra(ckpt_dir: str, step: int) -> dict:
+    """The ``extra`` metadata dict stored at save time ({} if absent)."""
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        return json.load(f).get("extra", {})
 
 
 def restore(ckpt_dir: str, step: int, target: Any,

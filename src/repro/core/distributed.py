@@ -32,6 +32,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import compat
 from . import index as lsh_index
 from .index import IndexConfig, LSHIndexState
 
@@ -66,7 +67,7 @@ def build_distributed(key: jax.Array, cfg: IndexConfig, embeddings: Array,
         state = lsh_index.build_index(state, cfg, emb_local)
         return jax.tree.map(lambda x: x[None, None], state)
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=P(data_axis, None),
         out_specs=jax.tree.map(lambda _: P(data_axis, model_axis),
@@ -115,7 +116,7 @@ def query_distributed(state_dm, cfg: IndexConfig, queries: Array, k: int,
         out_ids = jnp.where(jnp.isinf(out_d), -1, out_ids)
         return out_ids, out_d
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(data_axis, model_axis),
                                _state_structure()), P()),
@@ -145,7 +146,7 @@ def brute_force_distributed(embeddings: Array, queries: Array, k: int,
         neg, pick = jax.lax.top_k(-flat_d, k)
         return jnp.take_along_axis(flat_ids, pick, axis=-1), -neg
 
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(data_axis, None), P()),
         out_specs=(P(), P()),

@@ -96,17 +96,37 @@ def _bucket_ids(hashes: Array, mix: Array, log2_buckets: int) -> Array:
     return (acc >> np.uint32(32 - log2_buckets)).astype(jnp.int32)
 
 
-def create_index(key: jax.Array, cfg: IndexConfig, n_items_cap: int) -> LSHIndexState:
+def make_family(key: jax.Array, cfg: IndexConfig
+                ) -> Tuple[Array, Array, Array]:
+    """Draw a hash family (alpha, b, mix) without allocating index storage --
+    for callers that share one family across several indexes/segments."""
     ka, kb, km = jax.random.split(key, 3)
     fam = PStableHash.create(ka, cfg.n_dims, cfg.n_tables * cfg.n_hashes,
                              r=cfg.r, p=cfg.p)
-    mix = jax.random.randint(km, (cfg.n_tables, cfg.n_hashes), 0, np.iinfo(np.int32).max,
+    mix = jax.random.randint(km, (cfg.n_tables, cfg.n_hashes), 0,
+                             np.iinfo(np.int32).max,
                              dtype=jnp.int32).astype(jnp.uint32) | np.uint32(1)
+    return fam.alpha, fam.b, mix
+
+
+def create_index(key: jax.Array, cfg: IndexConfig, n_items_cap: int,
+                 family: Optional[Tuple[Array, Array, Array]] = None
+                 ) -> LSHIndexState:
+    """Fresh empty index.  ``family`` = (alpha, b, mix) reuses an existing
+    hash family so several indexes (e.g. the segments of a streaming index)
+    produce bitwise-identical bucket ids for the same item."""
+    alpha, b, mix = make_family(key, cfg) if family is None else family
     table = jnp.full((cfg.n_tables, cfg.n_buckets, cfg.bucket_capacity), -1, jnp.int32)
     counts = jnp.zeros((cfg.n_tables, cfg.n_buckets), jnp.int32)
     db = jnp.zeros((n_items_cap, cfg.n_dims), jnp.float32)
-    return LSHIndexState(alpha=fam.alpha, b=fam.b, mix=mix, table=table,
+    return LSHIndexState(alpha=alpha, b=b, mix=mix, table=table,
                          counts=counts, db=db)
+
+
+def hash_family(state: LSHIndexState) -> Tuple[Array, Array, Array]:
+    """The (alpha, b, mix) triple that determines bucket ids -- share it via
+    ``create_index(..., family=...)`` to make indexes bucket-compatible."""
+    return state.alpha, state.b, state.mix
 
 
 def _hashes_and_proj(state: LSHIndexState, cfg: IndexConfig, x: Array
@@ -148,6 +168,50 @@ def build_index(state: LSHIndexState, cfg: IndexConfig, embeddings: Array
     table, counts = jax.vmap(insert_one_table, in_axes=(1, 0, 0))(
         buckets, state.table, state.counts)
     db = state.db.at[:n].set(embeddings.astype(state.db.dtype))
+    return dataclasses.replace(state, table=table, counts=counts, db=db)
+
+
+def insert_items(state: LSHIndexState, cfg: IndexConfig, embeddings: Array,
+                 start: Array, n_valid: Array) -> LSHIndexState:
+    """Incrementally append ``embeddings[:n_valid]`` as items
+    ``start .. start+n_valid-1``.  Pure & jittable with *fixed* shapes: the
+    (m, N) embedding block is a static-size chunk, ``start``/``n_valid`` are
+    traced scalars, and rows >= n_valid are padding (never written anywhere),
+    so a streaming caller reuses one compiled program for every insert.
+
+    Within-chunk placement uses the same sort + segmented-rank machinery as
+    ``build_index``; each item's slot is offset by the bucket's existing
+    occupancy (``counts``), so interleaved insert batches fill buckets exactly
+    like a one-shot build would (overflow beyond capacity is dropped, counts
+    still record true occupancy).
+    """
+    m = embeddings.shape[0]
+    hashes, _ = _hashes_and_proj(state, cfg, embeddings.astype(jnp.float32))
+    buckets = _bucket_ids(hashes, state.mix, cfg.log2_buckets)        # (m, L)
+    valid = jnp.arange(m) < n_valid
+    ids = (start + jnp.arange(m)).astype(jnp.int32)
+
+    def insert_one_table(b_col: Array, table_l: Array, counts_l: Array):
+        # padding rows get sentinel bucket B: sorts last, scatters are dropped
+        b_eff = jnp.where(valid, b_col, cfg.n_buckets)
+        order = jnp.argsort(b_eff)
+        sb = b_eff[order]
+        is_start = jnp.concatenate([jnp.ones((1,), jnp.bool_), sb[1:] != sb[:-1]])
+        seg_start = jax.lax.associative_scan(jnp.maximum,
+                                             jnp.where(is_start, jnp.arange(m), 0))
+        rank = jnp.arange(m) - seg_start
+        slot = counts_l[jnp.clip(sb, 0, cfg.n_buckets - 1)] + rank
+        flat = table_l.reshape(-1)
+        pos = jnp.where((slot < cfg.bucket_capacity) & (sb < cfg.n_buckets),
+                        sb * cfg.bucket_capacity + slot, flat.shape[0])
+        flat = flat.at[pos].set(ids[order], mode="drop")
+        counts_l = counts_l.at[b_eff].add(1, mode="drop")
+        return flat.reshape(table_l.shape), counts_l
+
+    table, counts = jax.vmap(insert_one_table, in_axes=(1, 0, 0))(
+        buckets, state.table, state.counts)
+    rows = jnp.where(valid, ids, state.db.shape[0])
+    db = state.db.at[rows].set(embeddings.astype(state.db.dtype), mode="drop")
     return dataclasses.replace(state, table=table, counts=counts, db=db)
 
 
@@ -228,17 +292,23 @@ def _candidate_ids(state: LSHIndexState, cfg: IndexConfig, q: Array,
 
 def query_index(state: LSHIndexState, cfg: IndexConfig, queries: Array,
                 k: int, n_probes: int = 1, valid_items: Optional[int] = None,
-                backend: Optional[str] = None) -> Tuple[Array, Array]:
+                backend: Optional[str] = None,
+                live_mask: Optional[Array] = None) -> Tuple[Array, Array]:
     """k-NN query.  queries: (nq, N) -> (ids (nq, k), dists (nq, k)).
 
     ids are -1 (dist +inf) where fewer than k candidates were found.
     ``backend`` selects the re-rank tail only (fused / reference /
     compiled / interpret; default per dispatch.query_backend) -- hashing
     always uses the process-constant implementation so probed buckets match
-    the build exactly.
+    the build exactly.  ``live_mask`` (bool (n_items_cap,)) drops
+    tombstoned items from the candidate set before re-rank -- the streaming
+    serve layer's delete path.
     """
     q = queries.astype(jnp.float32)
     cands = _candidate_ids(state, cfg, q, n_probes)
+    if live_mask is not None:
+        safe = jnp.clip(cands, 0, live_mask.shape[0] - 1)
+        cands = jnp.where((cands >= 0) & live_mask[safe], cands, -1)
     dist, ids = ops.fused_query_topk(q, state.db, cands, k, p=cfg.p,
                                      valid_items=valid_items, backend=backend)
     return ids, dist
@@ -247,10 +317,14 @@ def query_index(state: LSHIndexState, cfg: IndexConfig, queries: Array,
 @functools.lru_cache(maxsize=32)
 def _batched_query_fn(cfg: IndexConfig, k: int, n_probes: int,
                       valid_items: Optional[int], backend: Optional[str],
-                      donate: bool):
+                      donate: bool, masked: bool):
     fn = functools.partial(query_index, cfg=cfg, k=k, n_probes=n_probes,
                            valid_items=valid_items, backend=backend)
-    wrapped = lambda state, queries: fn(state, queries=queries)
+    if masked:
+        wrapped = lambda state, queries, live_mask: fn(
+            state, queries=queries, live_mask=live_mask)
+    else:
+        wrapped = lambda state, queries: fn(state, queries=queries)
     # Donating the query chunk lets XLA reuse its HBM for the outputs on
     # accelerators; CPU would only warn, so skip it there.
     return jax.jit(wrapped, donate_argnums=(1,) if donate else ())
@@ -260,7 +334,9 @@ def query_index_batched(state: LSHIndexState, cfg: IndexConfig,
                         queries: Array, k: int, n_probes: int = 1,
                         valid_items: Optional[int] = None,
                         batch_size: int = 1024,
-                        backend: Optional[str] = None) -> Tuple[Array, Array]:
+                        backend: Optional[str] = None,
+                        live_mask: Optional[Array] = None
+                        ) -> Tuple[Array, Array]:
     """Streaming k-NN for large query sets: tiles ``queries`` into fixed
     ``batch_size`` chunks (one compiled program total -- the last chunk is
     zero-padded, not retraced) and concatenates results.
@@ -271,20 +347,22 @@ def query_index_batched(state: LSHIndexState, cfg: IndexConfig,
     nq = queries.shape[0]
     if nq <= batch_size:
         return query_index(state, cfg, queries, k, n_probes, valid_items,
-                           backend)
+                           backend, live_mask=live_mask)
     # Resolve the backend BEFORE the lru_cache key is formed: caching on a
     # raw None would bake the first call's env/platform default into the
     # trace and silently ignore later REPRO_QUERY_BACKEND changes.
     mode = dispatch.query_backend(backend)
     fn = _batched_query_fn(cfg, k, n_probes, valid_items, mode,
-                           donate=jax.default_backend() != "cpu")
+                           donate=jax.default_backend() != "cpu",
+                           masked=live_mask is not None)
     ids_out, dist_out = [], []
     for start in range(0, nq, batch_size):
         chunk = queries[start:start + batch_size]
         pad = batch_size - chunk.shape[0]
         if pad:
             chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
-        ids, dist = fn(state, chunk)
+        args = (state, chunk) if live_mask is None else (state, chunk, live_mask)
+        ids, dist = fn(*args)
         ids_out.append(ids if not pad else ids[:-pad])
         dist_out.append(dist if not pad else dist[:-pad])
     return jnp.concatenate(ids_out), jnp.concatenate(dist_out)

@@ -18,6 +18,7 @@ import functools
 import warnings
 
 import jax
+import jax.numpy as jnp
 
 from . import dispatch, ref
 from .dct_mm import dct_mm
@@ -149,3 +150,33 @@ def fused_query_topk(q, db, ids, k: int, p: float = 2.0,
             "memory-bound reference path", stacklevel=2)
         mode = "reference"
     return _fused_query_impl(q, db, ids, k, p, valid_items, mode)
+
+
+# -- cross-segment top-k merge (the streaming serve layer's fan-in) ----------
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_topk_impl(dists, ids, k):
+    d = jnp.where(ids < 0, jnp.inf, dists)
+    # lexicographic (distance, id) sort: deterministic under distance ties,
+    # so a segmented query is bit-reproducible run to run.
+    sd, si = jax.lax.sort((d, ids.astype(jnp.int32)), num_keys=2,
+                          is_stable=True)
+    sd, si = sd[..., :k], si[..., :k]
+    return sd, jnp.where(jnp.isinf(sd), -1, si)
+
+
+def merge_topk(dists, ids, k: int):
+    """Merge per-segment top-k shards into a global top-k.
+
+    dists/ids: (nq, M) where M is the concatenation of every segment's k
+    results (-1 id = empty slot).  Returns (dists (nq, k), ids (nq, k)),
+    ascending by distance, -1/inf padded.  M is tiny (n_segments * k), so a
+    full lexicographic sort beats a tournament tree at every realistic size.
+    """
+    m = ids.shape[-1]
+    if m < k:
+        pad = k - m
+        dists = jnp.pad(dists, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+    return _merge_topk_impl(dists, ids, k)

@@ -1,15 +1,24 @@
-"""Batched serving launcher with the W^2-LSH semantic cache.
+"""Streaming serve launcher: the multi-tenant LSH front end, live.
 
-    python -m repro.launch.serve --arch llama3.2-3b --steps 16 --batch 8
+    python -m repro.launch.serve --steps 60 --insert-batch 64 --query-batch 8
 
-Decodes a batch of synthetic requests; every step the paper's technique runs
-in-path: each sequence's output distribution is embedded (inverse CDF at QMC
-nodes, Eq. 3) and hashed (p-stable, Eq. 5).  The server maintains an LSH
-index over past signatures:
+Drives the repro.serve stack end to end with synthetic function traffic:
 
-* exact signature collisions within a step -> duplicate generation states
-  (compute once, fan out);
-* index hits across steps -> 'seen this state before' (semantic cache).
+* two tenants with different metrics/embedders share one registry --
+  ``l2-basis`` (p=2, truncated Chebyshev-basis embedding, Eq. 3) and
+  ``l1-qmc`` (p=1, QMC node-sample embedding, Eq. 6);
+* every tick, a batch of random functions is embedded and **inserted** into
+  the mutable delta segment while **queries** stream through the
+  micro-batcher's admission queue (deadline flush, padded chunk palette);
+* a fraction of old items is **deleted** (tombstones); when garbage exceeds
+  ``--compact-at`` the tenant is **compacted**;
+* the loop ends with a per-tenant report: QPS, latency percentiles, recall
+  proxy vs exact brute force, segment occupancy, and the jit-shape audit
+  (distinct padded shapes dispatched -- bounded by the chunk palette, NOT by
+  the number of requests).
+
+Optionally ``--snapshot DIR`` checkpoints every tenant at the end and
+``--restore DIR`` starts from a previous snapshot.
 """
 
 import argparse
@@ -17,55 +26,124 @@ import argparse
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3.2-3b")
-    ap.add_argument("--steps", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--cache-len", type=int, default=128)
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--insert-batch", type=int, default=64)
+    ap.add_argument("--query-batch", type=int, default=8)
+    ap.add_argument("--queries-per-step", type=int, default=4)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--n-probes", type=int, default=4)
+    ap.add_argument("--n-dims", type=int, default=64)
+    ap.add_argument("--delete-frac", type=float, default=0.05)
+    ap.add_argument("--compact-at", type=float, default=0.3,
+                    help="compact a tenant when its tombstone fraction "
+                         "exceeds this")
+    ap.add_argument("--segment-capacity", type=int, default=1024)
+    ap.add_argument("--snapshot", default=None, help="write snapshot here")
+    ap.add_argument("--restore", default=None, help="restore snapshot first")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    import jax
-    import jax.numpy as jnp
+    import json
+
     import numpy as np
 
-    from ..configs import smoke_config
-    from ..core import index as lidx
-    from ..models import get_model
-    from ..runtime import steps as rt
+    from ..serve import ServableRegistry, ServableSpec, recall_proxy
+    from ..serve.stats import occupancy_report
 
-    key = jax.random.PRNGKey(0)
-    cfg = smoke_config(args.arch)
-    api = get_model(cfg)
-    params = api.init(key)
-    lsh = rt.LshServeParams.create(jax.random.fold_in(key, 1), cfg,
-                                   n_embed=64, n_hashes=16, r=0.2)
-    serve = jax.jit(rt.make_serve_step(api, cfg, lsh))
+    rng = np.random.default_rng(args.seed)
+    registry = ServableRegistry()
 
-    b = args.batch
-    cache = api.init_cache(b, args.cache_len)
-    # synthetic requests: half duplicated prompts to exercise the dedup path
-    prompts = jnp.asarray(
-        np.random.default_rng(0).integers(0, cfg.vocab_size // 2,
-                                          (b, 1)).repeat(1, 1), jnp.int32)
-    prompts = prompts.at[b // 2:].set(prompts[: b - b // 2])
+    if args.restore:
+        names = registry.restore(args.restore)
+        print(f"[serve] restored tenants {names} from {args.restore}")
+    else:
+        for spec in (
+            ServableSpec(name="l2-basis", n_dims=args.n_dims, p=2.0, r=4.0,
+                         embedder="basis",
+                         segment_capacity=args.segment_capacity,
+                         chunk_sizes=(8, 32, 128), max_delay_ms=2.0),
+            ServableSpec(name="l1-qmc", n_dims=args.n_dims, p=1.0, r=8.0,
+                         embedder="qmc",
+                         segment_capacity=args.segment_capacity,
+                         chunk_sizes=(8, 32, 128), max_delay_ms=2.0),
+        ):
+            registry.register(spec)
+        print(f"[serve] registered tenants {registry.names()}")
 
-    seen: dict = {}
-    dedup_hits = cache_hits = 0
-    toks = prompts
+    def sample_fvals(sv, n):
+        """Random smooth functions sampled at the tenant's node set:
+        mixtures of a few random sines (bounded, infinitely divisible)."""
+        nodes = sv.nodes()
+        amps = rng.normal(size=(n, 3)) / 3.0
+        freqs = rng.uniform(0.5, 4.0, size=(n, 3))
+        phase = rng.uniform(0, 2 * np.pi, size=(n, 3))
+        return np.sum(amps[:, :, None] *
+                      np.sin(freqs[:, :, None] * nodes[None, None, :]
+                             + phase[:, :, None]), axis=1)
+
+    inserted = {name: [] for name in registry.names()}
+    futures = []
+    compactions = {name: 0 for name in registry.names()}
+
     for step in range(args.steps):
-        out, cache = serve(params, cache, toks, jnp.int32(step))
-        sig = np.asarray(out["lsh_sig"])
-        groups: dict = {}
-        for i, row in enumerate(map(tuple, sig)):
-            groups.setdefault(row, []).append(i)
-            if row in seen and seen[row] != step:
-                cache_hits += 1
-            seen[row] = step
-        dedup_hits += sum(len(g) - 1 for g in groups.values())
-        toks = out["next"]
-    total = args.steps * b
-    print(f"[serve] {args.steps} steps x {b} seqs: "
-          f"within-step dedup={dedup_hits}/{total} "
-          f"cross-step cache hits={cache_hits}")
+        for name in registry.names():
+            sv = registry.get(name)
+            # ingest: embed + insert into the delta segment
+            emb = np.asarray(sv.embed(sample_fvals(sv, args.insert_batch)))
+            inserted[name].extend(sv.insert(emb).tolist())
+            # queries: perturbations of known items -> through the admission
+            # queue (several small heterogeneous requests per tick)
+            for _ in range(args.queries_per_step):
+                base = sv.embed(sample_fvals(sv, args.query_batch))
+                qs = np.asarray(base) + rng.normal(
+                    scale=0.05, size=base.shape).astype(np.float32)
+                futures.append(sv.submit_query(qs, args.k, args.n_probes))
+            sv.batcher.pump()
+            # churn: tombstone a slice of the oldest items
+            n_del = int(args.delete_frac * args.insert_batch)
+            if n_del and len(inserted[name]) > 4 * n_del:
+                victims = inserted[name][:n_del]
+                inserted[name] = inserted[name][n_del:]
+                sv.delete(victims)
+            occ = occupancy_report(sv.index)
+            if occ["tombstone_frac"] > args.compact_at:
+                sv.index.compact()
+                compactions[name] += 1
+        if (step + 1) % 20 == 0:
+            done = sum(f.done() for f in futures)
+            print(f"[serve] step {step + 1}/{args.steps}: "
+                  f"{done}/{len(futures)} queries answered")
+
+    for name in registry.names():
+        registry.get(name).batcher.flush_all()
+    n_ok = sum(1 for f in futures if f.done() and f.exception() is None)
+    print(f"[serve] {n_ok}/{len(futures)} query requests answered")
+
+    probe = {}
+    for name in registry.names():
+        sv = registry.get(name)
+        qs = np.asarray(sv.embed(sample_fvals(sv, 16)))
+        probe[name] = round(recall_proxy(sv.index, qs, args.k,
+                                         n_probes=args.n_probes), 3)
+
+    report = registry.report()
+    for name, rep in report.items():
+        occ = rep["occupancy"]
+        print(f"[serve] {name}: live={occ['n_live']}/{occ['n_items']} "
+              f"segments={occ['n_segments']} "
+              f"tombstones={occ['tombstone_frac']:.2f} "
+              f"compactions={compactions[name]} "
+              f"recall_proxy={probe[name]} "
+              f"qps={rep['stats']['qps']} "
+              f"p95={rep['stats']['p95_ms']}ms "
+              f"jit_shapes={rep['batcher']['unique_shapes']}")
+
+    if args.snapshot:
+        registry.snapshot(args.snapshot, step=args.steps)
+        print(f"[serve] snapshot -> {args.snapshot}")
+
+    print("[serve] report:",
+          json.dumps({n: r["stats"] for n, r in report.items()}))
     print("[serve] OK")
 
 

@@ -1,0 +1,32 @@
+"""Streaming serve layer: segmented mutable index + micro-batching + registry.
+
+Layering (each module usable alone):
+
+  segments -- SegmentedIndex: delta/sealed segment lifecycle over core.index
+              (insert / tombstone delete / seal / compact / fan-out query)
+  batcher  -- MicroBatcher: deadline-based admission queue that coalesces
+              heterogeneous requests into a fixed padded chunk palette
+  stats    -- ServingStats / recall_proxy / occupancy_report
+  registry -- ServableSpec / Servable / ServableRegistry: named multi-tenant
+              endpoints with checkpoint snapshot/restore
+
+``python -m repro.launch.serve`` drives the whole stack;
+``benchmarks/bench_serve.py`` measures it.
+"""
+
+from .batcher import MicroBatcher
+from .registry import Servable, ServableRegistry, ServableSpec
+from .segments import Segment, SegmentedIndex
+from .stats import ServingStats, occupancy_report, recall_proxy
+
+__all__ = [
+    "MicroBatcher",
+    "Segment",
+    "SegmentedIndex",
+    "Servable",
+    "ServableRegistry",
+    "ServableSpec",
+    "ServingStats",
+    "occupancy_report",
+    "recall_proxy",
+]

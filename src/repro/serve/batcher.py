@@ -1,0 +1,217 @@
+"""Dynamic micro-batcher: admission control for heterogeneous query traffic.
+
+Serving traffic arrives as many small (nq_i, N) requests with mixed nq.  A
+naive server would jit-compile one program per distinct nq -- a compile storm
+under real traffic.  The batcher instead:
+
+* coalesces requests with the same (k, n_probes) signature into one row
+  buffer (queries are row-independent, so requests can be split and packed
+  freely);
+* flushes when a full chunk's worth of rows is queued **or** the oldest
+  request's deadline (``max_delay_ms``) expires -- the classic
+  latency/throughput dial;
+* pads every flush up to a fixed **chunk palette** (e.g. 8/32/128/512 rows),
+  so the set of traced shapes is bounded by ``len(chunk_sizes)`` per
+  signature forever -- the saxml servable-model discipline of "pick your
+  batch shapes up front".
+
+``shape_counts`` records every padded shape dispatched; the serve benchmark
+asserts its support stays within the palette (jit cache hits, no per-request
+recompiles).
+
+The batcher is synchronous-core + optional pump thread: ``submit`` enqueues
+and returns a Future; ``pump`` (called by the loop thread, or manually in
+tests with an injected clock) decides flushes.  ``flush_all`` drains
+everything regardless of deadlines.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import Counter
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# fn(queries_padded (c, N), k, n_probes) -> (ids (c, k), dists (c, k))
+QueryFn = Callable[[np.ndarray, int, int], Tuple[np.ndarray, np.ndarray]]
+
+
+@dataclass
+class _Pending:
+    queries: np.ndarray
+    k: int
+    n_probes: int
+    deadline: float
+    future: Future = field(default_factory=Future)
+    submitted: float = 0.0
+
+
+class MicroBatcher:
+    """Deadline-driven request coalescer over a fixed chunk-shape palette."""
+
+    def __init__(self, query_fn: QueryFn, *,
+                 chunk_sizes: Sequence[int] = (8, 32, 128),
+                 max_delay_ms: float = 5.0,
+                 clock: Callable[[], float] = time.monotonic,
+                 on_batch: Optional[Callable[[int, int, float], None]] = None):
+        if not chunk_sizes or sorted(chunk_sizes) != list(chunk_sizes):
+            raise ValueError("chunk_sizes must be ascending and non-empty")
+        self.query_fn = query_fn
+        self.chunk_sizes = tuple(int(c) for c in chunk_sizes)
+        self.max_delay = max_delay_ms / 1e3
+        self.clock = clock
+        self.on_batch = on_batch            # (rows_real, rows_padded, dt)
+        self.shape_counts: Counter = Counter()   # (chunk, k, n_probes) -> n
+        self.n_requests = 0
+        self.n_batches = 0
+        self._q: Dict[Tuple[int, int], List[_Pending]] = {}
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, queries, k: int, n_probes: int = 1) -> Future:
+        """Enqueue a (nq, N) request; resolves to (ids (nq, k), dists)."""
+        q = np.asarray(queries, np.float32)
+        if q.ndim != 2:
+            raise ValueError(f"expected (nq, N) queries, got {q.shape}")
+        now = self.clock()
+        req = _Pending(queries=q, k=int(k), n_probes=int(n_probes),
+                       deadline=now + self.max_delay, submitted=now)
+        with self._wake:
+            self._q.setdefault((req.k, req.n_probes), []).append(req)
+            self.n_requests += 1
+            self._wake.notify()
+        return req.future
+
+    def query(self, queries, k: int, n_probes: int = 1):
+        """Synchronous convenience: submit + flush everything + wait."""
+        fut = self.submit(queries, k, n_probes)
+        self.flush_all()
+        return fut.result()
+
+    # -- flush machinery ----------------------------------------------------
+
+    def _chunk_for(self, rows: int) -> int:
+        for c in self.chunk_sizes:
+            if rows <= c:
+                return c
+        return self.chunk_sizes[-1]
+
+    def pump(self, now: Optional[float] = None, force: bool = False) -> int:
+        """Flush every signature whose deadline passed or buffer filled.
+        Returns the number of batches dispatched."""
+        now = self.clock() if now is None else now
+        max_chunk = self.chunk_sizes[-1]
+        todo: List[Tuple[Tuple[int, int], List[_Pending]]] = []
+        with self._lock:
+            for key, reqs in self._q.items():
+                if not reqs:
+                    continue
+                rows = sum(r.queries.shape[0] for r in reqs)
+                if force or rows >= max_chunk or reqs[0].deadline <= now:
+                    todo.append((key, reqs))
+                    self._q[key] = []
+        n = 0
+        for key, reqs in todo:
+            n += self._dispatch(key, reqs)
+        return n
+
+    def flush_all(self) -> int:
+        return self.pump(force=True)
+
+    def _dispatch(self, key: Tuple[int, int], reqs: List[_Pending]) -> int:
+        """Pack requests' rows into palette chunks, run, scatter back.
+
+        Any failure (a malformed request poisoning the concatenate, the
+        query fn itself) is routed to every stranded Future -- a batch may
+        die, the batcher never does.
+        """
+        k, n_probes = key
+        batches = 0
+        try:
+            rows = np.concatenate([r.queries for r in reqs])
+            total = rows.shape[0]
+            n_dims = rows.shape[1]
+            max_chunk = self.chunk_sizes[-1]
+            outs_i, outs_d = [], []
+            pos = 0
+            while pos < total:
+                take = min(max_chunk, total - pos)
+                chunk = self._chunk_for(take)
+                buf = np.zeros((chunk, n_dims), np.float32)
+                buf[:take] = rows[pos:pos + take]
+                t0 = self.clock()
+                ids, dists = self.query_fn(buf, k, n_probes)
+                self.shape_counts[(chunk, k, n_probes)] += 1
+                self.n_batches += 1
+                batches += 1
+                if self.on_batch is not None:
+                    self.on_batch(take, chunk, self.clock() - t0)
+                outs_i.append(np.asarray(ids)[:take])
+                outs_d.append(np.asarray(dists)[:take])
+                pos += take
+            all_i = np.concatenate(outs_i)
+            all_d = np.concatenate(outs_d)
+        except Exception as e:
+            for r in reqs:
+                if not r.future.done():
+                    r.future.set_exception(e)
+            return batches
+        pos = 0
+        for r in reqs:
+            m = r.queries.shape[0]
+            r.future.set_result((all_i[pos:pos + m], all_d[pos:pos + m]))
+            pos += m
+        return batches
+
+    # -- background pump ----------------------------------------------------
+
+    def start(self) -> "MicroBatcher":
+        if self._thread is not None:
+            return self
+        self._stop = False
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        with self._wake:
+            self._stop = True
+            self._wake.notify()
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self.flush_all()
+
+    def _loop(self) -> None:
+        tick = max(self.max_delay / 4, 1e-4)
+        while True:
+            with self._wake:
+                if self._stop:
+                    return
+                if not any(self._q.values()):
+                    self._wake.wait(timeout=0.05)
+            try:
+                self.pump()
+            except Exception:
+                # _dispatch already routed the error to the affected
+                # futures; the pump thread must survive to serve the rest
+                pass
+            time.sleep(tick)
+
+    # -- introspection ------------------------------------------------------
+
+    def unique_shapes(self) -> int:
+        """Distinct padded (chunk, k, n_probes) programs dispatched so far."""
+        return len(self.shape_counts)
+
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._q.values())

@@ -1,0 +1,251 @@
+"""Multi-tenant servable registry: named endpoints over segmented indexes.
+
+saxml-style separation of concerns: a **ServableSpec** is the declarative
+unit of deployment (hash-family knobs p/r/L/K, the function->R^N embedder,
+segment sizing, batching palette); a **Servable** is the live instance
+(segmented index + micro-batcher + stats); the **ServableRegistry** maps
+names to servables and owns snapshot/restore.
+
+Per-tenant configs are the point: the paper's family covers p in {1, 2}
+and both embedding constructions (truncated orthonormal basis, Sec. 3.1 /
+Eq. 3, vs (Q)MC node sampling, Sec. 3.2 / Eq. 6), and "Efficient ANN Search
+for Multiple Weighted l_p Distance Functions" needs *several* metrics live
+at once -- so each tenant picks its own and the admission front end stays
+shared.
+
+Snapshots go through checkpoint/ (atomic rename, keep-last-k, manifest) --
+arrays in the pytree payload, host bookkeeping (specs, fill counters, gid
+maps are reconstructed from the gid arrays) in the manifest's ``extra``
+dict.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import checkpoint as ckpt
+from ..core import basis, montecarlo
+from ..core.index import IndexConfig, LSHIndexState
+from .batcher import MicroBatcher
+from .segments import Segment, SegmentedIndex
+from .stats import ServingStats, occupancy_report
+
+EMBEDDERS = ("basis", "qmc")
+
+
+@dataclasses.dataclass(frozen=True)
+class ServableSpec:
+    """Declarative tenant config (everything needed to rebuild the endpoint)."""
+
+    name: str
+    n_dims: int = 64
+    p: float = 2.0                 # l_p of the p-stable family (1 or 2)
+    r: float = 1.0                 # quantisation width (Eq. 5)
+    n_tables: int = 8
+    n_hashes: int = 4
+    log2_buckets: int = 10
+    bucket_capacity: int = 32
+    embedder: str = "basis"        # "basis" (Eq. 3) | "qmc" (Eq. 6)
+    volume: float = 1.0            # domain volume for the MC embedding
+    segment_capacity: int = 1024
+    insert_chunk: int = 256
+    chunk_sizes: Tuple[int, ...] = (8, 32, 128)
+    max_delay_ms: float = 5.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.embedder not in EMBEDDERS:
+            raise ValueError(f"embedder must be one of {EMBEDDERS}")
+
+    def index_config(self) -> IndexConfig:
+        return IndexConfig(n_dims=self.n_dims, n_tables=self.n_tables,
+                           n_hashes=self.n_hashes,
+                           log2_buckets=self.log2_buckets,
+                           bucket_capacity=self.bucket_capacity,
+                           r=self.r, p=self.p)
+
+
+class Servable:
+    """A live endpoint: embedder + segmented index + batcher + stats."""
+
+    def __init__(self, spec: ServableSpec, *, backend: Optional[str] = None):
+        self.spec = spec
+        self.index = SegmentedIndex(spec.index_config(),
+                                    segment_capacity=spec.segment_capacity,
+                                    insert_chunk=spec.insert_chunk,
+                                    key=jax.random.PRNGKey(spec.seed),
+                                    backend=backend)
+        self.stats = ServingStats()
+        self.batcher = MicroBatcher(self._raw_query,
+                                    chunk_sizes=spec.chunk_sizes,
+                                    max_delay_ms=spec.max_delay_ms,
+                                    on_batch=self.stats.record_batch)
+
+    # -- data plane ---------------------------------------------------------
+
+    def embed(self, fvals) -> jnp.ndarray:
+        """Function samples (B, n_dims) at the tenant's node set -> R^n_dims
+        embeddings under the tenant's construction."""
+        fvals = jnp.asarray(fvals, jnp.float32)
+        if self.spec.embedder == "basis":
+            return basis.cheb_l2_coeffs(fvals)
+        return montecarlo.mc_embedding(fvals, self.spec.volume, p=self.spec.p)
+
+    def nodes(self) -> np.ndarray:
+        """Where to sample functions for ``embed`` (tenant's shared node set)."""
+        if self.spec.embedder == "basis":
+            return np.asarray(basis.cheb_nodes(self.spec.n_dims))
+        return np.asarray(montecarlo.qmc_nodes(self.spec.n_dims))[:, 0]
+
+    def insert(self, embeddings, gids=None) -> np.ndarray:
+        out = self.index.insert(embeddings, gids=gids)
+        self.stats.record_insert(len(out))
+        return out
+
+    def delete(self, gids) -> int:
+        n = self.index.delete(gids)
+        self.stats.record_delete(n)
+        return n
+
+    def _raw_query(self, queries, k: int, n_probes: int):
+        g, d = self.index.query(queries, k, n_probes=n_probes)
+        return np.asarray(g), np.asarray(d)
+
+    def submit_query(self, queries, k: int, n_probes: int = 1):
+        """Admission-queue path: returns a Future of (gids, dists)."""
+        return self.batcher.submit(queries, k, n_probes)
+
+    def query(self, queries, k: int, n_probes: int = 1):
+        """Synchronous path (still batched/padded through the admission
+        queue, so it shares the same compiled shapes as async traffic)."""
+        return self.batcher.query(queries, k, n_probes)
+
+    def report(self) -> dict:
+        return {"spec": dataclasses.asdict(self.spec),
+                "stats": self.stats.snapshot(),
+                "batcher": {"unique_shapes": self.batcher.unique_shapes(),
+                            "n_batches": self.batcher.n_batches,
+                            "n_requests": self.batcher.n_requests},
+                "occupancy": occupancy_report(self.index)}
+
+
+class ServableRegistry:
+    """Name -> Servable map with snapshot/restore through checkpoint/."""
+
+    def __init__(self, *, backend: Optional[str] = None):
+        self._servables: Dict[str, Servable] = {}
+        self._backend = backend
+        self._lock = threading.Lock()
+
+    def register(self, spec: ServableSpec) -> Servable:
+        with self._lock:
+            if spec.name in self._servables:
+                raise ValueError(f"servable {spec.name!r} already registered")
+            sv = Servable(spec, backend=self._backend)
+            self._servables[spec.name] = sv
+            return sv
+
+    def get(self, name: str) -> Servable:
+        try:
+            return self._servables[name]
+        except KeyError:
+            raise KeyError(f"no servable {name!r}; have {self.names()}")
+
+    def unregister(self, name: str) -> None:
+        with self._lock:
+            sv = self._servables.pop(name, None)
+            if sv is not None:
+                sv.batcher.stop()
+
+    def names(self) -> List[str]:
+        return sorted(self._servables)
+
+    def report(self) -> dict:
+        return {name: sv.report() for name, sv in sorted(
+            self._servables.items())}
+
+    # -- persistence --------------------------------------------------------
+
+    def snapshot(self, root: str, step: int = 0, keep: int = 3) -> str:
+        """Atomic per-tenant checkpoints under ``root/<name>/step_*``."""
+        for name, sv in self._servables.items():
+            idx = sv.index
+            # capture under the index lock so the array payload and the
+            # host-side counters describe the same instant (a concurrent
+            # insert must not land between them)
+            with idx._lock:
+                tree = {"segments": [
+                    {"state": seg.state, "gids": seg.gids, "live": seg.live}
+                    for seg in idx.segments]}
+                extra = {
+                    "spec": dataclasses.asdict(sv.spec),
+                    "next_gid": idx._next_gid,
+                    "segments": [{"n_items": s.n_items, "n_live": s.n_live,
+                                  "sealed": s.sealed} for s in idx.segments],
+                }
+            ckpt.save(os.path.join(root, name), step, tree, keep=keep,
+                      extra=extra)
+        return root
+
+    def restore(self, root: str, step: Optional[int] = None) -> List[str]:
+        """Load every tenant checkpoint under ``root`` into this registry.
+        Returns the restored names."""
+        restored = []
+        for name in sorted(os.listdir(root)):
+            tdir = os.path.join(root, name)
+            if not os.path.isdir(tdir):
+                continue
+            s = ckpt.latest_step(tdir) if step is None else step
+            if s is None:
+                continue
+            extra = ckpt.load_extra(tdir, s)
+            spec = ServableSpec(**{**extra["spec"],
+                                   "chunk_sizes": tuple(
+                                       extra["spec"]["chunk_sizes"])})
+            sv = self.register(spec)
+            idx = sv.index
+            cfg = spec.index_config()
+            cap = spec.segment_capacity
+            lk = spec.n_tables * spec.n_hashes
+            seg_meta = extra["segments"]
+            seg_struct = {
+                "state": LSHIndexState(
+                    alpha=jax.ShapeDtypeStruct((spec.n_dims, lk), jnp.float32),
+                    b=jax.ShapeDtypeStruct((lk,), jnp.float32),
+                    mix=jax.ShapeDtypeStruct((spec.n_tables, spec.n_hashes),
+                                             jnp.uint32),
+                    table=jax.ShapeDtypeStruct(
+                        (spec.n_tables, cfg.n_buckets, spec.bucket_capacity),
+                        jnp.int32),
+                    counts=jax.ShapeDtypeStruct(
+                        (spec.n_tables, cfg.n_buckets), jnp.int32),
+                    db=jax.ShapeDtypeStruct((cap, spec.n_dims), jnp.float32)),
+                "gids": jax.ShapeDtypeStruct((cap,), jnp.int32),
+                "live": jax.ShapeDtypeStruct((cap,), jnp.bool_),
+            }
+            target = {"segments": [seg_struct for _ in seg_meta]}
+            tree = ckpt.restore(tdir, s, target)
+            idx.segments = []
+            idx._locator = {}
+            for si, (payload, meta) in enumerate(zip(tree["segments"],
+                                                     seg_meta)):
+                seg = Segment(state=payload["state"], gids=payload["gids"],
+                              live=payload["live"], n_items=meta["n_items"],
+                              n_live=meta["n_live"], sealed=meta["sealed"])
+                idx.segments.append(seg)
+                g = np.asarray(seg.gids)[:seg.n_items]
+                for slot, gid in enumerate(g.tolist()):
+                    idx._locator[int(gid)] = (si, slot)
+            idx.family = (idx.segments[0].state.alpha,
+                          idx.segments[0].state.b,
+                          idx.segments[0].state.mix)
+            idx._next_gid = extra["next_gid"]
+            restored.append(name)
+        return restored

@@ -1,0 +1,317 @@
+"""Segmented mutable LSH index: the streaming lifecycle over core/index.
+
+core/index is deliberately build-once (static shapes, jit-friendly).  This
+module turns it into a *living* index the way LSM storage engines do:
+
+* one mutable **delta** segment absorbs inserts via the incremental
+  ``insert_items`` path (fixed-size padded chunks -> one compiled program for
+  every insert, ever);
+* when the delta reaches ``segment_capacity`` it is **sealed** -- sealing is
+  free because incremental inserts maintain a valid LSH table at all times;
+* **deletes** are tombstones: a per-segment live mask consulted at query time
+  (``query_index(..., live_mask=...)``), never a structural mutation;
+* **compact()** folds every live item into fresh segments (dropping
+  tombstones and re-packing buckets), using the same incremental-insert
+  program -- no new compilation;
+* **query()** fans out to all segments and merges per-segment top-k via
+  ``kernels.ops.merge_topk``.
+
+Every segment shares ONE hash family (``create_index(family=...)``), so an
+item's bucket ids are independent of which segment holds it.  Consequence
+(verified by tests/test_serve.py): as long as no bucket overflows its
+capacity, a cross-segment query returns ids *bit-identical* to a single
+``build_index`` over the union of live items -- segmentation is invisible to
+callers.
+
+All segments share the same (capacity, cfg) shapes, so the per-segment query
+program is compiled once and reused for every segment and every insert-order
+history.  Host-side bookkeeping (gid maps, live masks) is numpy; device state
+is the ``LSHIndexState`` pytree plus a (capacity,) gid vector and live mask.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import threading
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import index as lidx
+from ..core.index import IndexConfig, LSHIndexState
+from ..kernels import dispatch, ops
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Segment:
+    """One shard of the segmented index (sealed or delta)."""
+
+    state: LSHIndexState          # device pytree (table/counts/db + family)
+    gids: Array                   # (capacity,) int32 global id per slot
+    live: Array                   # (capacity,) bool, False = tombstoned
+    n_items: int = 0              # slots used (including tombstoned)
+    n_live: int = 0               # live items
+    sealed: bool = False
+
+    @property
+    def capacity(self) -> int:
+        return self.gids.shape[0]
+
+    def occupancy(self) -> dict:
+        cap = self.capacity
+        return {
+            "n_items": self.n_items,
+            "n_live": self.n_live,
+            "capacity": cap,
+            "fill": self.n_items / cap,
+            "tombstone_frac": ((self.n_items - self.n_live) / self.n_items
+                               if self.n_items else 0.0),
+            "sealed": self.sealed,
+        }
+
+
+@functools.lru_cache(maxsize=64)
+def _segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
+                      backend: Optional[str]):
+    """One compiled program per (cfg, k, n_probes, backend): query a segment
+    and translate local slot ids to global ids.  Shared by ALL segments of
+    all indexes with the same config, so segment count never multiplies
+    compilations."""
+
+    def f(state: LSHIndexState, q: Array, live: Array, gids: Array):
+        ids, dist = lidx.query_index(state, cfg, q, k, n_probes=n_probes,
+                                     backend=backend, live_mask=live)
+        g = jnp.where(ids >= 0, gids[jnp.clip(ids, 0, gids.shape[0] - 1)], -1)
+        return g, dist
+
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=64)
+def _segment_insert_fn(cfg: IndexConfig, chunk: int):
+    """One compiled incremental-insert program per (cfg, chunk shape)."""
+
+    def f(state: LSHIndexState, emb: Array, start, n_valid):
+        return lidx.insert_items(state, cfg, emb, start, n_valid)
+
+    return jax.jit(f)
+
+
+class SegmentedIndex:
+    """Mutable, queryable, compactable index built from fixed-shape segments.
+
+    Thread-safety: mutators and query take an internal lock; queries
+    themselves are pure jax calls, so readers only contend for the brief
+    host-side fan-out loop (the micro-batcher serialises heavy traffic
+    anyway).
+    """
+
+    def __init__(self, cfg: IndexConfig, *, segment_capacity: int = 1024,
+                 insert_chunk: int = 256, key: Optional[jax.Array] = None,
+                 backend: Optional[str] = None, seed: int = 0):
+        if insert_chunk > segment_capacity:
+            insert_chunk = segment_capacity
+        self.cfg = cfg
+        self.segment_capacity = int(segment_capacity)
+        self.insert_chunk = int(insert_chunk)
+        # Resolve once: a raw None would bake the first call's platform
+        # default into lru_cache keys (see core.index.query_index_batched).
+        self.backend = dispatch.query_backend(backend)
+        key = jax.random.PRNGKey(seed) if key is None else key
+        self.family = lidx.make_family(key, cfg)
+        self.segments: List[Segment] = []
+        self._locator: dict = {}          # gid -> (segment index, slot)
+        self._next_gid = 0
+        self._lock = threading.RLock()
+        # distinct query batch shapes seen -- the serve bench asserts this
+        # stays bounded by the batcher's chunk palette (no per-request traces)
+        self.query_shapes: set = set()
+        self._open_segment()
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def _open_segment(self) -> Segment:
+        state = lidx.create_index(jax.random.PRNGKey(0), self.cfg,
+                                  self.segment_capacity, family=self.family)
+        seg = Segment(state=state,
+                      gids=jnp.full((self.segment_capacity,), -1, jnp.int32),
+                      live=jnp.zeros((self.segment_capacity,), jnp.bool_))
+        self.segments.append(seg)
+        return seg
+
+    @property
+    def delta(self) -> Segment:
+        return self.segments[-1]
+
+    @property
+    def n_live(self) -> int:
+        return sum(s.n_live for s in self.segments)
+
+    @property
+    def n_items(self) -> int:
+        return sum(s.n_items for s in self.segments)
+
+    def seal(self) -> None:
+        """Seal the current delta (no-op if empty) and open a fresh one."""
+        with self._lock:
+            if self.delta.n_items == 0:
+                return
+            self.delta.sealed = True
+            self._open_segment()
+
+    # -- mutation -----------------------------------------------------------
+
+    def insert(self, embeddings, gids: Optional[Sequence[int]] = None
+               ) -> np.ndarray:
+        """Insert (m, N) embeddings; returns their global ids (int32).
+
+        Splits across segment boundaries automatically; sealing happens when
+        the delta fills.  Every device call is a fixed (insert_chunk, N)
+        padded program.
+        """
+        emb = np.asarray(embeddings, np.float32)
+        if emb.ndim != 2 or emb.shape[1] != self.cfg.n_dims:
+            raise ValueError(f"expected (m, {self.cfg.n_dims}), got {emb.shape}")
+        m = emb.shape[0]
+        with self._lock:
+            # gid allocation + uniqueness checks must sit inside the lock or
+            # two concurrent inserts hand out the same id range
+            if gids is None:
+                out_gids = np.arange(self._next_gid, self._next_gid + m,
+                                     dtype=np.int32)
+            else:
+                out_gids = np.asarray(list(gids), np.int32)
+                if out_gids.shape != (m,):
+                    raise ValueError("gids length must match embeddings")
+                if m and out_gids.min() < 0:
+                    raise ValueError("gids must be >= 0 (-1 is the "
+                                     "empty-slot sentinel)")
+                if np.unique(out_gids).size != m:
+                    raise ValueError("duplicate gids within one insert")
+                dup = [g for g in out_gids.tolist() if g in self._locator]
+                if dup:
+                    raise ValueError(f"gids already present: {dup[:5]}")
+            self._next_gid = max(self._next_gid, int(out_gids.max()) + 1 if m else
+                                 self._next_gid)
+            ins = _segment_insert_fn(self.cfg, self.insert_chunk)
+            pos = 0
+            while pos < m:
+                seg = self.delta
+                room = seg.capacity - seg.n_items
+                if room == 0:
+                    self.seal()
+                    continue
+                take = min(m - pos, room, self.insert_chunk)
+                chunk = np.zeros((self.insert_chunk, self.cfg.n_dims),
+                                 np.float32)
+                chunk[:take] = emb[pos:pos + take]
+                seg.state = ins(seg.state, jnp.asarray(chunk),
+                                jnp.int32(seg.n_items), jnp.int32(take))
+                sl = jnp.arange(seg.n_items, seg.n_items + take)
+                seg.gids = seg.gids.at[sl].set(
+                    jnp.asarray(out_gids[pos:pos + take]))
+                seg.live = seg.live.at[sl].set(True)
+                si = len(self.segments) - 1
+                for j in range(take):
+                    self._locator[int(out_gids[pos + j])] = (si, seg.n_items + j)
+                seg.n_items += take
+                seg.n_live += take
+                pos += take
+        return out_gids
+
+    def delete(self, gids: Sequence[int]) -> int:
+        """Tombstone items by global id; returns how many were live."""
+        with self._lock:
+            by_seg: dict = {}
+            for g in np.asarray(gids).ravel().tolist():
+                loc = self._locator.get(int(g))
+                if loc is None:
+                    continue
+                # a set per segment: duplicate gids in one call must not
+                # double-decrement n_live for a single slot
+                by_seg.setdefault(loc[0], set()).add(loc[1])
+            n = 0
+            for si, slot_set in by_seg.items():
+                slots = sorted(slot_set)
+                seg = self.segments[si]
+                sl = jnp.asarray(slots, jnp.int32)
+                was_live = np.asarray(seg.live)[slots]
+                seg.live = seg.live.at[sl].set(False)
+                hits = int(was_live.sum())
+                seg.n_live -= hits
+                n += hits
+            return n
+
+    def live_items(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Host copies of every live item: (embeddings (n_live, N),
+        gids (n_live,)).  The one canonical live-set gather -- compaction
+        and the stats recall proxy both read through it."""
+        with self._lock:
+            emb_parts, gid_parts = [], []
+            for seg in self.segments:
+                if seg.n_items == 0:
+                    continue
+                live = np.asarray(seg.live)[:seg.n_items]
+                if not live.any():
+                    continue
+                emb_parts.append(np.asarray(seg.state.db)[:seg.n_items][live])
+                gid_parts.append(np.asarray(seg.gids)[:seg.n_items][live])
+        if not emb_parts:
+            return (np.zeros((0, self.cfg.n_dims), np.float32),
+                    np.zeros((0,), np.int32))
+        return np.concatenate(emb_parts), np.concatenate(gid_parts)
+
+    def compact(self) -> int:
+        """Rebuild live items into freshly-packed segments (tombstones and
+        bucket-overflow shadows are dropped; gids are preserved).  Returns
+        the number of segments after compaction."""
+        with self._lock:
+            emb, gid = self.live_items()
+            self.segments = []
+            self._locator = {}
+            self._open_segment()
+            if len(gid):
+                order = np.argsort(gid, kind="stable")   # insertion order
+                self.insert(emb[order], gids=gid[order])
+            return len(self.segments)
+
+    # -- query --------------------------------------------------------------
+
+    def query(self, queries, k: int, n_probes: int = 1
+              ) -> Tuple[Array, Array]:
+        """Cross-segment k-NN: (nq, N) -> (gids (nq, k), dists (nq, k)).
+
+        Fans out one fused-kernel query per non-empty segment (identical
+        shapes -> one compiled program total) and merges the per-segment
+        top-k shards with ``ops.merge_topk``.
+        """
+        q = jnp.asarray(queries, jnp.float32)
+        with self._lock:
+            segs = [s for s in self.segments if s.n_live > 0]
+            fn = _segment_query_fn(self.cfg, k, n_probes, self.backend)
+            self.query_shapes.add((int(q.shape[0]), k, n_probes))
+            shards = [fn(s.state, q, s.live, s.gids) for s in segs]
+        if not shards:
+            return (jnp.full((q.shape[0], k), -1, jnp.int32),
+                    jnp.full((q.shape[0], k), jnp.inf, jnp.float32))
+        if len(shards) == 1:
+            g, d = shards[0]
+            # single segment is already top-k; merge only to normalise tie
+            # order so results don't depend on the segment count
+            return _merged(d, g, k)
+        g_all = jnp.concatenate([g for g, _ in shards], axis=1)
+        d_all = jnp.concatenate([d for _, d in shards], axis=1)
+        return _merged(d_all, g_all, k)
+
+    def occupancy(self) -> List[dict]:
+        return [s.occupancy() for s in self.segments]
+
+
+def _merged(dists: Array, gids: Array, k: int) -> Tuple[Array, Array]:
+    d, g = ops.merge_topk(dists, gids, k)
+    return g, d

@@ -1,0 +1,138 @@
+"""Serving statistics: QPS, latency percentiles, recall proxy, occupancy.
+
+Host-side, lock-guarded, allocation-light: a bounded deque of (t, n) events
+for the rate windows and a bounded latency reservoir for percentiles.  The
+recall proxy periodically replays a small probe set through both the
+segmented index and an exact brute-force scan over the live items -- the
+serving-time analogue of the benchmark-time ``recall_at_k`` -- so operators
+can see quality drift as segments churn (e.g. bucket overflow after many
+compact-free inserts).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import numpy as np
+
+from ..core import index as lidx
+
+
+class ServingStats:
+    """Sliding-window rates + latency reservoir for one servable."""
+
+    def __init__(self, *, window_s: float = 10.0, reservoir: int = 4096,
+                 clock: Callable[[], float] = time.monotonic):
+        self.window = window_s
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._queries: deque = deque()       # (t, n_queries)
+        self._inserts: deque = deque()
+        self._deletes: deque = deque()
+        self._lat = np.zeros((reservoir,), np.float64)
+        self._lat_n = 0                       # total recorded (ring index)
+        self.totals = {"queries": 0, "inserts": 0, "deletes": 0, "batches": 0}
+
+    def _trim(self, dq: deque, now: float) -> None:
+        while dq and dq[0][0] < now - self.window:
+            dq.popleft()
+
+    def record_query(self, n: int, latency_s: Optional[float] = None) -> None:
+        now = self.clock()
+        with self._lock:
+            self._queries.append((now, n))
+            self._trim(self._queries, now)
+            self.totals["queries"] += n
+            if latency_s is not None:
+                self._lat[self._lat_n % self._lat.shape[0]] = latency_s
+                self._lat_n += 1
+
+    def record_batch(self, rows_real: int, rows_padded: int,
+                     latency_s: float) -> None:
+        self.record_query(rows_real, latency_s)
+        with self._lock:
+            self.totals["batches"] += 1
+
+    def record_insert(self, n: int) -> None:
+        now = self.clock()
+        with self._lock:
+            self._inserts.append((now, n))
+            self._trim(self._inserts, now)
+            self.totals["inserts"] += n
+
+    def record_delete(self, n: int) -> None:
+        now = self.clock()
+        with self._lock:
+            self._deletes.append((now, n))
+            self._trim(self._deletes, now)
+            self.totals["deletes"] += n
+
+    def _rate(self, dq: deque) -> float:
+        now = self.clock()
+        with self._lock:
+            self._trim(dq, now)
+            if not dq:
+                return 0.0
+            span = max(now - dq[0][0], 1e-9)
+            return sum(n for _, n in dq) / span
+
+    def qps(self) -> float:
+        return self._rate(self._queries)
+
+    def insert_rate(self) -> float:
+        return self._rate(self._inserts)
+
+    def latency_percentiles(self) -> dict:
+        with self._lock:
+            n = min(self._lat_n, self._lat.shape[0])
+            if n == 0:
+                return {"p50_ms": 0.0, "p95_ms": 0.0, "p99_ms": 0.0}
+            lat = np.sort(self._lat[:n]) * 1e3
+        return {"p50_ms": float(np.percentile(lat, 50)),
+                "p95_ms": float(np.percentile(lat, 95)),
+                "p99_ms": float(np.percentile(lat, 99))}
+
+    def snapshot(self) -> dict:
+        return {"qps": round(self.qps(), 2),
+                "insert_rate": round(self.insert_rate(), 2),
+                **{k: round(v, 3) for k, v in
+                   self.latency_percentiles().items()},
+                "totals": dict(self.totals)}
+
+
+def recall_proxy(segmented, queries, k: int, n_probes: int = 1) -> float:
+    """Recall@k of the segmented index vs exact brute force over its live
+    items.  O(n_live * nq) -- run on a small sampled probe set."""
+    emb, gid = segmented.live_items()
+    if emb.shape[0] == 0:
+        return 1.0
+    kk = min(k, emb.shape[0])
+    eids, _ = lidx.brute_force_topk(emb, np.asarray(queries, np.float32), kk,
+                                    p=segmented.cfg.p)
+    exact_gids = gid[np.asarray(eids)]
+    got, _ = segmented.query(queries, k, n_probes=n_probes)
+    got = np.asarray(got)[:, :, None]
+    hit = (got == exact_gids[:, None, :]).any(axis=1)
+    return float(hit.mean())
+
+
+def occupancy_report(segmented) -> dict:
+    """Aggregate segment occupancy for dashboards / bench output."""
+    per_seg = segmented.occupancy()
+    n_items = sum(s["n_items"] for s in per_seg)
+    n_live = sum(s["n_live"] for s in per_seg)
+    counts = [np.asarray(seg.state.counts) for seg in segmented.segments
+              if seg.n_items]
+    over = 0.0
+    if counts:
+        cap = segmented.cfg.bucket_capacity
+        over = float(np.mean([(c > cap).mean() for c in counts]))
+    return {"n_segments": len(per_seg),
+            "n_items": n_items,
+            "n_live": n_live,
+            "tombstone_frac": (n_items - n_live) / n_items if n_items else 0.0,
+            "bucket_overflow_frac": over,
+            "segments": per_seg}

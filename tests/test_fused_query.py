@@ -91,6 +91,71 @@ def test_batched_query_matches_unbatched(rng_key):
                                np.asarray(dists)[fin], atol=1e-6)
 
 
+def _assert_batched_parity(state, cfg, q, k, batch_size, **kw):
+    ids, dists = lidx.query_index(state, cfg, q, k, **kw)
+    ids_b, dists_b = lidx.query_index_batched(state, cfg, q, k,
+                                              batch_size=batch_size, **kw)
+    assert ids_b.shape == (q.shape[0], k)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids_b))
+    d, db_ = np.asarray(dists), np.asarray(dists_b)
+    fin = np.isfinite(d)
+    assert (fin == np.isfinite(db_)).all()
+    np.testing.assert_allclose(db_[fin], d[fin], atol=1e-6)
+
+
+def test_batched_query_ragged_last_chunk(rng_key):
+    """nq not divisible by batch_size: the zero-padded tail chunk must not
+    leak padding rows or corrupt real results."""
+    cfg, db, state = _build(rng_key)
+    q = jax.random.normal(jax.random.fold_in(rng_key, 4), (21, 32))
+    _assert_batched_parity(state, cfg, q, 5, batch_size=8, n_probes=2)
+    # pad rows are all-zeros queries; a pathological all-zero real query in
+    # the ragged chunk must still round-trip
+    q0 = q.at[20].set(0.0)
+    _assert_batched_parity(state, cfg, q0, 5, batch_size=8, n_probes=2)
+
+
+def test_batched_query_smaller_than_one_chunk(rng_key):
+    """nq < batch_size delegates to the unbatched path, shapes intact."""
+    cfg, db, state = _build(rng_key)
+    q = jax.random.normal(jax.random.fold_in(rng_key, 5), (3, 32))
+    _assert_batched_parity(state, cfg, q, 5, batch_size=64, n_probes=2)
+    # exact multiple boundary: nq == batch_size (no pad chunk at all)
+    q16 = jax.random.normal(jax.random.fold_in(rng_key, 6), (16, 32))
+    _assert_batched_parity(state, cfg, q16, 5, batch_size=16, n_probes=2)
+
+
+def test_batched_query_empty_index(rng_key):
+    """All buckets empty (create without build): every id must be -1 with
+    +inf distance, identically in batched and unbatched paths."""
+    cfg = lidx.IndexConfig(n_dims=32, n_tables=4, n_hashes=4, log2_buckets=9,
+                           bucket_capacity=16, r=2.0)
+    state = lidx.create_index(rng_key, cfg, 512)   # no build_index
+    q = jax.random.normal(jax.random.fold_in(rng_key, 7), (21, 32))
+    for bs in (8, 64):
+        ids_b, dists_b = lidx.query_index_batched(state, cfg, q, 5,
+                                                  n_probes=2, batch_size=bs)
+        assert np.all(np.asarray(ids_b) == -1)
+        assert np.all(np.isinf(np.asarray(dists_b)))
+    _assert_batched_parity(state, cfg, q, 5, batch_size=8, n_probes=2)
+
+
+def test_batched_query_live_mask(rng_key):
+    """live_mask flows through the batched path (chunked + delegated)."""
+    cfg, db, state = _build(rng_key)
+    q = jax.random.normal(jax.random.fold_in(rng_key, 8), (21, 32))
+    dead = np.zeros(512, bool)
+    dead[::3] = True
+    mask = jnp.asarray(~dead)
+    for bs in (8, 64):
+        ids_b, _ = lidx.query_index_batched(state, cfg, q, 5, n_probes=2,
+                                            batch_size=bs, live_mask=mask)
+        got = np.asarray(ids_b)
+        assert not np.isin(got[got >= 0], np.flatnonzero(dead)).any()
+    _assert_batched_parity(state, cfg, q, 5, batch_size=8, n_probes=2,
+                           live_mask=mask)
+
+
 def test_hash_proj_kernel_matches_reference(rng_key):
     """The multi-probe pair (hashes, projections) from the kernel epilogue."""
     x = jax.random.normal(jax.random.fold_in(rng_key, 1), (33, 48))

@@ -19,8 +19,8 @@ pytestmark = []
 
 
 def _mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro import compat
+    return compat.make_mesh((1, 1), ("data", "model"))
 
 
 class _FakeMesh:

@@ -25,9 +25,9 @@ def _run(code: str, timeout=560) -> str:
 def test_distributed_index_matches_single_device():
     stdout = _run("""
         import jax, jax.numpy as jnp
+        from repro import compat
         from repro.core import distributed, index as lidx
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         key = jax.random.PRNGKey(0)
         db = jax.random.normal(jax.random.fold_in(key, 1), (512, 32))
         q = jax.random.normal(jax.random.fold_in(key, 2), (16, 32)) * 0.9
@@ -54,14 +54,14 @@ def test_distributed_index_matches_single_device():
 def test_sharded_train_step_runs_and_matches_math():
     stdout = _run("""
         import dataclasses, jax, jax.numpy as jnp, numpy as np
+        from repro import compat
         from repro.configs import smoke_config
         from repro.configs.base import ShapeConfig
         from repro.models import get_model
         from repro.launch import specs
         from repro.runtime import steps as rt
         from repro.optim import adamw
-        mesh = jax.make_mesh((2, 4), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = compat.make_mesh((2, 4), ("data", "model"))
         cfg = dataclasses.replace(smoke_config("llama3.2-3b"), n_layers=2,
                                   grad_accum=2)
         shape = ShapeConfig("t", 64, 8, "train")
@@ -94,17 +94,17 @@ def test_compressed_psum_across_pods():
     stdout = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro import compat
         from repro.optim import compress
-        mesh = jax.make_mesh((8,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = compat.make_mesh((8,), ("pod",))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 64)) * 1e-3
 
         def f(g_local):
             err = jax.tree.map(jnp.zeros_like, g_local)
             mean, new_err = compress.compressed_psum(g_local, err, "pod")
             return mean, new_err
-        fn = jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                           out_specs=(P(), P("pod")), check_vma=False)
+        fn = compat.shard_map(f, mesh=mesh, in_specs=P("pod"),
+                              out_specs=(P(), P("pod")), check_vma=False)
         mean, err = fn(g)
         true_mean = g.reshape(8, 1, 64).mean(axis=0)
         rel = float(jnp.max(jnp.abs(mean[0] - true_mean[0])) /
@@ -121,11 +121,10 @@ def test_checkpoint_elastic_reshard():
     stdout = _run("""
         import tempfile, jax, jax.numpy as jnp, numpy as np
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro import compat
         from repro.checkpoint import checkpoint as ckpt
-        m1 = jax.make_mesh((2, 4), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
-        m2 = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        m1 = compat.make_mesh((2, 4), ("data", "model"))
+        m2 = compat.make_mesh((4, 2), ("data", "model"))
         x = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
         xs = jax.device_put(x, NamedSharding(m1, P("data", "model")))
         d = tempfile.mkdtemp()
