@@ -1,0 +1,141 @@
+"""Sharded-serve benchmark: 1 -> N-device weak scaling with parity asserts.
+
+For each device count D the workload grows proportionally (fixed sealed
+segments *per device*), so ideal weak scaling keeps the sharded query time
+flat while the unsharded fan-out time grows linearly with D.  Every run
+asserts the sharding invariant before it times anything: the SPMD query
+must return **bit-identical** (gids, dists) to the single-device
+``SegmentedIndex.query`` over the same live items (tombstones included).
+
+Host CPU "devices" come from ``--xla_force_host_platform_device_count``,
+which locks at first jax init -- so each device count runs in its own
+subprocess (the same trick tests/test_spmd.py uses) and reports JSON on
+stdout.  CPU devices share the physical cores, so the *times* here are
+indicative of program structure only (collective overhead, fan-out cost);
+the *parity* column is the part that must always hold.  On a real multi-chip
+mesh the same code path is where the scaling shows up.
+
+REPRO_BENCH_SMOKE=1 shrinks the sweep for CI.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .bench_query_engine import smoke_mode
+from .common import write_csv
+
+DEVICE_COUNTS = (1, 2, 4)
+SMOKE_DEVICE_COUNTS = (1, 2)
+
+_WORKER = """
+    import json, time
+    import numpy as np
+    import jax
+    from repro import compat
+    from repro.core.index import IndexConfig
+    from repro.serve.segments import SegmentedIndex
+
+    n_dev = {n_dev}
+    segs_per_dev = {segs_per_dev}
+    seg_cap = {seg_cap}
+    n_dims = {n_dims}
+    k = {k}
+    n_probes = {n_probes}
+    iters = {iters}
+
+    cfg = IndexConfig(n_dims=n_dims, n_tables=4, n_hashes=4, log2_buckets=10,
+                      bucket_capacity=32, r=4.0)
+    si = SegmentedIndex(cfg, segment_capacity=seg_cap,
+                        insert_chunk=seg_cap // 2, seed=0)
+    rng = np.random.default_rng(0)
+    n_items = n_dev * segs_per_dev * seg_cap       # weak scaling: D x per-dev
+    emb = rng.normal(size=(n_items, n_dims)).astype(np.float32)
+    gids = si.insert(emb)
+    si.delete(gids[::9])                           # tombstones on every shard
+    q = rng.normal(size=(16, n_dims)).astype(np.float32)
+
+    def timed(fn):
+        jax.block_until_ready(fn())                # warmup/compile
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts.append((time.perf_counter() - t0) * 1e6)
+        return float(np.median(ts))
+
+    want_i, want_d = si.query(q, k, n_probes=n_probes)
+    us_unsharded = timed(lambda: si.query(q, k, n_probes=n_probes))
+
+    mesh = compat.make_mesh((n_dev,), ("serve",))
+    si.shard(mesh)
+    got_i, got_d = si.query(q, k, n_probes=n_probes)
+    parity = bool(np.array_equal(np.asarray(got_i), np.asarray(want_i)) and
+                  np.array_equal(np.asarray(got_d), np.asarray(want_d)))
+    us_sharded = timed(lambda: si.query(q, k, n_probes=n_probes))
+
+    print(json.dumps({{
+        "n_dev": n_dev,
+        "n_items": n_items,
+        "n_segments": len(si.segments),
+        "parity": parity,
+        "us_unsharded": round(us_unsharded),
+        "us_sharded": round(us_sharded),
+    }}))
+"""
+
+
+def _run_one(n_dev: int, segs_per_dev: int, seg_cap: int, n_dims: int,
+             k: int, n_probes: int, iters: int) -> dict:
+    code = textwrap.dedent(_WORKER.format(
+        n_dev=n_dev, segs_per_dev=segs_per_dev, seg_cap=seg_cap,
+        n_dims=n_dims, k=k, n_probes=n_probes, iters=iters))
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(
+        os.environ,
+        JAX_PLATFORMS="cpu",
+        XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                   f" --xla_force_host_platform_device_count={n_dev}"),
+        PYTHONPATH=os.path.join(root, "src") +
+        os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f"{n_dev}-device worker failed: "
+                           f"{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(seed: int = 0, out_csv: str = "experiments/sharded_serve.csv") -> dict:
+    smoke = smoke_mode()
+    device_counts = SMOKE_DEVICE_COUNTS if smoke else DEVICE_COUNTS
+    segs_per_dev = 2 if smoke else 4
+    seg_cap = 256 if smoke else 512
+    iters = 5 if smoke else 10
+
+    rows, results = [], {}
+    for n_dev in device_counts:
+        r = _run_one(n_dev, segs_per_dev, seg_cap, n_dims=32, k=10,
+                     n_probes=2, iters=iters)
+        assert r["parity"], f"sharded query diverged at {n_dev} devices"
+        rows.append((n_dev, r["n_items"], r["n_segments"],
+                     r["us_unsharded"], r["us_sharded"], r["parity"]))
+        results[f"dev{n_dev}_n_items"] = r["n_items"]
+        results[f"dev{n_dev}_us_unsharded"] = r["us_unsharded"]
+        results[f"dev{n_dev}_us_sharded"] = r["us_sharded"]
+        results[f"dev{n_dev}_parity"] = r["parity"]
+    write_csv(out_csv,
+              "n_dev,n_items,n_segments,us_unsharded,us_sharded,parity",
+              rows)
+    # weak-scaling efficiency: sharded time at max D vs at 1 device
+    # (1.0 = perfectly flat; CPU host devices share cores, see module doc)
+    d0, dn = device_counts[0], device_counts[-1]
+    results["weak_scaling_ratio"] = round(
+        results[f"dev{dn}_us_sharded"] /
+        max(results[f"dev{d0}_us_sharded"], 1), 3)
+    return results

@@ -35,7 +35,7 @@ def main(argv=None) -> None:
 
     from . import (bench_cosine, bench_embed_error, bench_hash_throughput,
                    bench_index, bench_l2, bench_query_engine, bench_serve,
-                   bench_w2)
+                   bench_sharded_serve, bench_w2)
 
     print("name,us_per_call,derived")
     jobs = [
@@ -47,6 +47,7 @@ def main(argv=None) -> None:
         ("hash_throughput", bench_hash_throughput.run),
         ("query_engine", bench_query_engine.run),
         ("serve", bench_serve.run),
+        ("sharded_serve", bench_sharded_serve.run),
     ]
     all_results = {}
     for name, fn in jobs:

@@ -20,19 +20,29 @@ Sharding scheme (FAISS-style, expressed in shard_map + lax collectives):
 State layout: every leaf carries leading (D, M) device axes sharded over
 ('data', 'model'), so the same code path works on 1 device, an 8-device CPU
 test mesh, and the 512-chip production mesh.
+
+This module also hosts the *serve layer's* collective query
+(:func:`query_segments_sharded`): the SPMD companion of
+``serve.segments.SegmentedIndex`` operating on a
+``sharding.placement.SegmentPlacement`` (sealed segments round-robin over a
+1-D serve axis, delta replicated).  Unlike the build/query pair above -- an
+independent per-device hash family for OR-amplified recall -- the serve
+path shards one *shared-family* index, which is what makes its results
+bit-identical to the single-device path.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .. import compat
+from ..kernels import ops
 from . import index as lsh_index
 from .index import IndexConfig, LSHIndexState
 
@@ -123,6 +133,95 @@ def query_distributed(state_dm, cfg: IndexConfig, queries: Array, k: int,
         out_specs=(P(), P()),
         check_vma=False)
     return fn(state_dm, queries)
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
+                              backend: Optional[str], mesh: Mesh, axis: str,
+                              per_dev: int):
+    """One compiled collective program per (cfg, k, n_probes, backend, mesh,
+    per-device segment count) -- the sharded analogue of the serve layer's
+    ``_segment_query_fn``.  Each device runs the *same* per-segment
+    hash -> probe -> gather -> rerank program as the unsharded path over its
+    local ``per_dev`` sealed segments plus the replicated delta (contributed
+    by rank 0 only, or every device would duplicate the delta's rows in the
+    merge), local-merges, then all-gathers the (nq, k) shards for the global
+    ``merge_topk`` -- collective volume O(n_dev * nq * k), independent of
+    database size."""
+
+    def one_segment(state: LSHIndexState, gids: Array, live: Array, q: Array):
+        # same program body as the unsharded fan-out -- parity by construction
+        return lsh_index.query_index_gids(state, cfg, q, k, gids,
+                                          n_probes=n_probes, backend=backend,
+                                          live_mask=live)
+
+    def shard_fn(sealed_state, sealed_gids, sealed_live,
+                 delta_state, delta_gids, delta_live, q):
+        # sealed_* leaves: this device's (per_dev, ...) block; delta_*
+        # replicated.  Static unroll over the local segments -- identical
+        # shapes, so it is one fused program, not per_dev compilations.
+        parts_g, parts_d = [], []
+        for i in range(per_dev):
+            seg = jax.tree.map(lambda x: x[i], sealed_state)
+            g, d = one_segment(seg, sealed_gids[i], sealed_live[i], q)
+            parts_g.append(g)
+            parts_d.append(d)
+        g, d = one_segment(delta_state, delta_gids, delta_live, q)
+        rank = jax.lax.axis_index(axis)
+        parts_g.append(jnp.where(rank == 0, g, -1))
+        parts_d.append(jnp.where(rank == 0, d, jnp.inf))
+        d_loc, g_loc = ops.merge_topk(jnp.concatenate(parts_d, axis=1),
+                                      jnp.concatenate(parts_g, axis=1), k)
+        # Collective fan-in: one all-gather of the (nq, k) local winners.
+        all_g = jax.lax.all_gather(g_loc, axis)               # (n_dev, nq, k)
+        all_d = jax.lax.all_gather(d_loc, axis)
+        nd = all_g.shape[0]
+        flat_g = all_g.transpose(1, 0, 2).reshape(q.shape[0], nd * k)
+        flat_d = all_d.transpose(1, 0, 2).reshape(q.shape[0], nd * k)
+        d_out, g_out = ops.merge_topk(flat_d, flat_g, k)
+        return g_out, d_out
+
+    state_sharded = jax.tree.map(lambda _: P(axis), _state_structure())
+    state_repl = jax.tree.map(lambda _: P(), _state_structure())
+    fn = compat.shard_map(
+        shard_fn, mesh=mesh,
+        in_specs=(state_sharded, P(axis), P(axis),
+                  state_repl, P(), P(), P()),
+        out_specs=(P(), P()),
+        check_vma=False)
+    return jax.jit(fn)
+
+
+def query_segments_sharded(placement, cfg: IndexConfig, queries: Array,
+                           k: int, n_probes: int = 1,
+                           backend: Optional[str] = None
+                           ) -> Tuple[Array, Array]:
+    """Collective cross-segment k-NN over a ``SegmentPlacement``.
+
+    Args:
+        placement: :class:`repro.sharding.placement.SegmentPlacement` --
+            sealed segments stacked/sharded over ``placement.axis``, delta
+            replicated (see that module for the layout).
+        cfg: the index config shared by every segment.
+        queries: (nq, N) replicated across the mesh.
+        k, n_probes: as in ``core.index.query_index``.
+        backend: re-rank tail backend (resolve via
+            ``kernels.dispatch.query_backend`` first, as the serve layer
+            does, so the compile cache never keys on a raw None).
+
+    Returns:
+        (gids (nq, k) int32, dists (nq, k) f32), replicated; -1/inf padded.
+        Bit-identical to the unsharded ``SegmentedIndex.query`` over the
+        same live items (the serve layer's sharding invariant, enforced by
+        tests/test_sharded_serve.py and benchmarks/bench_sharded_serve.py).
+    """
+    fn = _sharded_segment_query_fn(cfg, k, n_probes, backend,
+                                   placement.mesh, placement.axis,
+                                   placement.per_dev)
+    return fn(placement.sealed_state, placement.sealed_gids,
+              placement.sealed_live, placement.delta_state,
+              placement.delta_gids, placement.delta_live,
+              jnp.asarray(queries, jnp.float32))
 
 
 def brute_force_distributed(embeddings: Array, queries: Array, k: int,

@@ -140,7 +140,15 @@ def _hashes_and_proj(state: LSHIndexState, cfg: IndexConfig, x: Array
 
 def build_index(state: LSHIndexState, cfg: IndexConfig, embeddings: Array
                 ) -> LSHIndexState:
-    """Insert ``embeddings`` (n, N) as items 0..n-1.  Pure & jittable.
+    """One-shot build: insert ``embeddings`` as items 0..n-1.
+
+    Args:
+        state: fresh state from :func:`create_index` (capacity >= n).
+        cfg: the index config the state was created with.
+        embeddings: (n, N) f32 items; row index becomes the item id.
+
+    Returns:
+        New state with every table/counts/db leaf filled.  Pure & jittable.
 
     Per table: sort items by bucket, within-bucket rank = position - segment
     start, drop items ranked beyond capacity (classical LSH behaviour under
@@ -294,15 +302,27 @@ def query_index(state: LSHIndexState, cfg: IndexConfig, queries: Array,
                 k: int, n_probes: int = 1, valid_items: Optional[int] = None,
                 backend: Optional[str] = None,
                 live_mask: Optional[Array] = None) -> Tuple[Array, Array]:
-    """k-NN query.  queries: (nq, N) -> (ids (nq, k), dists (nq, k)).
+    """k-NN query: hash -> probe -> gather -> dedup -> re-rank -> top-k.
 
-    ids are -1 (dist +inf) where fewer than k candidates were found.
-    ``backend`` selects the re-rank tail only (fused / reference /
-    compiled / interpret; default per dispatch.query_backend) -- hashing
-    always uses the process-constant implementation so probed buckets match
-    the build exactly.  ``live_mask`` (bool (n_items_cap,)) drops
-    tombstoned items from the candidate set before re-rank -- the streaming
-    serve layer's delete path.
+    Args:
+        state, cfg: a built (or incrementally filled) index.
+        queries: (nq, N) f32.
+        k: results per query (static).
+        n_probes: buckets probed per table (1 = base bucket only; more adds
+            the best single-coordinate perturbations, Lv et al. 2007).
+        valid_items: optionally mask item ids >= this (partially-filled
+            capacity).
+        backend: selects the re-rank tail only (fused / reference /
+            compiled / interpret; default per dispatch.query_backend) --
+            hashing always uses the process-constant implementation so
+            probed buckets match the build exactly.
+        live_mask: bool (n_items_cap,); False rows are dropped from the
+            candidate set before re-rank -- the streaming serve layer's
+            tombstone delete path.
+
+    Returns:
+        (ids (nq, k) int32, dists (nq, k) f32), ascending by distance;
+        ids are -1 (dist +inf) where fewer than k candidates were found.
     """
     q = queries.astype(jnp.float32)
     cands = _candidate_ids(state, cfg, q, n_probes)
@@ -312,6 +332,30 @@ def query_index(state: LSHIndexState, cfg: IndexConfig, queries: Array,
     dist, ids = ops.fused_query_topk(q, state.db, cands, k, p=cfg.p,
                                      valid_items=valid_items, backend=backend)
     return ids, dist
+
+
+def query_index_gids(state: LSHIndexState, cfg: IndexConfig, queries: Array,
+                     k: int, gids: Array, n_probes: int = 1,
+                     backend: Optional[str] = None,
+                     live_mask: Optional[Array] = None
+                     ) -> Tuple[Array, Array]:
+    """:func:`query_index` + local-slot -> global-id translation.
+
+    Args:
+        gids: (n_items_cap,) int32 global id per slot (-1 = empty).
+        Everything else as in :func:`query_index`.
+    Returns:
+        (gids (nq, k) int32, dists (nq, k) f32), -1/inf padded.
+
+    The one shared per-segment program body of the serve layer: both the
+    unsharded fan-out (serve/segments.py) and the SPMD collective
+    (core/distributed.py) call this, so the sharding parity invariant holds
+    by construction instead of by keeping two copies in sync.
+    """
+    ids, dist = query_index(state, cfg, queries, k, n_probes=n_probes,
+                            backend=backend, live_mask=live_mask)
+    g = jnp.where(ids >= 0, gids[jnp.clip(ids, 0, gids.shape[0] - 1)], -1)
+    return g, dist
 
 
 @functools.lru_cache(maxsize=32)
@@ -370,7 +414,13 @@ def query_index_batched(state: LSHIndexState, cfg: IndexConfig,
 
 def brute_force_topk(db: Array, queries: Array, k: int, p: float = 2.0,
                      valid_items: Optional[int] = None) -> Tuple[Array, Array]:
-    """Exact k-NN oracle for recall measurement."""
+    """Exact k-NN oracle for recall measurement.
+
+    Args:
+        db: (n_items, N) f32; queries: (nq, N) f32; p: L^p exponent.
+    Returns:
+        (ids (nq, k) int32, dists (nq, k) f32) -- exact, O(n_items * nq * N).
+    """
     q = queries.astype(jnp.float32)
     if p == 2.0:
         d = jnp.linalg.norm(db[None, :, :] - q[:, None, :], axis=-1)
@@ -384,7 +434,13 @@ def brute_force_topk(db: Array, queries: Array, k: int, p: float = 2.0,
 
 
 def recall_at_k(lsh_ids: Array, exact_ids: Array) -> Array:
-    """Fraction of exact top-k retrieved by the LSH query (per query, averaged)."""
+    """Fraction of the exact top-k retrieved by the LSH query.
+
+    Args:
+        lsh_ids / exact_ids: (nq, k) int32 id lists (-1 = empty slot).
+    Returns:
+        Scalar f32: per-query hit fraction, averaged over queries.
+    """
     hit = (lsh_ids[:, :, None] == exact_ids[:, None, :]) & (exact_ids[:, None, :] >= 0)
     per_q = hit.any(axis=1).sum(axis=-1) / jnp.maximum((exact_ids >= 0).sum(axis=-1), 1)
     return per_q.mean()

@@ -24,6 +24,9 @@ Two independent choices are made here:
 Block sizes: MXU/VPU-aligned 128 tiles when a dimension is large enough,
 else the dimension rounded up to the 8-sublane quantum so small problems
 don't pay 16x padding waste.
+
+The env-knob table (values, defaults, which op each governs) is maintained
+in EXPERIMENTS.md § "Kernel dispatch".
 """
 
 from __future__ import annotations

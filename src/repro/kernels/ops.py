@@ -10,6 +10,12 @@ fresh trace, never a stale one.
 
 ``use_kernel=False`` is the legacy escape hatch (equivalent to
 ``backend="reference"``) and is kept for callers/tests that predate dispatch.
+
+Shape conventions (shared by every op here): ``B``/``nq`` batch rows, ``N``
+embedding dims, ``L`` tables, ``K`` hashes per table, ``C`` candidates per
+query, ``k`` results per query.  Serving callers only ever pass the padded
+palette shapes -- see docs/architecture.md § "The padded-chunk shape
+palette" for the closed set and the knobs that pick it.
 """
 
 from __future__ import annotations
@@ -46,7 +52,18 @@ def _pstable_hash_impl(x, alpha, b, r, mode, blocks):
 
 def pstable_hash(x, alpha, b, r: float, use_kernel: bool = True,
                  backend: str | None = None):
-    """floor((x @ alpha)/r + b) -> int32, batched; Eq. (5) for K hashes."""
+    """p-stable hash values ``floor((x @ alpha) / r + b)`` -- Eq. (5).
+
+    Args:
+        x: (B, N) f32 embeddings.
+        alpha: (N, L*K) p-stable projection directions.
+        b: (L*K,) uniform offsets in [0, 1).
+        r: quantisation width (static; larger r = coarser buckets).
+        use_kernel / backend: execution mode, see :mod:`.dispatch`.
+
+    Returns:
+        (B, L*K) int32 hash values (callers reshape to (B, L, K)).
+    """
     mode = dispatch.kernel_mode(backend, use_kernel)
     blocks = dispatch.matmul_blocks(x.shape[0], x.shape[1], alpha.shape[1])
     return _pstable_hash_impl(x, alpha, b, r, mode, blocks)
@@ -63,7 +80,13 @@ def _pstable_hash_proj_impl(x, alpha, b, r, mode, blocks):
 
 def pstable_hash_proj(x, alpha, b, r: float, use_kernel: bool = True,
                       backend: str | None = None):
-    """(hashes int32, pre-floor projections f32) -- the multi-probe pair."""
+    """Hashes plus the pre-floor projections -- the multi-probe pair.
+
+    Same args as :func:`pstable_hash`.  Returns ``(hashes, proj)``, both
+    (B, L*K): ``hashes`` int32 as above, ``proj`` f32 = (x@alpha)/r + b
+    before the floor -- its fractional part is each coordinate's distance
+    to the bucket boundary, which ranks multi-probe perturbations.
+    """
     mode = dispatch.kernel_mode(backend, use_kernel)
     blocks = dispatch.matmul_blocks(x.shape[0], x.shape[1], alpha.shape[1])
     return _pstable_hash_proj_impl(x, alpha, b, r, mode, blocks)
@@ -81,7 +104,15 @@ def _simhash_impl(x, alpha, mode):
 
 def simhash_signature(x, alpha, use_kernel: bool = True,
                       backend: str | None = None):
-    """Packed sign signature (B, K/32) int32."""
+    """Sign-random-projection signature, bit-packed.
+
+    Args:
+        x: (B, N) f32 embeddings.
+        alpha: (N, K) projection directions, K a multiple of 32.
+
+    Returns:
+        (B, K/32) int32 -- bit j of word w is sign(x @ alpha[:, 32w+j]) > 0.
+    """
     return _simhash_impl(x, alpha, dispatch.kernel_mode(backend, use_kernel))
 
 
@@ -97,7 +128,17 @@ def _cheb_impl(fvals, dct_t, scale, mode):
 
 def cheb_embed(fvals, dct_t, scale, use_kernel: bool = True,
                backend: str | None = None):
-    """Fused DCT + orthonormal scaling: (B, N) samples -> (B, N) coefficients."""
+    """Fused DCT + orthonormal scaling (the Sec. 3.1 embedding's hot path).
+
+    Args:
+        fvals: (B, N) function values at the N Chebyshev nodes.
+        dct_t: (N, N) DCT-II matrix (transposed).
+        scale: (N,) orthonormalisation weights.
+
+    Returns:
+        (B, N) f32 scaled Chebyshev coefficients -- the R^N embedding whose
+        l^2 distance approximates the functions' L^2 distance (Eq. 3).
+    """
     return _cheb_impl(fvals, dct_t, scale, dispatch.kernel_mode(backend, use_kernel))
 
 
@@ -115,7 +156,19 @@ def _rerank_impl(q, emb, ids, p, mode, blocks):
 
 def candidate_distances(q, emb, ids, p: float = 2.0, use_kernel: bool = True,
                         backend: str | None = None):
-    """Masked L^p re-rank distances (B, C) over pre-gathered embeddings."""
+    """Masked L^p re-rank distances over a database of embeddings.
+
+    Args:
+        q: (B, N) f32 queries.
+        emb: (n_items, N) f32 stored embeddings.
+        ids: (B, C) int32 candidate ids into ``emb``; -1 = empty slot.
+        p: the L^p metric exponent (static).
+
+    Returns:
+        (B, C) f32 distances, +inf where ``ids`` is -1.  Prefer
+        :func:`fused_query_topk` on the serving path -- it skips the
+        (B, C, N) gather this op requires.
+    """
     mode = dispatch.kernel_mode(backend, use_kernel)
     blocks = dispatch.rerank_blocks(q.shape[0], ids.shape[1])
     return _rerank_impl(q, emb, ids, p, mode, blocks)
@@ -135,8 +188,23 @@ def _fused_query_impl(q, db, ids, k, p, valid_items, mode):
 def fused_query_topk(q, db, ids, k: int, p: float = 2.0,
                      valid_items: int | None = None,
                      backend: str | None = None):
-    """Candidate ids -> (dists (nq, k), ids (nq, k)) without the (nq, C, N)
-    HBM gather.  ``backend`` accepts fused/reference/compiled/interpret.
+    """Fused gather + L^p re-rank + streaming top-k (the query hot path).
+
+    Args:
+        q: (nq, N) f32 queries.
+        db: (n_items, N) f32 stored embeddings (rows gathered HBM->VMEM by
+            a scalar-prefetch index map -- the (nq, C, N) candidate tensor
+            never exists in HBM).
+        ids: (nq, C) int32 candidate ids into ``db``; -1 = empty slot.
+        k: results per query (static).
+        p: L^p exponent (static).
+        valid_items: optionally mask ids >= this as invalid.
+        backend: fused/reference/compiled/interpret
+            (see ``dispatch.query_backend``).
+
+    Returns:
+        (dists (nq, k) f32 ascending, ids (nq, k) int32), -1/inf padded
+        where fewer than k valid candidates exist.
 
     The kernel's top-k scratch is ``fused_query._KP`` lanes wide; larger k
     falls back to the reference path (with a warning -- it reintroduces the
@@ -167,12 +235,22 @@ def _merge_topk_impl(dists, ids, k):
 
 
 def merge_topk(dists, ids, k: int):
-    """Merge per-segment top-k shards into a global top-k.
+    """Merge per-shard top-k lists into a global top-k.
 
-    dists/ids: (nq, M) where M is the concatenation of every segment's k
-    results (-1 id = empty slot).  Returns (dists (nq, k), ids (nq, k)),
-    ascending by distance, -1/inf padded.  M is tiny (n_segments * k), so a
-    full lexicographic sort beats a tournament tree at every realistic size.
+    The fan-in of both the cross-segment query (serve/segments.py) and the
+    collective sharded query (core/distributed.py, inside shard_map).
+
+    Args:
+        dists/ids: (nq, M) f32/int32 -- M is the concatenation of every
+            shard's k results (-1 id = empty slot).
+    Returns:
+        (dists (nq, k), ids (nq, k)), ascending by distance, -1/inf padded.
+
+    The (distance, id) sort order is *total and stable*, which is what makes
+    two-level merges (per-device, then across devices) bit-identical to one
+    flat merge -- the sharding invariant leans on this.  M is tiny
+    (n_shards * k), so a full lexicographic sort beats a tournament tree at
+    every realistic size.
     """
     m = ids.shape[-1]
     if m < k:

@@ -19,3 +19,23 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_test_mesh(shape=(2, 4), axes=("data", "model")):
     """Small mesh for CPU tests (requires xla_force_host_platform_device_count)."""
     return compat.make_mesh(shape, axes)
+
+
+def make_serve_mesh(n_devices=None, axis: str = "serve"):
+    """1-D mesh for the SPMD serve path (``SegmentedIndex.shard``).
+
+    Args:
+        n_devices: devices along the serve axis; default = every visible
+            device.  On CPU, multi-device needs
+            ``--xla_force_host_platform_device_count=N`` in ``XLA_FLAGS``
+            *before* first jax init (``launch.serve --shard N`` sets it).
+        axis: the axis name tenants reference via ``ServableSpec.shard_axis``.
+
+    Returns:
+        A mesh of shape ``(n_devices,)`` with one ``axis`` axis.  A 1-device
+        mesh is valid (degenerate SPMD: same program, no-op collectives).
+    """
+    import jax
+
+    n = jax.device_count() if n_devices is None else int(n_devices)
+    return compat.make_mesh((n,), (axis,))

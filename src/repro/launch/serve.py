@@ -18,10 +18,13 @@ Drives the repro.serve stack end to end with synthetic function traffic:
   the number of requests).
 
 Optionally ``--snapshot DIR`` checkpoints every tenant at the end and
-``--restore DIR`` starts from a previous snapshot.
+``--restore DIR`` starts from a previous snapshot.  ``--shard N`` serves
+both tenants SPMD over an N-device serve mesh (on CPU it forces N host
+devices; results are bit-identical to the unsharded run).
 """
 
 import argparse
+import os
 
 
 def main():
@@ -40,8 +43,18 @@ def main():
     ap.add_argument("--segment-capacity", type=int, default=1024)
     ap.add_argument("--snapshot", default=None, help="write snapshot here")
     ap.add_argument("--restore", default=None, help="restore snapshot first")
+    ap.add_argument("--shard", type=int, default=0,
+                    help="serve SPMD over this many devices (0 = off; on "
+                         "CPU this forces the host device count, so it must "
+                         "be the first jax-touching flag)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    if args.shard > 1:
+        # must land before the first jax init -- device count locks then
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.shard}")
 
     import json
 
@@ -49,23 +62,36 @@ def main():
 
     from ..serve import ServableRegistry, ServableSpec, recall_proxy
     from ..serve.stats import occupancy_report
+    from .mesh import make_serve_mesh
 
     rng = np.random.default_rng(args.seed)
-    registry = ServableRegistry()
+    mesh = make_serve_mesh(args.shard) if args.shard else None
+    shard_axis = "serve" if mesh is not None else None
+    registry = ServableRegistry(mesh=mesh)
+    if mesh is not None:
+        print(f"[serve] SPMD serve mesh: {dict(mesh.shape)}")
 
     if args.restore:
         names = registry.restore(args.restore)
+        if mesh is not None:
+            # the CLI mesh wins over whatever shard_axis the snapshot was
+            # taken with, so --restore --shard N actually serves SPMD even
+            # for snapshots taken unsharded (elastic re-mesh)
+            for name in names:
+                registry.get(name).index.shard(mesh, shard_axis)
         print(f"[serve] restored tenants {names} from {args.restore}")
     else:
         for spec in (
             ServableSpec(name="l2-basis", n_dims=args.n_dims, p=2.0, r=4.0,
                          embedder="basis",
                          segment_capacity=args.segment_capacity,
-                         chunk_sizes=(8, 32, 128), max_delay_ms=2.0),
+                         chunk_sizes=(8, 32, 128), max_delay_ms=2.0,
+                         shard_axis=shard_axis),
             ServableSpec(name="l1-qmc", n_dims=args.n_dims, p=1.0, r=8.0,
                          embedder="qmc",
                          segment_capacity=args.segment_capacity,
-                         chunk_sizes=(8, 32, 128), max_delay_ms=2.0),
+                         chunk_sizes=(8, 32, 128), max_delay_ms=2.0,
+                         shard_axis=shard_axis),
         ):
             registry.register(spec)
         print(f"[serve] registered tenants {registry.names()}")
@@ -129,10 +155,14 @@ def main():
     report = registry.report()
     for name, rep in report.items():
         occ = rep["occupancy"]
+        lay = rep["shard_layout"]
+        shard_s = (f"shards={lay['n_dev']}x{lay['per_dev']}"
+                   if lay else "shards=off")
         print(f"[serve] {name}: live={occ['n_live']}/{occ['n_items']} "
               f"segments={occ['n_segments']} "
               f"tombstones={occ['tombstone_frac']:.2f} "
               f"compactions={compactions[name]} "
+              f"{shard_s} "
               f"recall_proxy={probe[name]} "
               f"qps={rep['stats']['qps']} "
               f"p95={rep['stats']['p95_ms']}ms "

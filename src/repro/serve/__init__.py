@@ -3,7 +3,8 @@
 Layering (each module usable alone):
 
   segments -- SegmentedIndex: delta/sealed segment lifecycle over core.index
-              (insert / tombstone delete / seal / compact / fan-out query)
+              (insert / tombstone delete / seal / compact / fan-out query /
+              shard(mesh) for SPMD serving -- see docs/architecture.md)
   batcher  -- MicroBatcher: deadline-based admission queue that coalesces
               heterogeneous requests into a fixed padded chunk palette
   stats    -- ServingStats / recall_proxy / occupancy_report

@@ -13,7 +13,8 @@ under real traffic.  The batcher instead:
 * pads every flush up to a fixed **chunk palette** (e.g. 8/32/128/512 rows),
   so the set of traced shapes is bounded by ``len(chunk_sizes)`` per
   signature forever -- the saxml servable-model discipline of "pick your
-  batch shapes up front".
+  batch shapes up front" (docs/architecture.md § "The padded-chunk shape
+  palette" is the single source of truth for every palette in the system).
 
 ``shape_counts`` records every padded shape dispatched; the serve benchmark
 asserts its support stays within the palette (jit cache hits, no per-request

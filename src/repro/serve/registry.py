@@ -59,6 +59,11 @@ class ServableSpec:
     chunk_sizes: Tuple[int, ...] = (8, 32, 128)
     max_delay_ms: float = 5.0
     seed: int = 0
+    # SPMD placement: mesh axis to shard sealed segments over (None =
+    # single-device).  Applied iff the registry was built with a mesh
+    # carrying this axis -- the spec declares intent, the registry owns
+    # the hardware.
+    shard_axis: Optional[str] = None
 
     def __post_init__(self):
         if self.embedder not in EMBEDDERS:
@@ -73,15 +78,27 @@ class ServableSpec:
 
 
 class Servable:
-    """A live endpoint: embedder + segmented index + batcher + stats."""
+    """A live endpoint: embedder + segmented index + batcher + stats.
 
-    def __init__(self, spec: ServableSpec, *, backend: Optional[str] = None):
+    Args:
+        spec: the declarative tenant config.
+        backend: re-rank tail backend override (see
+            ``kernels.dispatch.query_backend``).
+        mesh: serve mesh; when it carries ``spec.shard_axis`` the tenant's
+            index is sharded over it (``SegmentedIndex.shard``).
+    """
+
+    def __init__(self, spec: ServableSpec, *, backend: Optional[str] = None,
+                 mesh=None):
         self.spec = spec
         self.index = SegmentedIndex(spec.index_config(),
                                     segment_capacity=spec.segment_capacity,
                                     insert_chunk=spec.insert_chunk,
                                     key=jax.random.PRNGKey(spec.seed),
                                     backend=backend)
+        if spec.shard_axis is not None and mesh is not None \
+                and spec.shard_axis in mesh.axis_names:
+            self.index.shard(mesh, spec.shard_axis)
         self.stats = ServingStats()
         self.batcher = MicroBatcher(self._raw_query,
                                     chunk_sizes=spec.chunk_sizes,
@@ -133,22 +150,32 @@ class Servable:
                 "batcher": {"unique_shapes": self.batcher.unique_shapes(),
                             "n_batches": self.batcher.n_batches,
                             "n_requests": self.batcher.n_requests},
-                "occupancy": occupancy_report(self.index)}
+                "occupancy": occupancy_report(self.index),
+                "shard_layout": self.index.shard_layout()}
 
 
 class ServableRegistry:
-    """Name -> Servable map with snapshot/restore through checkpoint/."""
+    """Name -> Servable map with snapshot/restore through checkpoint/.
 
-    def __init__(self, *, backend: Optional[str] = None):
+    Args:
+        backend: re-rank tail backend for every tenant (see
+            ``kernels.dispatch.query_backend``).
+        mesh: optional serve mesh handed to every tenant whose spec asks
+            for sharding (``ServableSpec.shard_axis``); tenants without a
+            shard axis stay single-device on the same registry.
+    """
+
+    def __init__(self, *, backend: Optional[str] = None, mesh=None):
         self._servables: Dict[str, Servable] = {}
         self._backend = backend
+        self._mesh = mesh
         self._lock = threading.Lock()
 
     def register(self, spec: ServableSpec) -> Servable:
         with self._lock:
             if spec.name in self._servables:
                 raise ValueError(f"servable {spec.name!r} already registered")
-            sv = Servable(spec, backend=self._backend)
+            sv = Servable(spec, backend=self._backend, mesh=self._mesh)
             self._servables[spec.name] = sv
             return sv
 
@@ -189,6 +216,10 @@ class ServableRegistry:
                     "next_gid": idx._next_gid,
                     "segments": [{"n_items": s.n_items, "n_live": s.n_live,
                                   "sealed": s.sealed} for s in idx.segments],
+                    # observability only: restore re-derives placement from
+                    # spec.shard_axis + the restoring registry's mesh (which
+                    # may be a different size -- elastic re-mesh)
+                    "shard_layout": idx.shard_layout(),
                 }
             ckpt.save(os.path.join(root, name), step, tree, keep=keep,
                       extra=extra)
@@ -247,5 +278,11 @@ class ServableRegistry:
                           idx.segments[0].state.b,
                           idx.segments[0].state.mix)
             idx._next_gid = extra["next_gid"]
+            # segments were swapped in under the register()-time placement:
+            # bump both versions so a sharded tenant fully re-snapshots its
+            # device placement (possibly onto a different-size mesh) on the
+            # next query
+            idx._version += 1
+            idx._sealed_version += 1
             restored.append(name)
         return restored

@@ -14,7 +14,13 @@ module turns it into a *living* index the way LSM storage engines do:
   tombstones and re-packing buckets), using the same incremental-insert
   program -- no new compilation;
 * **query()** fans out to all segments and merges per-segment top-k via
-  ``kernels.ops.merge_topk``.
+  ``kernels.ops.merge_topk``;
+* **shard(mesh)** moves the fan-out onto a device mesh: sealed segments
+  round-robin over the mesh's serve axis, delta + hash family replicated,
+  collective top-k fan-in (``core.distributed.query_segments_sharded`` via
+  ``sharding.placement``) -- results stay bit-identical to the
+  single-device path (the sharding invariant, docs/architecture.md §
+  "Invariants").
 
 Every segment shares ONE hash family (``create_index(family=...)``), so an
 item's bucket ids are independent of which segment holds it.  Consequence
@@ -25,7 +31,8 @@ callers.
 
 All segments share the same (capacity, cfg) shapes, so the per-segment query
 program is compiled once and reused for every segment and every insert-order
-history.  Host-side bookkeeping (gid maps, live masks) is numpy; device state
+history (the padded-chunk shape palette -- docs/architecture.md has the full
+table).  Host-side bookkeeping (gid maps, live masks) is numpy; device state
 is the ``LSHIndexState`` pytree plus a (capacity,) gid vector and live mask.
 """
 
@@ -40,9 +47,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import index as lidx
+from ..core import distributed, index as lidx
 from ..core.index import IndexConfig, LSHIndexState
 from ..kernels import dispatch, ops
+from ..sharding import placement as seg_placement
 
 Array = jax.Array
 
@@ -84,10 +92,9 @@ def _segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
     compilations."""
 
     def f(state: LSHIndexState, q: Array, live: Array, gids: Array):
-        ids, dist = lidx.query_index(state, cfg, q, k, n_probes=n_probes,
-                                     backend=backend, live_mask=live)
-        g = jnp.where(ids >= 0, gids[jnp.clip(ids, 0, gids.shape[0] - 1)], -1)
-        return g, dist
+        return lidx.query_index_gids(state, cfg, q, k, gids,
+                                     n_probes=n_probes, backend=backend,
+                                     live_mask=live)
 
     return jax.jit(f)
 
@@ -128,6 +135,17 @@ class SegmentedIndex:
         self._locator: dict = {}          # gid -> (segment index, slot)
         self._next_gid = 0
         self._lock = threading.RLock()
+        # SPMD serve path: shard(mesh) sets these.  Two mutation counters
+        # drive lazy placement refresh: _version bumps on EVERY mutation
+        # (delta re-replication, O(delta bytes)); _sealed_version bumps only
+        # when the sealed set changes (seal/compact/sealed-segment delete),
+        # which is what forces the full restack + device transfer.
+        self._mesh = None
+        self._shard_axis: Optional[str] = None
+        self._placement = None
+        self._version = 0
+        self._sealed_version = 0
+        self._delta_synced = -1        # _version the placement's delta is at
         # distinct query batch shapes seen -- the serve bench asserts this
         # stays bounded by the batcher's chunk palette (no per-request traces)
         self.query_shapes: set = set()
@@ -163,6 +181,73 @@ class SegmentedIndex:
                 return
             self.delta.sealed = True
             self._open_segment()
+            self._version += 1
+            self._sealed_version += 1
+
+    # -- SPMD placement -----------------------------------------------------
+
+    def shard(self, mesh, axis: str = "serve") -> None:
+        """Serve queries SPMD across ``mesh``: sealed segments round-robin
+        over the ``axis`` mesh axis, delta + hash family replicated.
+
+        Queries stay **bit-identical** to the single-device path over the
+        same live items -- the same per-segment programs run, only placed
+        differently, and the collective top-k merge preserves the total
+        (distance, gid) order.  Mutations (insert/delete/seal/compact)
+        remain host-coordinated; the device placement is re-snapshotted
+        lazily on the first query after any mutation.
+
+        A 1-device mesh is the supported degenerate case (same code path,
+        no-op collectives), so one binary serves laptop and pod alike.
+        """
+        if axis not in mesh.axis_names:
+            raise ValueError(
+                f"mesh has axes {mesh.axis_names}, no {axis!r} axis")
+        with self._lock:
+            self._mesh = mesh
+            self._shard_axis = axis
+            self._placement = None
+
+    def unshard(self) -> None:
+        """Back to the single-device fan-out path (drops the placement)."""
+        with self._lock:
+            self._mesh = None
+            self._shard_axis = None
+            self._placement = None
+
+    def _current_placement(self):
+        """The up-to-date SegmentPlacement.
+
+        Full rebuild (restack + transfer every sealed segment) only when the
+        sealed set changed; delta-only mutations -- the streaming write hot
+        path -- just re-replicate the one mutable segment.
+        """
+        if (self._placement is None
+                or self._placement.version != self._sealed_version):
+            sealed = [s for s in self.segments[:-1] if s.n_live > 0]
+            self._placement = seg_placement.place_segments(
+                sealed, self.delta, self._mesh, self._shard_axis,
+                self._sealed_version)
+            self._delta_synced = self._version
+        elif self._delta_synced != self._version:
+            self._placement = seg_placement.refresh_delta(self._placement,
+                                                          self.delta)
+            self._delta_synced = self._version
+        return self._placement
+
+    def shard_layout(self) -> Optional[dict]:
+        """JSON-able placement report (None when unsharded).
+
+        Derived from host bookkeeping only -- calling this (reports,
+        snapshots) never triggers the device-placement rebuild that a
+        post-mutation query would.
+        """
+        with self._lock:
+            if self._mesh is None:
+                return None
+            n_sealed = sum(1 for s in self.segments[:-1] if s.n_live > 0)
+            return seg_placement.layout_dict(self._mesh, self._shard_axis,
+                                             n_sealed)
 
     # -- mutation -----------------------------------------------------------
 
@@ -222,6 +307,7 @@ class SegmentedIndex:
                 seg.n_items += take
                 seg.n_live += take
                 pos += take
+            self._version += 1
         return out_gids
 
     def delete(self, gids: Sequence[int]) -> int:
@@ -236,15 +322,24 @@ class SegmentedIndex:
                 # double-decrement n_live for a single slot
                 by_seg.setdefault(loc[0], set()).add(loc[1])
             n = 0
+            sealed_hit = False
+            delta_si = len(self.segments) - 1
             for si, slot_set in by_seg.items():
                 slots = sorted(slot_set)
                 seg = self.segments[si]
-                sl = jnp.asarray(slots, jnp.int32)
                 was_live = np.asarray(seg.live)[slots]
-                seg.live = seg.live.at[sl].set(False)
                 hits = int(was_live.sum())
+                if hits == 0:        # retried/idempotent delete: no change
+                    continue
+                seg.live = seg.live.at[jnp.asarray(slots, jnp.int32)].set(
+                    False)
                 seg.n_live -= hits
                 n += hits
+                sealed_hit |= si != delta_si
+            if n:
+                self._version += 1
+            if sealed_hit:
+                self._sealed_version += 1
             return n
 
     def live_items(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -275,6 +370,8 @@ class SegmentedIndex:
             self.segments = []
             self._locator = {}
             self._open_segment()
+            self._version += 1
+            self._sealed_version += 1
             if len(gid):
                 order = np.argsort(gid, kind="stable")   # insertion order
                 self.insert(emb[order], gids=gid[order])
@@ -288,13 +385,20 @@ class SegmentedIndex:
 
         Fans out one fused-kernel query per non-empty segment (identical
         shapes -> one compiled program total) and merges the per-segment
-        top-k shards with ``ops.merge_topk``.
+        top-k shards with ``ops.merge_topk``.  After ``shard(mesh)`` the
+        fan-out runs SPMD instead (one collective program over the mesh)
+        with bit-identical results.
         """
         q = jnp.asarray(queries, jnp.float32)
         with self._lock:
+            self.query_shapes.add((int(q.shape[0]), k, n_probes))
+            if self._mesh is not None:
+                pl = self._current_placement()
+                return distributed.query_segments_sharded(
+                    pl, self.cfg, q, k, n_probes=n_probes,
+                    backend=self.backend)
             segs = [s for s in self.segments if s.n_live > 0]
             fn = _segment_query_fn(self.cfg, k, n_probes, self.backend)
-            self.query_shapes.add((int(q.shape[0]), k, n_probes))
             shards = [fn(s.state, q, s.live, s.gids) for s in segs]
         if not shards:
             return (jnp.full((q.shape[0], k), -1, jnp.int32),

@@ -1,1 +1,11 @@
-"""sharding substrate."""
+"""Sharding substrate: mesh context, logical-axis rules, serve placement.
+
+  context   -- ambient mesh registration for in-model sharding constraints
+  rules     -- MaxText-style logical-axis -> (pod, data, model) specs
+  placement -- SegmentPlacement: round-robin device placement of the serve
+               layer's sealed segments (see docs/architecture.md)
+"""
+
+from .placement import SegmentPlacement, place_segments, round_robin
+
+__all__ = ["SegmentPlacement", "place_segments", "round_robin"]

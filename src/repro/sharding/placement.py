@@ -1,0 +1,176 @@
+"""Device-mesh placement for the segmented serve index.
+
+The serve layer's :class:`~repro.serve.segments.SegmentedIndex` is a list of
+fixed-shape segments (sealed immutables + one mutable delta).  To serve it
+across a mesh we exploit exactly that regularity:
+
+* **sealed segments** are assigned **round-robin** over the mesh's serve axis
+  (segment ``i`` -> device ``i % n_dev``) and their state pytrees are stacked
+  into one leading-axis array per leaf, sharded over that axis -- device ``d``
+  holds a contiguous ``(per_dev, ...)`` block;
+* devices with fewer real segments get **empty padding segments** (all-dead
+  live mask), so every device runs the same static program -- a padding
+  segment contributes only ``(-1, inf)`` rows which the top-k merge discards;
+* the **delta segment** and the **hash family** are **replicated**: every
+  device could absorb local inserts/serve the freshest writes, and bucket
+  ids stay globally consistent because all segments share one family.
+
+A :class:`SegmentPlacement` is an immutable snapshot of the index at one
+mutation ``version``; the serve layer rebuilds it lazily when the index
+mutates (insert/delete/seal/compact all bump the version).  Queries against
+a placement go through :func:`repro.core.distributed.query_segments_sharded`
+and are **bit-identical** to the unsharded ``SegmentedIndex.query`` -- the
+same per-segment programs run, only their placement changes, and the
+two-level (local, then collective) ``merge_topk`` is order-equivalent to the
+single-level merge because the (distance, gid) order is total.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPlacement:
+    """Immutable device placement of a segmented index at one version.
+
+    Attributes:
+        mesh, axis: the serve mesh and the axis sealed segments shard over.
+        n_dev: mesh size along ``axis``.
+        per_dev: sealed segments per device (after round-robin + padding).
+        n_sealed: real (non-padding) sealed segments placed.
+        version: the ``SegmentedIndex`` mutation counter this snapshot is of.
+        sealed_state: state pytree, leaves stacked ``(n_dev * per_dev, ...)``
+            and sharded over ``axis`` on the leading dim.
+        sealed_gids / sealed_live: ``(n_dev * per_dev, capacity)`` sharded
+            alongside the state.
+        delta_state / delta_gids / delta_live: the mutable delta segment,
+            replicated on every device.
+        assignment: ``assignment[d]`` = list of index-level segment positions
+            placed on device ``d`` (for reports and snapshot manifests).
+    """
+
+    mesh: Mesh
+    axis: str
+    n_dev: int
+    per_dev: int
+    n_sealed: int
+    version: int
+    sealed_state: Any
+    sealed_gids: Array
+    sealed_live: Array
+    delta_state: Any
+    delta_gids: Array
+    delta_live: Array
+    assignment: tuple
+
+    def layout(self) -> dict:
+        """JSON-able description of the placement (snapshot manifests,
+        ``launch.serve`` reports, tests)."""
+        return layout_dict(self.mesh, self.axis, self.n_sealed)
+
+
+def round_robin(n_items: int, n_dev: int) -> List[List[int]]:
+    """``assignment[d]`` = item indices owned by device ``d`` (i % n_dev)."""
+    return [[i for i in range(n_items) if i % n_dev == d]
+            for d in range(n_dev)]
+
+
+def layout_dict(mesh: Mesh, axis: str, n_sealed: int) -> dict:
+    """The placement rule as data: where ``n_sealed`` sealed segments land
+    on ``mesh``'s ``axis``.  The single source of truth for per-device
+    counts and assignment -- :func:`place_segments` builds device arrays
+    from it and ``SegmentedIndex.shard_layout`` reports it, so the report
+    can never drift from what actually runs."""
+    n_dev = int(mesh.shape[axis])
+    return {
+        "axis": axis,
+        "mesh_axes": list(mesh.axis_names),
+        "mesh_shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+        "n_dev": n_dev,
+        "per_dev": max(1, -(-n_sealed // n_dev)),
+        "n_sealed": n_sealed,
+        "assignment": round_robin(n_sealed, n_dev),
+    }
+
+
+def place_segments(segments: Sequence, delta, mesh: Mesh, axis: str,
+                   version: int) -> SegmentPlacement:
+    """Build a :class:`SegmentPlacement` from serve-layer segments.
+
+    Args:
+        segments: sealed segments to shard (objects with ``.state`` /
+            ``.gids`` / ``.live``; typically the live sealed segments of a
+            ``SegmentedIndex``).  The positions in this sequence are what
+            ``assignment`` refers to.
+        delta: the mutable delta segment, replicated across the mesh.
+        mesh: serve mesh; ``axis`` must be one of its axis names.
+        version: mutation counter recorded on the placement.
+
+    Returns:
+        A placement whose device arrays are already ``device_put`` with the
+        proper :class:`NamedSharding` -- ready for
+        ``core.distributed.query_segments_sharded``.
+    """
+    if axis not in mesh.axis_names:
+        raise ValueError(f"mesh has axes {mesh.axis_names}, no {axis!r}")
+    n_sealed = len(segments)
+    lay = layout_dict(mesh, axis, n_sealed)
+    n_dev, per_dev, assignment = lay["n_dev"], lay["per_dev"], lay["assignment"]
+
+    # Block layout: device d's contiguous stripe is assignment[d] + padding.
+    # Padding reuses the delta's (zeroed) leaf shapes with an all-dead live
+    # mask, so it is queryable but contributes nothing.
+    pad_state = jax.tree.map(jnp.zeros_like, delta.state)
+    pad_gids = jnp.full_like(delta.gids, -1)
+    pad_live = jnp.zeros_like(delta.live)
+    states, gids, lives = [], [], []
+    for d in range(n_dev):
+        block = assignment[d]
+        for si in block:
+            states.append(segments[si].state)
+            gids.append(segments[si].gids)
+            lives.append(segments[si].live)
+        for _ in range(per_dev - len(block)):
+            states.append(pad_state)
+            gids.append(pad_gids)
+            lives.append(pad_live)
+
+    shard = NamedSharding(mesh, P(axis))
+    repl = NamedSharding(mesh, P())
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    return SegmentPlacement(
+        mesh=mesh, axis=axis, n_dev=n_dev, per_dev=per_dev,
+        n_sealed=n_sealed, version=version,
+        sealed_state=jax.device_put(stacked, shard),
+        sealed_gids=jax.device_put(jnp.stack(gids), shard),
+        sealed_live=jax.device_put(jnp.stack(lives), shard),
+        delta_state=jax.device_put(delta.state, repl),
+        delta_gids=jax.device_put(delta.gids, repl),
+        delta_live=jax.device_put(delta.live, repl),
+        assignment=tuple(tuple(a) for a in assignment),
+    )
+
+
+def refresh_delta(pl: SegmentPlacement, delta) -> SegmentPlacement:
+    """Re-replicate only the delta leaves of an existing placement.
+
+    Delta-only mutations (every insert that doesn't seal, deletes that hit
+    only the delta) dominate streaming write traffic; refreshing just the
+    one mutable segment keeps them O(delta bytes) instead of restacking and
+    re-transferring every sealed segment.
+    """
+    repl = NamedSharding(pl.mesh, P())
+    return dataclasses.replace(
+        pl,
+        delta_state=jax.device_put(delta.state, repl),
+        delta_gids=jax.device_put(delta.gids, repl),
+        delta_live=jax.device_put(delta.live, repl),
+    )

@@ -1,0 +1,265 @@
+"""SPMD-sharded serve path: placement, parity, registry threading.
+
+The sharding invariant extends PR 2's segmentation invariant one level up:
+``SegmentedIndex.shard(mesh)`` must leave query results **bit-identical** to
+the single-device path over the same live items -- sharding, like
+segmentation, is semantically invisible.  In-process tests cover the
+1-device degenerate mesh (the default CPU test process has exactly one
+device); multi-device behaviour (non-divisible segment counts, tombstones on
+remote shards, compact-while-sharded) runs on an 8-device host mesh in a
+subprocess, like tests/test_spmd.py.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import index as lidx
+from repro.serve import SegmentedIndex, ServableRegistry, ServableSpec
+from repro.sharding import placement
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_DIMS = 16
+
+
+def _cfg(p=2.0):
+    return lidx.IndexConfig(n_dims=N_DIMS, n_tables=4, n_hashes=4,
+                            log2_buckets=8, bucket_capacity=64, r=2.0, p=p)
+
+
+def _data(n, seed=0, scale=1.0):
+    return (np.random.default_rng(seed).normal(size=(n, N_DIMS)) *
+            scale).astype(np.float32)
+
+
+def _mesh1():
+    return compat.make_mesh((1,), ("serve",))
+
+
+# ---------------------------------------------------------------------------
+# in-process: 1-device degenerate mesh
+# ---------------------------------------------------------------------------
+
+
+def test_one_device_mesh_parity():
+    """Degenerate 1-device mesh: same code path, bit-identical results."""
+    si = SegmentedIndex(_cfg(), segment_capacity=128, insert_chunk=64, seed=3)
+    gids = si.insert(_data(300, seed=1))
+    si.delete(gids[::7])
+    q = _data(9, seed=2, scale=0.9)
+    want_i, want_d = si.query(q, 10, n_probes=4)
+
+    si.shard(_mesh1())
+    got_i, got_d = si.query(q, 10, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+    lay = si.shard_layout()
+    assert lay["n_dev"] == 1 and lay["n_sealed"] == 2
+    assert lay["assignment"] == [[0, 1]]
+
+
+def test_mutation_invalidates_placement():
+    """Insert/delete/compact after shard() must be visible on next query."""
+    si = SegmentedIndex(_cfg(), segment_capacity=128, insert_chunk=64, seed=3)
+    gids = si.insert(_data(200, seed=1))
+    si.shard(_mesh1())
+    q = _data(5, seed=2, scale=0.9)
+    si.query(q, 10, n_probes=4)             # builds a placement
+
+    si.insert(_data(50, seed=4))            # mutate through every path
+    si.delete(gids[:40])
+    si.compact()
+    got_i, got_d = si.query(q, 10, n_probes=4)
+
+    si.unshard()
+    want_i, want_d = si.query(q, 10, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+def test_delta_only_mutations_skip_sealed_restack():
+    """Streaming-write hot path: inserts/deletes that touch only the delta
+    must re-replicate the delta, not restack + re-transfer every sealed
+    segment; sealed-set changes must force the full rebuild."""
+    si = SegmentedIndex(_cfg(), segment_capacity=128, insert_chunk=64, seed=3)
+    gids = si.insert(_data(300, seed=1))
+    si.shard(_mesh1())
+    q = _data(5, seed=2, scale=0.9)
+    si.query(q, 10, n_probes=4)
+    pl0 = si._placement
+
+    g2 = si.insert(_data(10, seed=4))       # delta-only insert
+    si.delete(g2[:3])                       # delta-only delete
+    got_i, got_d = si.query(q, 10, n_probes=4)
+    assert si._placement.sealed_state is pl0.sealed_state
+
+    si.delete(gids[1:2])                    # sealed delete -> full rebuild
+    si.query(q, 10, n_probes=4)
+    assert si._placement.sealed_state is not pl0.sealed_state
+
+    si.unshard()
+    si.shard(_mesh1())                      # re-shard also rebuilds cleanly
+    re_i, re_d = si.query(q, 10, n_probes=4)
+    si.unshard()
+    want_i, want_d = si.query(q, 10, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(re_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(re_d), np.asarray(want_d))
+
+
+def test_sharded_empty_and_delta_only():
+    """No sealed segments yet (delta-only) and fully-empty index."""
+    si = SegmentedIndex(_cfg(), segment_capacity=128, seed=0)
+    si.shard(_mesh1())
+    q = _data(4, seed=7)
+    ids, dists = si.query(q, 5)
+    assert np.all(np.asarray(ids) == -1)
+    assert np.all(np.isinf(np.asarray(dists)))
+
+    si.insert(_data(10, seed=8))            # still only the delta
+    assert si.shard_layout()["n_sealed"] == 0
+    ids, _ = si.query(_data(10, seed=8), 1)
+    np.testing.assert_array_equal(np.asarray(ids)[:, 0], np.arange(10))
+
+
+def test_shard_rejects_unknown_axis():
+    si = SegmentedIndex(_cfg(), segment_capacity=128)
+    with pytest.raises(ValueError, match="serve"):
+        si.shard(compat.make_mesh((1,), ("data",)), axis="serve")
+
+
+def test_round_robin_assignment():
+    assert placement.round_robin(7, 3) == [[0, 3, 6], [1, 4], [2, 5]]
+    assert placement.round_robin(0, 2) == [[], []]
+    assert placement.round_robin(2, 1) == [[0, 1]]
+
+
+def test_registry_shard_axis_and_snapshot_restore(tmp_path):
+    """ServableSpec.shard_axis threads the mesh through register and
+    restore; the snapshot records the layout and restore re-derives it."""
+    mesh = _mesh1()
+    reg = ServableRegistry(mesh=mesh)
+    spec = ServableSpec(name="t", n_dims=N_DIMS, r=2.0, log2_buckets=8,
+                        bucket_capacity=64, segment_capacity=128,
+                        insert_chunk=64, chunk_sizes=(8, 32),
+                        shard_axis="serve")
+    sv = reg.register(spec)
+    gids = sv.insert(_data(200, seed=14))
+    sv.delete(gids[::3])
+    q = _data(5, seed=15, scale=0.9)
+    want_i, want_d = sv.index.query(q, 10, n_probes=4)
+    assert reg.report()["t"]["shard_layout"]["axis"] == "serve"
+
+    reg.snapshot(str(tmp_path), step=1)
+    reg2 = ServableRegistry(mesh=mesh)
+    assert reg2.restore(str(tmp_path)) == ["t"]
+    sv2 = reg2.get("t")
+    assert sv2.index.shard_layout() is not None     # placement re-derived
+    got_i, got_d = sv2.index.query(q, 10, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+    # a mesh-less registry restores the same tenant unsharded, same results
+    reg3 = ServableRegistry()
+    assert reg3.restore(str(tmp_path)) == ["t"]
+    assert reg3.get("t").index.shard_layout() is None
+    got_i, got_d = reg3.get("t").index.query(q, 10, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+# ---------------------------------------------------------------------------
+# subprocess: real multi-device mesh (device count locks at first jax init)
+# ---------------------------------------------------------------------------
+
+
+def _run(code: str, timeout=560) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_multi_device_parity_edge_cases():
+    """p in {1,2} x {1,multi}-probe on 3- and 8-device meshes, with a
+    non-divisible segment count and tombstones on remote shards."""
+    stdout = _run("""
+        import numpy as np
+        from repro import compat
+        from repro.core import index as lidx
+        from repro.serve.segments import SegmentedIndex
+
+        for p in (1.0, 2.0):
+            for n_probes in (1, 4):
+                cfg = lidx.IndexConfig(n_dims=16, n_tables=4, n_hashes=4,
+                                       log2_buckets=8, bucket_capacity=64,
+                                       r=2.0, p=p)
+                si = SegmentedIndex(cfg, segment_capacity=64, insert_chunk=32,
+                                    seed=3)
+                rng = np.random.default_rng(1)
+                emb = rng.normal(size=(450, 16)).astype(np.float32)
+                gids = si.insert(emb)            # 7 sealed segments + delta
+                si.delete(gids[::7])             # tombstones on every shard
+                q = (rng.normal(size=(9, 16)) * 0.9).astype(np.float32)
+                want_i, want_d = si.query(q, 10, n_probes=n_probes)
+                for n_dev in (3, 8):             # 7 % 3 != 0: padding path
+                    mesh = compat.make_mesh((n_dev,), ("serve",))
+                    si.shard(mesh)
+                    assert si.shard_layout()["n_sealed"] == 7
+                    got_i, got_d = si.query(q, 10, n_probes=n_probes)
+                    np.testing.assert_array_equal(np.asarray(got_i),
+                                                  np.asarray(want_i))
+                    np.testing.assert_array_equal(np.asarray(got_d),
+                                                  np.asarray(want_d))
+                    si.unshard()
+        print("OK")
+    """)
+    assert "OK" in stdout
+
+
+def test_multi_device_compact_while_sharded():
+    """compact() under an active mesh: results unchanged before/after and
+    identical to the unsharded path; remote-shard tombstones dropped."""
+    stdout = _run("""
+        import numpy as np
+        from repro import compat
+        from repro.core import index as lidx
+        from repro.serve.segments import SegmentedIndex
+
+        cfg = lidx.IndexConfig(n_dims=16, n_tables=4, n_hashes=4,
+                               log2_buckets=8, bucket_capacity=64, r=2.0)
+        si = SegmentedIndex(cfg, segment_capacity=64, insert_chunk=32, seed=3)
+        rng = np.random.default_rng(1)
+        emb = rng.normal(size=(450, 16)).astype(np.float32)
+        gids = si.insert(emb)
+        si.delete(gids[100:300])                 # whole remote shards die
+        mesh = compat.make_mesh((4,), ("serve",))
+        si.shard(mesh)
+        q = (rng.normal(size=(6, 16)) * 0.9).astype(np.float32)
+        before_i, before_d = si.query(q, 10, n_probes=4)
+
+        si.compact()
+        assert si.n_items == 250                 # tombstones physically gone
+        after_i, after_d = si.query(q, 10, n_probes=4)
+        np.testing.assert_array_equal(np.asarray(before_i),
+                                      np.asarray(after_i))
+        np.testing.assert_array_equal(np.asarray(before_d),
+                                      np.asarray(after_d))
+
+        si.unshard()
+        ref_i, ref_d = si.query(q, 10, n_probes=4)
+        np.testing.assert_array_equal(np.asarray(after_i), np.asarray(ref_i))
+        np.testing.assert_array_equal(np.asarray(after_d), np.asarray(ref_d))
+        print("OK")
+    """)
+    assert "OK" in stdout

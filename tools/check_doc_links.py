@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""Fail on broken intra-repo links in the Markdown docs.
+
+Scans every ``*.md`` under the repo root (skipping dot-dirs and
+``experiments/``) for inline links/images ``[text](target)`` and verifies
+each *relative* target resolves to an existing file or directory.  External
+schemes (http/https/mailto) and pure ``#anchor`` links are ignored; a
+``path#anchor`` target is checked for the path part only.
+
+CI runs this in the docs job so README/docs can't rot silently:
+
+    python tools/check_doc_links.py
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline [text](target) / ![alt](target); stops at the first ')' so code
+# spans with parens don't confuse it
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "ftp://")
+_SKIP_DIRS = {"experiments", "node_modules", "__pycache__"}
+
+
+def iter_markdown(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames
+                       if not d.startswith(".") and d not in _SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def check_file(path: str, root: str):
+    """-> (broken [(relpath, lineno, target)], n_intra_repo_links_checked)."""
+    broken, n_links = [], 0
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for m in _LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(_SKIP_SCHEMES) or target.startswith("#"):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                n_links += 1
+                base = root if rel.startswith("/") else os.path.dirname(path)
+                resolved = os.path.normpath(
+                    os.path.join(base, rel.lstrip("/")))
+                if not os.path.exists(resolved):
+                    broken.append((os.path.relpath(path, root), lineno,
+                                   target))
+    return broken, n_links
+
+
+def main(argv=None) -> int:
+    root = os.path.abspath(
+        (argv or sys.argv[1:] or [os.path.join(os.path.dirname(
+            os.path.abspath(__file__)), "..")])[0])
+    broken, n_files, n_links = [], 0, 0
+    for md in iter_markdown(root):
+        n_files += 1
+        file_broken, file_links = check_file(md, root)
+        broken.extend(file_broken)
+        n_links += file_links
+    for path, lineno, target in broken:
+        print(f"BROKEN {path}:{lineno}: {target}")
+    print(f"# checked {n_files} markdown files, {n_links} intra-repo links, "
+          f"{len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
