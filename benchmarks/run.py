@@ -3,7 +3,9 @@
 Prints ``name,us_per_call,derived`` CSV rows (us_per_call where timing makes
 sense, else blank; ``derived`` is the figure's summary statistic) and writes
 every benchmark's metric dict to ``BENCH_results.json`` so the perf
-trajectory is machine-readable across PRs.
+trajectory is machine-readable across PRs.  Each entry is stamped with the
+HEAD ``git_sha`` and its own wall-clock (``wall_s``), so a number in the
+trajectory is always attributable to the commit that produced it.
 
 ``--smoke`` (or REPRO_BENCH_SMOKE=1) shrinks the expensive sweeps for CI and
 writes to ``BENCH_results.smoke.json`` instead -- smoke numbers are sized
@@ -21,6 +23,19 @@ RESULTS_JSON = "BENCH_results.json"
 SMOKE_RESULTS_JSON = "BENCH_results.smoke.json"
 
 
+def _git_sha():
+    """HEAD commit of the repo the harness runs from (None outside git)."""
+    import subprocess
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None if out.returncode == 0 else None
+    except Exception:
+        return None
+
+
 def _run(name, fn):
     t0 = time.perf_counter()
     res = fn()
@@ -35,8 +50,9 @@ def main(argv=None) -> None:
 
     from . import (bench_cosine, bench_embed_error, bench_hash_throughput,
                    bench_index, bench_l2, bench_query_engine, bench_serve,
-                   bench_sharded_serve, bench_w2)
+                   bench_sharded_serve, bench_w2, bench_wasserstein_serve)
 
+    sha = _git_sha()
     print("name,us_per_call,derived")
     jobs = [
         ("fig1_cosine_collisions", bench_cosine.run),
@@ -48,6 +64,7 @@ def main(argv=None) -> None:
         ("query_engine", bench_query_engine.run),
         ("serve", bench_serve.run),
         ("sharded_serve", bench_sharded_serve.run),
+        ("wasserstein_serve", bench_wasserstein_serve.run),
     ]
     all_results = {}
     for name, fn in jobs:
@@ -55,10 +72,15 @@ def main(argv=None) -> None:
             n, us, res = _run(name, fn)
             for k, v in res.items():
                 print(f"{n}/{k},{us:.0f},{v}")
-            all_results[name] = {"us_total": round(us), **res}
+            # every entry self-stamps provenance: the perf trajectory is
+            # only attributable if each number knows its commit + cost
+            all_results[name] = {"us_total": round(us),
+                                 "wall_s": round(us / 1e6, 3),
+                                 "git_sha": sha, **res}
         except Exception as e:  # keep the harness running; report the failure
             print(f"{name},,ERROR:{type(e).__name__}:{e}")
-            all_results[name] = {"error": f"{type(e).__name__}: {e}"}
+            all_results[name] = {"error": f"{type(e).__name__}: {e}",
+                                 "git_sha": sha}
 
     import jax
 
@@ -66,6 +88,7 @@ def main(argv=None) -> None:
     all_results["_meta"] = {
         "backend": jax.default_backend(),
         "smoke": smoke_mode(),
+        "git_sha": sha,
     }
     out_json = SMOKE_RESULTS_JSON if smoke_mode() else RESULTS_JSON
     with open(out_json, "w") as f:

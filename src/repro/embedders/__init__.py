@@ -1,0 +1,41 @@
+"""Function -> R^N embedders: the paper's Sec. 3 constructions as first-class,
+spec-driven objects.
+
+The paper provides two embeddings of L^p function spaces into R^N (truncated
+orthonormal basis, Eq. 3; (Q)MC node sampling, Eq. 6) and, via Remark 1, a
+third workload: 1-D probability distributions embedded by their inverse CDFs
+on the clipped interval [delta, 1-delta], which turns W^p nearest-neighbour
+search into plain l^p LSH.  Before this package each construction lived as
+an inline branch in ``serve.registry``; now every embedder is a
+:class:`FunctionEmbedder` resolved from a name + params dict, so the serve
+stack (and checkpoints) treat "which embedding" as data, not code.
+
+Layering: ``core.basis`` / ``core.montecarlo`` / ``core.wasserstein`` stay
+the math layer (pure functions, paper equations); this package owns the
+*deployment* concerns -- fixed output width, the shared node set, jit
+caching, kernel-backend dispatch, the padded batch palette, and JSON-able
+params that round-trip through the checkpoint ``extra`` manifest.
+
+Public API:
+  FunctionEmbedder      -- the protocol every embedder implements
+  BasisEmbedder         -- Chebyshev/Legendre orthonormal truncation (Eq. 3)
+  QMCEmbedder           -- Sobol/Halton/MC node sampling (Eq. 6)
+  WassersteinEmbedder   -- clipped quantile embedding of distributions
+  make_embedder / embedder_names / register_embedder  -- the registry
+"""
+
+from .base import (FunctionEmbedder, embedder_names, make_embedder,
+                   register_embedder)
+from .basis import BasisEmbedder
+from .qmc import QMCEmbedder
+from .wass import WassersteinEmbedder
+
+__all__ = [
+    "BasisEmbedder",
+    "FunctionEmbedder",
+    "QMCEmbedder",
+    "WassersteinEmbedder",
+    "embedder_names",
+    "make_embedder",
+    "register_embedder",
+]

@@ -1,0 +1,173 @@
+"""FunctionEmbedder protocol + name registry.
+
+An embedder maps batched function data (values at the embedder's shared node
+set, or raw distribution samples) to fixed-width R^N embeddings whose l^p
+geometry approximates the function-space metric.  The contract:
+
+* ``embed(x)`` is batched ``(B, in_width) -> (B, n_dims)`` and pure.  The
+  execution mode is resolved through
+  :func:`repro.kernels.dispatch.kernel_mode` *before* any trace, exactly
+  like the query ops, so ``REPRO_KERNEL_BACKEND`` / per-call overrides never
+  produce stale traces.  Kernel-path ops are jitted inside ``kernels.ops``
+  (per-shape caches bounded by the chunk palette); the reference path runs
+  the same eager ops the serve registry used to inline, so the refactor is
+  **bit-identical** to the pre-embedders behaviour (an outer jit would
+  refuse XLA's eager op ordering and drift by 1 ulp -- guarded by
+  tests/test_embedders.py).
+* ``embed_batched(x)`` tiles arbitrary B into fixed ``batch_size`` padded
+  chunks (tail zero-padded, sliced off after) -- the embedding analogue of
+  ``core.index.query_index_batched``, so streaming ingest dispatches one
+  compiled embed program per (chunk, mode) instead of one per arrival size.
+* ``nodes()`` says where to sample functions for ``embed`` (quantile levels
+  for distribution embedders).
+* ``params()`` returns the JSON-able constructor kwargs;
+  ``make_embedder(name, ..., params=params)`` rebuilds an equivalent
+  embedder -- this is what rides the checkpoint ``extra`` manifest.
+* metadata: ``n_dims`` (output width), ``p`` (the L^p exponent), ``interval``
+  (the domain the nodes live on), ``volume`` (its measure, used by the MC
+  scaling).
+
+Registration: implementations call :func:`register_embedder` at import time;
+``serve.registry.ServableSpec.embedder`` is validated against
+:func:`embedder_names`.
+"""
+
+from __future__ import annotations
+
+import abc
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import dispatch
+
+Array = jax.Array
+
+
+class FunctionEmbedder(abc.ABC):
+    """Spec -> jit-able, fixed-output-width, batched function embedder."""
+
+    #: registry name; set by :func:`register_embedder`.
+    name: str = "?"
+
+    def __init__(self, n_dims: int, p: float = 2.0,
+                 interval: Tuple[float, float] = (0.0, 1.0),
+                 volume: float = 1.0):
+        self.n_dims = int(n_dims)
+        self.p = float(p)
+        self.interval = (float(interval[0]), float(interval[1]))
+        self.volume = float(volume)
+
+    # -- to implement --------------------------------------------------------
+
+    @abc.abstractmethod
+    def nodes(self) -> np.ndarray:
+        """Where to sample functions for :meth:`embed` (the shared node set;
+        quantile levels for distribution embedders)."""
+
+    @abc.abstractmethod
+    def params(self) -> dict:
+        """JSON-able constructor kwargs (everything beyond n_dims/p/volume);
+        ``make_embedder(name, n_dims, p, volume, params=...)`` round-trips."""
+
+    @abc.abstractmethod
+    def _embed(self, x: Array, mode: str) -> Array:
+        """Pure embed body: (B, in_width) f32 -> (B, n_dims) f32.  ``mode``
+        is a resolved kernel mode (compiled/interpret/reference), baked in
+        per trace."""
+
+    # -- shared machinery ----------------------------------------------------
+
+    def embed(self, x, backend: Optional[str] = None) -> Array:
+        """Batched embedding, kernel-dispatched: (B, in_width) -> (B, n_dims).
+
+        ``backend`` resolves via ``dispatch.embed_backend`` (explicit arg >
+        ``$REPRO_KERNEL_BACKEND`` > platform default: compiled on TPU,
+        reference on CPU) before any compiled program is selected.
+        """
+        mode = dispatch.embed_backend(backend)
+        return self._embed(jnp.asarray(x, jnp.float32), mode)
+
+    def embed_batched(self, x, batch_size: int = 128,
+                      backend: Optional[str] = None) -> Array:
+        """Embed arbitrary-B input through fixed ``batch_size`` padded chunks.
+
+        Mirrors ``query_index_batched``: every chunk -- a short arrival
+        included -- is zero-padded up to ``batch_size`` (rows are
+        independent, so padding never changes real rows) and sliced off,
+        keeping the compiled-shape set bounded by the chunk palette instead
+        of the arrival sizes.
+        """
+        x = jnp.asarray(x, jnp.float32)
+        b = x.shape[0]
+        if b <= batch_size:
+            pad = batch_size - b
+            if pad:
+                x = jnp.pad(x, ((0, pad), (0, 0)))
+            e = self.embed(x, backend=backend)
+            return e if not pad else e[:-pad]
+        out = []
+        for start in range(0, b, batch_size):
+            chunk = x[start:start + batch_size]
+            pad = batch_size - chunk.shape[0]
+            if pad:
+                chunk = jnp.pad(chunk, ((0, pad), (0, 0)))
+            e = self.embed(chunk, backend=backend)
+            out.append(e if not pad else e[:-pad])
+        return jnp.concatenate(out)
+
+    def describe(self) -> dict:
+        """JSON-able metadata block for reports/manifests."""
+        return {"name": self.name, "n_dims": self.n_dims, "p": self.p,
+                "interval": list(self.interval), "volume": self.volume,
+                "params": self.params()}
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_FACTORIES: Dict[str, Callable[..., FunctionEmbedder]] = {}
+
+
+def register_embedder(name: str):
+    """Class decorator: register a FunctionEmbedder under ``name``."""
+
+    def deco(cls):
+        cls.name = name
+        _FACTORIES[name] = cls
+        return cls
+
+    return deco
+
+
+def embedder_names() -> Tuple[str, ...]:
+    """Registered embedder names (what ``ServableSpec.embedder`` may be)."""
+    return tuple(sorted(_FACTORIES))
+
+
+def make_embedder(name: str, n_dims: int, p: float = 2.0,
+                  volume: float = 1.0,
+                  params: Optional[Dict[str, Any]] = None
+                  ) -> FunctionEmbedder:
+    """Resolve ``name`` from the registry and build the embedder.
+
+    Args:
+        name: a registered embedder name (see :func:`embedder_names`).
+        n_dims: output embedding width N.
+        p: L^p exponent of the tenant's metric.
+        volume: domain volume for the MC scaling (embedders that derive
+            their own volume -- e.g. the clipped quantile interval --
+            ignore it).
+        params: embedder-specific kwargs, as returned by
+            :meth:`FunctionEmbedder.params` (JSON round-trip safe: lists
+            are accepted where tuples are expected).
+    """
+    try:
+        factory = _FACTORIES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown embedder {name!r}; have {embedder_names()}") from None
+    return factory(n_dims=n_dims, p=p, volume=volume, **dict(params or {}))

@@ -1,0 +1,104 @@
+"""BasisEmbedder: truncated orthonormal-basis embedding (paper Sec. 3.1, Eq. 3).
+
+Functions are sampled at the basis's interpolation nodes and expanded in an
+orthonormal basis; the coefficient vector is the embedding, and l^2 distance
+between coefficient vectors approximates L^2 distance between functions.
+
+Two bases (see :mod:`repro.core.basis` for the math):
+
+* ``chebyshev`` -- the paper's choice; DCT-II extraction.  The kernel-mode
+  hot path runs the fused DCT+scale Pallas kernel (``ops.cheb_embed``): the
+  node weighting, DCT matmul and orthonormal scaling collapse to one
+  ``(F*w @ M^T) * s`` program on the MXU.
+* ``legendre`` -- orthonormal under Lebesgue measure; Gauss-Legendre
+  quadrature.  Its design matrix is (2N, N) -- non-square, outside the
+  ``dct_mm`` kernel's contract -- so every mode uses the jnp matmul (XLA
+  already places a plain dot on the MXU).
+
+Reference mode calls ``core.basis.cheb_l2_coeffs`` / ``legendre_l2_coeffs``
+verbatim -- bit-identical to the pre-refactor inline path in
+``serve.registry`` (guarded by tests/test_embedders.py).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import basis
+from ..kernels import ops
+from .base import FunctionEmbedder, register_embedder
+
+Array = jax.Array
+
+
+@register_embedder("basis")
+class BasisEmbedder(FunctionEmbedder):
+    """Chebyshev/Legendre orthonormal truncation: (B, in_width) -> (B, N).
+
+    Args:
+        n_dims: coefficient count N (also the Chebyshev sample count).
+        p: accepted for protocol uniformity; the basis construction is an
+            L^2 isometry, so distances are l^2 regardless.
+        volume: unused (the orthonormal scaling carries the interval
+            measure); accepted for factory uniformity.
+        interval: the domain [a, b] functions live on.
+        basis: ``"chebyshev"`` (Eq. 3, default) or ``"legendre"``.
+        measure: Chebyshev only -- ``"lebesgue"`` (default) or ``"theta"``;
+            see ``core.basis.cheb_l2_coeffs``.
+    """
+
+    def __init__(self, n_dims: int, p: float = 2.0, volume: float = 1.0,
+                 interval: Tuple[float, float] = (-1.0, 1.0),
+                 basis: str = "chebyshev", measure: str = "lebesgue"):
+        super().__init__(n_dims, p, interval=interval, volume=volume)
+        if basis not in ("chebyshev", "legendre"):
+            raise ValueError(f"unknown basis {basis!r}")
+        if measure not in ("lebesgue", "theta"):
+            raise ValueError(f"unknown measure {measure!r}")
+        self.basis = basis
+        self.measure = measure
+        if basis == "chebyshev":
+            self._init_cheb_kernel_constants()
+
+    def _init_cheb_kernel_constants(self) -> None:
+        """Fold node weight + DCT scale + orthonormal scale into the single
+        (pre, mat, scale) triple the fused kernel consumes."""
+        n = self.n_dims
+        a, b = self.interval
+        j = np.arange(n)
+        t = np.cos(np.pi * (j + 0.5) / n)
+        pre = ((1.0 - t * t) ** 0.25 if self.measure == "lebesgue"
+               else np.ones(n))
+        s1 = np.concatenate([[0.5 / n], np.full(n - 1, 1.0 / n)])
+        s2 = np.concatenate([[np.sqrt(np.pi)],
+                             np.full(n - 1, np.sqrt(np.pi / 2.0))])
+        scale = s1 * s2 * np.sqrt((b - a) / 2.0)
+        self._pre = jnp.asarray(pre, jnp.float32)
+        self._mat = jnp.asarray(basis.dct2_matrix(n).T, jnp.float32)
+        self._scale = jnp.asarray(scale, jnp.float32)
+
+    # -- FunctionEmbedder ----------------------------------------------------
+
+    def nodes(self) -> np.ndarray:
+        if self.basis == "chebyshev":
+            return np.asarray(basis.cheb_nodes(self.n_dims, self.interval))
+        return np.asarray(basis.legendre_nodes(self.n_dims, self.interval,
+                                               n_quad=2 * self.n_dims))
+
+    def params(self) -> dict:
+        return {"interval": list(self.interval), "basis": self.basis,
+                "measure": self.measure}
+
+    def _embed(self, x: Array, mode: str) -> Array:
+        if self.basis == "legendre":
+            return basis.legendre_l2_coeffs(x, self.interval,
+                                            n_coeff=self.n_dims)
+        if mode == "reference":
+            return basis.cheb_l2_coeffs(x, self.interval,
+                                        measure=self.measure)
+        return ops.cheb_embed(x * self._pre, self._mat, self._scale,
+                              backend=mode)

@@ -1,0 +1,73 @@
+"""QMCEmbedder: (quasi-)Monte Carlo node-sampling embedding (Sec. 3.2, Eq. 6).
+
+T(f) = (V/N)^(1/p) * (f(x_1), ..., f(x_N)) with x_i from a shared node set:
+a low-discrepancy sequence (Sobol / Halton) or plain i.i.d. Monte Carlo.
+Works for any p >= 1 -- the construction the paper uses whenever p != 2.
+
+The embed body is a single scale multiply (the nodes do the work at sample
+time), so there is no Pallas kernel to dispatch to; every mode runs the same
+jnp program, bit-identical to ``core.montecarlo.mc_embedding`` -- and
+therefore to the pre-refactor inline path in ``serve.registry``.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import montecarlo
+from .base import FunctionEmbedder, register_embedder
+
+Array = jax.Array
+
+SEQUENCES = ("sobol", "halton", "mc")
+
+
+@register_embedder("qmc")
+class QMCEmbedder(FunctionEmbedder):
+    """(Q)MC node sampling: (B, N) values at the node set -> (B, N).
+
+    Args:
+        n_dims: node count N (input and output width).
+        p: L^p exponent of the metric the embedding approximates.
+        volume: domain volume V in the (V/N)^(1/p) scaling.
+        interval: the 1-D domain nodes are drawn from.
+        sequence: ``"sobol"`` (default) / ``"halton"`` low-discrepancy, or
+            ``"mc"`` for i.i.d. uniform nodes.
+        skip: leading low-discrepancy points to discard (QMC practice).
+        seed: node RNG seed (``sequence="mc"`` only).
+    """
+
+    def __init__(self, n_dims: int, p: float = 2.0, volume: float = 1.0,
+                 interval: Tuple[float, float] = (0.0, 1.0),
+                 sequence: str = "sobol", skip: int = 64, seed: int = 0):
+        super().__init__(n_dims, p, interval=interval, volume=volume)
+        if sequence not in SEQUENCES:
+            raise ValueError(
+                f"unknown sequence {sequence!r}; want one of {SEQUENCES}")
+        self.sequence = sequence
+        self.skip = int(skip)
+        self.seed = int(seed)
+        if sequence == "mc":
+            pts = montecarlo.mc_nodes(jax.random.PRNGKey(self.seed),
+                                      self.n_dims, 1, self.interval)
+        else:
+            pts = montecarlo.qmc_nodes(self.n_dims, 1, self.interval,
+                                       sequence, skip=self.skip)
+        self._nodes = np.asarray(pts)[:, 0]
+
+    # -- FunctionEmbedder ----------------------------------------------------
+
+    def nodes(self) -> np.ndarray:
+        return self._nodes
+
+    def params(self) -> dict:
+        return {"interval": list(self.interval), "sequence": self.sequence,
+                "skip": self.skip, "seed": self.seed}
+
+    def _embed(self, x: Array, mode: str) -> Array:
+        del mode  # a scale multiply has no kernel path
+        return montecarlo.mc_embedding(x, self.volume, p=self.p)

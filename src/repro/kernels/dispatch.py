@@ -113,6 +113,24 @@ def hash_backend() -> str:
     return "compiled" if _platform() == "tpu" else "reference"
 
 
+def embed_backend(override: str | None = None) -> str:
+    """Kernel mode for the embedder layer (``repro.embedders``).
+
+    Like :func:`query_backend` for the re-rank tail: the production default
+    is the compiled kernel on TPU and the pure-jnp reference on CPU --
+    interpret-mode embedding exists for kernel validation, not serving (the
+    interpreter re-materialises operands per grid step).  The reference
+    path is also what keeps the embedder refactor bit-identical to the old
+    inline serve-registry code on CPU.  An explicit ``override`` or
+    ``$REPRO_KERNEL_BACKEND`` still wins, so TPU-less CI can exercise the
+    kernel path end to end.
+    """
+    mode = override or os.environ.get(_ENV_KERNEL)
+    if mode:
+        return kernel_mode(mode)
+    return "compiled" if _platform() == "tpu" else "reference"
+
+
 # ---------------------------------------------------------------------------
 # Per-shape block-size selection
 # ---------------------------------------------------------------------------

@@ -2,13 +2,16 @@
 
     python -m repro.launch.serve --steps 60 --insert-batch 64 --query-batch 8
 
-Drives the repro.serve stack end to end with synthetic function traffic:
+Drives the repro.serve stack end to end with synthetic traffic:
 
-* two tenants with different metrics/embedders share one registry --
-  ``l2-basis`` (p=2, truncated Chebyshev-basis embedding, Eq. 3) and
-  ``l1-qmc`` (p=1, QMC node-sample embedding, Eq. 6);
-* every tick, a batch of random functions is embedded and **inserted** into
-  the mutable delta segment while **queries** stream through the
+* three tenants with different metrics/embedders share one registry --
+  ``l2-basis`` (p=2, truncated Chebyshev-basis embedding, Eq. 3),
+  ``l1-qmc`` (p=1, QMC node-sample embedding, Eq. 6) and ``w2-quantile``
+  (W^2 over 1-D distributions: raw empirical-Gaussian draws embedded by
+  their clipped quantile functions, Sec. 2.2 / Remark 1);
+* every tick, a batch of random functions (or raw distribution samples,
+  for the Wasserstein tenant) is embedded and **inserted** into the
+  mutable delta segment while **queries** stream through the
   micro-batcher's admission queue (deadline flush, padded chunk palette);
 * a fraction of old items is **deleted** (tombstones); when garbage exceeds
   ``--compact-at`` the tenant is **compacted**;
@@ -92,13 +95,28 @@ def main():
                          segment_capacity=args.segment_capacity,
                          chunk_sizes=(8, 32, 128), max_delay_ms=2.0,
                          shard_axis=shard_axis),
+            ServableSpec(name="w2-quantile", n_dims=args.n_dims, p=2.0,
+                         r=0.5, embedder="wasserstein",
+                         segment_capacity=args.segment_capacity,
+                         chunk_sizes=(8, 32, 128), max_delay_ms=2.0,
+                         shard_axis=shard_axis),
         ):
             registry.register(spec)
         print(f"[serve] registered tenants {registry.names()}")
 
     def sample_fvals(sv, n):
-        """Random smooth functions sampled at the tenant's node set:
-        mixtures of a few random sines (bounded, infinitely divisible)."""
+        """Per-tenant synthetic inputs for ``Servable.embed``.
+
+        Function tenants get random smooth functions sampled at the
+        tenant's node set (mixtures of a few random sines -- bounded,
+        infinitely divisible); the Wasserstein tenant gets raw draws from
+        random 1-D Gaussians (the empirical-distribution ingest path: the
+        embedder computes the clipped quantile function itself).
+        """
+        if sv.spec.embedder == "wasserstein":
+            mu = rng.uniform(-1.0, 1.0, size=(n, 1))
+            sig = rng.uniform(0.1, 1.0, size=(n, 1))
+            return mu + sig * rng.normal(size=(n, 256))
         nodes = sv.nodes()
         amps = rng.normal(size=(n, 3)) / 3.0
         freqs = rng.uniform(0.5, 4.0, size=(n, 3))
@@ -158,6 +176,7 @@ def main():
         lay = rep["shard_layout"]
         shard_s = (f"shards={lay['n_dev']}x{lay['per_dev']}"
                    if lay else "shards=off")
+        bal = rep["stats"]["shard_balance"]
         print(f"[serve] {name}: live={occ['n_live']}/{occ['n_items']} "
               f"segments={occ['n_segments']} "
               f"tombstones={occ['tombstone_frac']:.2f} "
@@ -166,7 +185,8 @@ def main():
               f"recall_proxy={probe[name]} "
               f"qps={rep['stats']['qps']} "
               f"p95={rep['stats']['p95_ms']}ms "
-              f"jit_shapes={rep['batcher']['unique_shapes']}")
+              f"jit_shapes={rep['batcher']['unique_shapes']} "
+              f"dev_imbalance={bal['device_imbalance']}")
 
     if args.snapshot:
         registry.snapshot(args.snapshot, step=args.steps)

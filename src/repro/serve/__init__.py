@@ -7,9 +7,13 @@ Layering (each module usable alone):
               shard(mesh) for SPMD serving -- see docs/architecture.md)
   batcher  -- MicroBatcher: deadline-based admission queue that coalesces
               heterogeneous requests into a fixed padded chunk palette
-  stats    -- ServingStats / recall_proxy / occupancy_report
+  stats    -- ServingStats (rates, latency, per-shard merge-win telemetry) /
+              recall_proxy / occupancy_report
   registry -- ServableSpec / Servable / ServableRegistry: named multi-tenant
-              endpoints with checkpoint snapshot/restore
+              endpoints with checkpoint snapshot/restore; embedders are
+              resolved by name from repro.embedders (basis / qmc /
+              wasserstein), so function- and distribution-valued tenants
+              share one front end
 
 ``python -m repro.launch.serve`` drives the whole stack;
 ``benchmarks/bench_serve.py`` measures it.

@@ -7,16 +7,23 @@ segment sizing, batching palette); a **Servable** is the live instance
 names to servables and owns snapshot/restore.
 
 Per-tenant configs are the point: the paper's family covers p in {1, 2}
-and both embedding constructions (truncated orthonormal basis, Sec. 3.1 /
-Eq. 3, vs (Q)MC node sampling, Sec. 3.2 / Eq. 6), and "Efficient ANN Search
-for Multiple Weighted l_p Distance Functions" needs *several* metrics live
-at once -- so each tenant picks its own and the admission front end stays
-shared.
+and all three embedding constructions (truncated orthonormal basis,
+Sec. 3.1 / Eq. 3; (Q)MC node sampling, Sec. 3.2 / Eq. 6; clipped quantile
+functions for Wasserstein distance over distributions, Sec. 2.2 /
+Remark 1), and "Efficient ANN Search for Multiple Weighted l_p Distance
+Functions" needs *several* metrics live at once -- so each tenant picks
+its own and the admission front end stays shared.
+
+Embedder resolution is registry-driven: ``ServableSpec.embedder`` names a
+:mod:`repro.embedders` implementation and ``ServableSpec.embedder_params``
+carries its JSON-able construction kwargs -- no embedder-specific branches
+live here, and a new embedder registers without touching the serve layer.
 
 Snapshots go through checkpoint/ (atomic rename, keep-last-k, manifest) --
 arrays in the pytree payload, host bookkeeping (specs, fill counters, gid
-maps are reconstructed from the gid arrays) in the manifest's ``extra``
-dict.
+maps are reconstructed from the gid arrays; the embedder-params dict) in
+the manifest's ``extra`` dict.  Restore tolerates unknown spec keys, so a
+snapshot written by a newer build loads on an older one.
 """
 
 from __future__ import annotations
@@ -24,20 +31,23 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import checkpoint as ckpt
-from ..core import basis, montecarlo
 from ..core.index import IndexConfig, LSHIndexState
+from ..embedders import embedder_names, make_embedder
 from .batcher import MicroBatcher
 from .segments import Segment, SegmentedIndex
 from .stats import ServingStats, occupancy_report
 
-EMBEDDERS = ("basis", "qmc")
+# NOTE: deliberately not snapshotted into a module constant -- specs are
+# validated against the *live* embedder registry, so an embedder registered
+# after this module imports (the @register_embedder extension point) is
+# immediately deployable.
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,7 +62,11 @@ class ServableSpec:
     n_hashes: int = 4
     log2_buckets: int = 10
     bucket_capacity: int = 32
-    embedder: str = "basis"        # "basis" (Eq. 3) | "qmc" (Eq. 6)
+    embedder: str = "basis"        # a repro.embedders name: "basis" (Eq. 3)
+                                   # | "qmc" (Eq. 6) | "wasserstein" (Rem. 1)
+    # embedder-specific construction kwargs (JSON-able; rides the snapshot
+    # manifest's ``extra`` dict) -- see each embedder's ``params()``
+    embedder_params: Optional[Dict[str, Any]] = None
     volume: float = 1.0            # domain volume for the MC embedding
     segment_capacity: int = 1024
     insert_chunk: int = 256
@@ -66,8 +80,9 @@ class ServableSpec:
     shard_axis: Optional[str] = None
 
     def __post_init__(self):
-        if self.embedder not in EMBEDDERS:
-            raise ValueError(f"embedder must be one of {EMBEDDERS}")
+        if self.embedder not in embedder_names():
+            raise ValueError(
+                f"embedder must be one of {embedder_names()}")
 
     def index_config(self) -> IndexConfig:
         return IndexConfig(n_dims=self.n_dims, n_tables=self.n_tables,
@@ -75,6 +90,19 @@ class ServableSpec:
                            log2_buckets=self.log2_buckets,
                            bucket_capacity=self.bucket_capacity,
                            r=self.r, p=self.p)
+
+
+def _spec_from_manifest(raw: Dict[str, Any]) -> ServableSpec:
+    """Rebuild a ServableSpec from a snapshot manifest dict.
+
+    Unknown keys are dropped (a snapshot written by a newer build with extra
+    spec fields still restores here); JSON-decoded lists are re-tupled where
+    the dataclass wants tuples.
+    """
+    known = {f.name for f in dataclasses.fields(ServableSpec)}
+    kw = {k: v for k, v in raw.items() if k in known}
+    kw["chunk_sizes"] = tuple(kw["chunk_sizes"])
+    return ServableSpec(**kw)
 
 
 class Servable:
@@ -91,15 +119,19 @@ class Servable:
     def __init__(self, spec: ServableSpec, *, backend: Optional[str] = None,
                  mesh=None):
         self.spec = spec
+        self.embedder = make_embedder(spec.embedder, n_dims=spec.n_dims,
+                                      p=spec.p, volume=spec.volume,
+                                      params=spec.embedder_params)
+        self.stats = ServingStats()
         self.index = SegmentedIndex(spec.index_config(),
                                     segment_capacity=spec.segment_capacity,
                                     insert_chunk=spec.insert_chunk,
                                     key=jax.random.PRNGKey(spec.seed),
-                                    backend=backend)
+                                    backend=backend,
+                                    on_fanout=self.stats.record_fanout)
         if spec.shard_axis is not None and mesh is not None \
                 and spec.shard_axis in mesh.axis_names:
             self.index.shard(mesh, spec.shard_axis)
-        self.stats = ServingStats()
         self.batcher = MicroBatcher(self._raw_query,
                                     chunk_sizes=spec.chunk_sizes,
                                     max_delay_ms=spec.max_delay_ms,
@@ -108,18 +140,22 @@ class Servable:
     # -- data plane ---------------------------------------------------------
 
     def embed(self, fvals) -> jnp.ndarray:
-        """Function samples (B, n_dims) at the tenant's node set -> R^n_dims
-        embeddings under the tenant's construction."""
-        fvals = jnp.asarray(fvals, jnp.float32)
-        if self.spec.embedder == "basis":
-            return basis.cheb_l2_coeffs(fvals)
-        return montecarlo.mc_embedding(fvals, self.spec.volume, p=self.spec.p)
+        """Function data (B, in_width) -> (B, n_dims) embeddings under the
+        tenant's construction.
+
+        ``in_width`` is ``len(self.nodes())`` for node-sampled embedders and
+        the raw draw count for distribution embedders.  Batched through the
+        fixed ingest-chunk palette (``FunctionEmbedder.embed_batched``) with
+        kernel-backend dispatch, so sustained ingest compiles one embed
+        program per chunk, like queries do.
+        """
+        return self.embedder.embed_batched(
+            fvals, batch_size=max(self.spec.chunk_sizes))
 
     def nodes(self) -> np.ndarray:
-        """Where to sample functions for ``embed`` (tenant's shared node set)."""
-        if self.spec.embedder == "basis":
-            return np.asarray(basis.cheb_nodes(self.spec.n_dims))
-        return np.asarray(montecarlo.qmc_nodes(self.spec.n_dims))[:, 0]
+        """Where to sample functions for ``embed`` (tenant's shared node
+        set; quantile levels for distribution tenants)."""
+        return self.embedder.nodes()
 
     def insert(self, embeddings, gids=None) -> np.ndarray:
         out = self.index.insert(embeddings, gids=gids)
@@ -146,6 +182,7 @@ class Servable:
 
     def report(self) -> dict:
         return {"spec": dataclasses.asdict(self.spec),
+                "embedder": self.embedder.describe(),
                 "stats": self.stats.snapshot(),
                 "batcher": {"unique_shapes": self.batcher.unique_shapes(),
                             "n_batches": self.batcher.n_batches,
@@ -237,9 +274,7 @@ class ServableRegistry:
             if s is None:
                 continue
             extra = ckpt.load_extra(tdir, s)
-            spec = ServableSpec(**{**extra["spec"],
-                                   "chunk_sizes": tuple(
-                                       extra["spec"]["chunk_sizes"])})
+            spec = _spec_from_manifest(extra["spec"])
             sv = self.register(spec)
             idx = sv.index
             cfg = spec.index_config()

@@ -20,7 +20,11 @@ module turns it into a *living* index the way LSM storage engines do:
   collective top-k fan-in (``core.distributed.query_segments_sharded`` via
   ``sharding.placement``) -- results stay bit-identical to the
   single-device path (the sharding invariant, docs/architecture.md §
-  "Invariants").
+  "Invariants");
+* an optional **on_fanout hook** attributes every merged top-k slot back to
+  the segment (and device, when sharded) that contributed it -- the serve
+  layer wires it to ``ServingStats.record_fanout`` so placement skew is
+  observable per tenant.
 
 Every segment shares ONE hash family (``create_index(family=...)``), so an
 item's bucket ids are independent of which segment holds it.  Consequence
@@ -120,10 +124,16 @@ class SegmentedIndex:
 
     def __init__(self, cfg: IndexConfig, *, segment_capacity: int = 1024,
                  insert_chunk: int = 256, key: Optional[jax.Array] = None,
-                 backend: Optional[str] = None, seed: int = 0):
+                 backend: Optional[str] = None, seed: int = 0,
+                 on_fanout=None):
         if insert_chunk > segment_capacity:
             insert_chunk = segment_capacity
         self.cfg = cfg
+        # load/imbalance telemetry hook: called after every cross-segment
+        # merge with (seg_wins, dev_wins, seg_candidates) -- see
+        # ServingStats.record_fanout, whose signature this matches.  None
+        # (the default) costs nothing: no host sync, no attribution loop.
+        self._on_fanout = on_fanout
         self.segment_capacity = int(segment_capacity)
         self.insert_chunk = int(insert_chunk)
         # Resolve once: a raw None would bake the first call's platform
@@ -394,23 +404,83 @@ class SegmentedIndex:
             self.query_shapes.add((int(q.shape[0]), k, n_probes))
             if self._mesh is not None:
                 pl = self._current_placement()
-                return distributed.query_segments_sharded(
+                g, d = distributed.query_segments_sharded(
                     pl, self.cfg, q, k, n_probes=n_probes,
                     backend=self.backend)
-            segs = [s for s in self.segments if s.n_live > 0]
-            fn = _segment_query_fn(self.cfg, k, n_probes, self.backend)
-            shards = [fn(s.state, q, s.live, s.gids) for s in segs]
+            else:
+                g = None
+                seg_ids = [i for i, s in enumerate(self.segments)
+                           if s.n_live > 0]
+                fn = _segment_query_fn(self.cfg, k, n_probes, self.backend)
+                shards = [fn(self.segments[i].state, q, self.segments[i].live,
+                             self.segments[i].gids) for i in seg_ids]
+        if g is not None:
+            # sharded path: the device->host sync and attribution loop run
+            # OUTSIDE the lock, like the unsharded telemetry below --
+            # writers must not stall behind a collective readback
+            if self._on_fanout is not None:
+                self._fanout_telemetry(np.asarray(g))
+            return g, d
         if not shards:
             return (jnp.full((q.shape[0], k), -1, jnp.int32),
                     jnp.full((q.shape[0], k), jnp.inf, jnp.float32))
         if len(shards) == 1:
-            g, d = shards[0]
+            g, d = _merged(shards[0][1], shards[0][0], k)
             # single segment is already top-k; merge only to normalise tie
             # order so results don't depend on the segment count
-            return _merged(d, g, k)
-        g_all = jnp.concatenate([g for g, _ in shards], axis=1)
-        d_all = jnp.concatenate([d for _, d in shards], axis=1)
-        return _merged(d_all, g_all, k)
+        else:
+            g_all = jnp.concatenate([g for g, _ in shards], axis=1)
+            d_all = jnp.concatenate([d for _, d in shards], axis=1)
+            g, d = _merged(d_all, g_all, k)
+        if self._on_fanout is not None:
+            self._fanout_telemetry(
+                np.asarray(g), seg_ids,
+                [np.asarray(sg) for sg, _ in shards])
+        return g, d
+
+    def _fanout_telemetry(self, g_np: np.ndarray,
+                          seg_ids: Optional[List[int]] = None,
+                          shard_gs: Optional[List[np.ndarray]] = None
+                          ) -> None:
+        """Attribute one merged top-k back to segments/devices and feed the
+        ``on_fanout`` hook (ServingStats.record_fanout signature).
+
+        Wins come from the merged gids via the locator (gids are globally
+        unique, so the winning segment is unambiguous); candidate counts
+        are the valid rows each unsharded shard offered the merge; device
+        wins map segments through the live placement's round-robin
+        assignment (delta -> rank 0, matching the collective program).
+        """
+        with self._lock:
+            n_segs = len(self.segments)
+            wins = [0] * n_segs
+            for gid in g_np.ravel().tolist():
+                if gid < 0:
+                    continue
+                loc = self._locator.get(int(gid))
+                if loc is not None:
+                    wins[loc[0]] += 1
+            cands = None
+            if seg_ids is not None:
+                cands = [0] * n_segs
+                for si, sg in zip(seg_ids, shard_gs):
+                    if si < n_segs:     # a concurrent compact may have
+                        cands[si] = int((sg >= 0).sum())  # shrunk the list
+            dev_wins = None
+            if self._mesh is not None and self._placement is not None:
+                pl = self._placement
+                sealed_pos = [i for i, s in enumerate(self.segments[:-1])
+                              if s.n_live > 0]
+                dev_of = {n_segs - 1: 0}          # delta contributes on rank 0
+                for dev, block in enumerate(pl.assignment):
+                    for fi in block:
+                        if fi < len(sealed_pos):  # placement may lag a
+                            dev_of[sealed_pos[fi]] = dev  # concurrent mutation
+                dev_wins = [0] * pl.n_dev
+                for si, w in enumerate(wins):
+                    if w:
+                        dev_wins[dev_of.get(si, 0)] += w
+        self._on_fanout(wins, dev_wins, cands)
 
     def occupancy(self) -> List[dict]:
         return [s.occupancy() for s in self.segments]

@@ -1,4 +1,5 @@
-"""Serving statistics: QPS, latency percentiles, recall proxy, occupancy.
+"""Serving statistics: QPS, latency percentiles, recall proxy, occupancy,
+fan-out load balance.
 
 Host-side, lock-guarded, allocation-light: a bounded deque of (t, n) events
 for the rate windows and a bounded latency reservoir for percentiles.  The
@@ -7,6 +8,16 @@ segmented index and an exact brute-force scan over the live items -- the
 serving-time analogue of the benchmark-time ``recall_at_k`` -- so operators
 can see quality drift as segments churn (e.g. bucket overflow after many
 compact-free inserts).
+
+Fan-out telemetry (``record_fanout`` / ``shard_balance``): per-shard
+candidate counts and merge-win rates, fed by ``SegmentedIndex.query`` after
+every cross-segment merge.  A *win* is a top-k slot in the merged result
+attributed back to the segment (and, when sharded, the device) that
+contributed it -- so a skewed round-robin placement shows up as one device
+winning most merges instead of hiding inside an aggregate latency number.
+Counters are positional (slot i = segment/device i at record time) and
+reset only with the stats object; after a compaction the segment set
+changes, so read them as "recent traffic shape", not an exact ledger.
 """
 
 from __future__ import annotations
@@ -14,11 +25,21 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
 from ..core import index as lidx
+
+
+def _accumulate(acc: np.ndarray, new: Sequence[int]) -> np.ndarray:
+    """acc += new, growing acc to len(new) (positional, zero-filled)."""
+    new = np.asarray(list(new), np.int64)
+    if new.shape[0] > acc.shape[0]:
+        acc = np.concatenate([acc, np.zeros(new.shape[0] - acc.shape[0],
+                                            np.int64)])
+    acc[:new.shape[0]] += new
+    return acc
 
 
 class ServingStats:
@@ -35,6 +56,11 @@ class ServingStats:
         self._lat = np.zeros((reservoir,), np.float64)
         self._lat_n = 0                       # total recorded (ring index)
         self.totals = {"queries": 0, "inserts": 0, "deletes": 0, "batches": 0}
+        # fan-out load balance (see module docstring): positional counters
+        self._seg_wins = np.zeros((0,), np.int64)
+        self._seg_cands = np.zeros((0,), np.int64)
+        self._dev_wins = np.zeros((0,), np.int64)
+        self._fanout_n = 0
 
     def _trim(self, dq: deque, now: float) -> None:
         while dq and dq[0][0] < now - self.window:
@@ -70,6 +96,46 @@ class ServingStats:
             self._trim(self._deletes, now)
             self.totals["deletes"] += n
 
+    def record_fanout(self, seg_wins: Sequence[int],
+                      dev_wins: Optional[Sequence[int]] = None,
+                      seg_candidates: Optional[Sequence[int]] = None) -> None:
+        """One cross-segment merge's attribution: ``seg_wins[i]`` top-k slots
+        won by segment i, ``seg_candidates[i]`` valid candidates it offered
+        (unsharded fan-out only), ``dev_wins[d]`` wins per device (sharded
+        only)."""
+        with self._lock:
+            self._seg_wins = _accumulate(self._seg_wins, seg_wins)
+            if seg_candidates is not None:
+                self._seg_cands = _accumulate(self._seg_cands, seg_candidates)
+            if dev_wins is not None:
+                self._dev_wins = _accumulate(self._dev_wins, dev_wins)
+            self._fanout_n += 1
+
+    def shard_balance(self) -> dict:
+        """Merge-win / candidate balance across segments and devices.
+
+        ``merge_win_rate[i]`` is segment i's share of all top-k wins;
+        ``device_imbalance`` is max/mean of per-device wins (1.0 = perfectly
+        balanced round-robin, higher = skew an operator should see).
+        """
+        with self._lock:
+            seg_w = self._seg_wins.tolist()
+            seg_c = self._seg_cands.tolist()
+            dev_w = self._dev_wins.tolist()
+            n = self._fanout_n
+        tot = sum(seg_w)
+        dev_tot = sum(dev_w)
+        return {
+            "n_sampled": n,
+            "per_segment_wins": seg_w,
+            "per_segment_candidates": seg_c,
+            "per_device_wins": dev_w,
+            "merge_win_rate": [round(w / tot, 4) for w in seg_w] if tot
+            else [],
+            "device_imbalance": (round(max(dev_w) * len(dev_w) / dev_tot, 3)
+                                 if dev_tot else 0.0),
+        }
+
     def _rate(self, dq: deque) -> float:
         now = self.clock()
         with self._lock:
@@ -100,7 +166,8 @@ class ServingStats:
                 "insert_rate": round(self.insert_rate(), 2),
                 **{k: round(v, 3) for k, v in
                    self.latency_percentiles().items()},
-                "totals": dict(self.totals)}
+                "totals": dict(self.totals),
+                "shard_balance": self.shard_balance()}
 
 
 def recall_proxy(segmented, queries, k: int, n_probes: int = 1) -> float:

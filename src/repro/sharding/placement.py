@@ -15,6 +15,13 @@ across a mesh we exploit exactly that regularity:
   device could absorb local inserts/serve the freshest writes, and bucket
   ids stay globally consistent because all segments share one family.
 
+Placement is **embedder-agnostic by construction**: it sees only segment
+pytrees (state/gids/live), never what the vectors embed, so a
+distribution-valued Wasserstein tenant is placed identically to the basis/
+QMC function tenants -- one placement rule for every workload the embedder
+registry can express (verified by
+``tests/test_sharded_serve.py::test_wasserstein_tenant_sharded_parity``).
+
 A :class:`SegmentPlacement` is an immutable snapshot of the index at one
 mutation ``version``; the serve layer rebuilds it lazily when the index
 mutates (insert/delete/seal/compact all bump the version).  Queries against

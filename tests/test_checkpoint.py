@@ -1,0 +1,119 @@
+"""Checkpoint ``extra``-manifest round-trips.
+
+The serve registry's host bookkeeping -- including the embedder-params dict
+introduced with the embedder layer -- rides the manifest's ``extra`` field,
+so its JSON semantics are load-bearing: nested dicts must survive, absent
+extras must read back as {}, and unknown keys (a snapshot written by a newer
+build) must be tolerated rather than rejected.
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as ckpt
+from repro.serve import ServableRegistry, ServableSpec
+
+N_DIMS = 16
+
+
+def _tree():
+    return {"w": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)}
+
+
+def test_extra_nested_dicts_round_trip(tmp_path):
+    extra = {"spec": {"name": "t", "embedder_params": {"clip": 0.01,
+                                                       "sequence": "sobol"},
+                      "chunk_sizes": [8, 32]},
+             "segments": [{"n_items": 3, "nested": {"deep": [1, 2, 3]}}],
+             "empty": {}, "none": None}
+    ckpt.save(str(tmp_path), 1, _tree(), extra=extra)
+    got = ckpt.load_extra(str(tmp_path), 1)
+    assert got == json.loads(json.dumps(extra))   # exact JSON round-trip
+    assert got["spec"]["embedder_params"]["clip"] == 0.01
+
+
+def test_extra_absent_and_empty(tmp_path):
+    """No extra -> {}, explicit {} -> {} (and the payload still restores)."""
+    ckpt.save(os.path.join(tmp_path, "a"), 1, _tree())
+    assert ckpt.load_extra(os.path.join(tmp_path, "a"), 1) == {}
+    ckpt.save(os.path.join(tmp_path, "b"), 2, _tree(), extra={})
+    assert ckpt.load_extra(os.path.join(tmp_path, "b"), 2) == {}
+    out = ckpt.restore(os.path.join(tmp_path, "a"), 1, _tree())
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(_tree()["w"]))
+
+
+def _spec(name="t", **kw):
+    base = dict(name=name, n_dims=N_DIMS, r=2.0, log2_buckets=8,
+                bucket_capacity=64, segment_capacity=128, insert_chunk=64,
+                chunk_sizes=(8, 32))
+    base.update(kw)
+    return ServableSpec(**base)
+
+
+def _data(n, seed=0):
+    return np.random.default_rng(seed).normal(size=(n, N_DIMS)).astype(
+        np.float32)
+
+
+def test_registry_restore_tolerates_unknown_spec_keys(tmp_path):
+    """A snapshot whose spec carries fields this build doesn't know (written
+    by a newer build) must still restore -- unknown keys are dropped."""
+    reg = ServableRegistry()
+    sv = reg.register(_spec())
+    sv.insert(_data(50, seed=1))
+    reg.snapshot(str(tmp_path), step=3)
+
+    mpath = os.path.join(tmp_path, "t", f"step_{3:010d}", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["extra"]["spec"]["future_knob"] = {"nested": True}
+    manifest["extra"]["totally_new_section"] = [1, 2]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+
+    reg2 = ServableRegistry()
+    assert reg2.restore(str(tmp_path)) == ["t"]
+    assert not hasattr(reg2.get("t").spec, "future_knob")
+    ids, _ = reg2.get("t").index.query(_data(4, seed=1)[:4], 3)
+    assert np.asarray(ids)[:, 0].tolist() == [0, 1, 2, 3]
+
+
+def test_embedder_params_ride_snapshot_restore(tmp_path):
+    """The embedder-params dict round-trips through snapshot/restore and the
+    restored tenant reproduces both embeddings and query results."""
+    reg = ServableRegistry()
+    sv = reg.register(_spec(embedder="wasserstein", p=2.0, r=0.5,
+                            embedder_params={"clip": 0.005,
+                                             "sequence": "halton"}))
+    rng = np.random.default_rng(2)
+    mu = rng.uniform(-1, 1, 40).astype(np.float32)
+    sig = rng.uniform(0.2, 1.0, 40).astype(np.float32)
+    emb = np.asarray(sv.embedder.embed_gaussian(mu, sig))
+    sv.insert(emb)
+    want_ids, want_d = sv.index.query(emb[:5], 5, n_probes=4)
+
+    reg.snapshot(str(tmp_path), step=1)
+    reg2 = ServableRegistry()
+    assert reg2.restore(str(tmp_path)) == ["t"]
+    sv2 = reg2.get("t")
+    assert sv2.spec.embedder_params == {"clip": 0.005, "sequence": "halton"}
+    assert sv2.embedder.clip == 0.005
+    np.testing.assert_array_equal(
+        np.asarray(sv2.embedder.embed_gaussian(mu, sig)), emb)
+    got_ids, got_d = sv2.index.query(emb[:5], 5, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(got_ids), np.asarray(want_ids))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+def test_restore_missing_key_still_raises(tmp_path):
+    """Unknown-key tolerance must not weaken the payload contract: a target
+    key absent from the checkpoint is an error, not a silent zero-fill."""
+    ckpt.save(str(tmp_path), 1, _tree())
+    with pytest.raises(KeyError, match="missing key"):
+        ckpt.restore(str(tmp_path), 1, {"w": _tree()["w"],
+                                        "extra_leaf": jnp.zeros((2,))})

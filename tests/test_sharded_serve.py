@@ -173,6 +173,87 @@ def test_registry_shard_axis_and_snapshot_restore(tmp_path):
     np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
 
 
+def test_wasserstein_tenant_sharded_parity():
+    """The distribution-valued tenant is placed exactly like the others:
+    shard(mesh) leaves its W2 query results bit-identical, and the layout
+    report matches a basis tenant with the same segment history."""
+    mesh = _mesh1()
+    reg = ServableRegistry(mesh=mesh)
+    specs = {}
+    for name, embedder in (("w2", "wasserstein"), ("l2", "basis")):
+        specs[name] = ServableSpec(
+            name=name, n_dims=N_DIMS, p=2.0, r=0.5, embedder=embedder,
+            log2_buckets=8, bucket_capacity=64, segment_capacity=64,
+            insert_chunk=32, chunk_sizes=(8, 32), shard_axis="serve")
+        reg.register(specs[name])
+
+    rng = np.random.default_rng(3)
+    mu = rng.uniform(-1, 1, 200).astype(np.float32)
+    sig = rng.uniform(0.2, 1.0, 200).astype(np.float32)
+    w2 = reg.get("w2")
+    emb = np.asarray(w2.embedder.embed_gaussian(mu, sig))
+    gids = w2.insert(emb)
+    w2.delete(gids[::5])
+    reg.get("l2").insert(_data(200, seed=4))    # same segment history
+
+    q = np.asarray(w2.embedder.embed_gaussian(mu[:7] + 0.01, sig[:7]))
+    got_i, got_d = w2.index.query(q, 10, n_probes=4)
+    lay = w2.index.shard_layout()
+    assert lay is not None
+    assert lay == reg.get("l2").index.shard_layout()   # identical placement
+
+    w2.index.unshard()
+    want_i, want_d = w2.index.query(q, 10, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+def test_fanout_telemetry_unsharded():
+    """Merge-win / candidate telemetry accumulates per segment and lands in
+    the registry report."""
+    reg = ServableRegistry()
+    sv = reg.register(ServableSpec(
+        name="t", n_dims=N_DIMS, r=2.0, log2_buckets=8, bucket_capacity=64,
+        segment_capacity=64, insert_chunk=32, chunk_sizes=(8, 32)))
+    emb = _data(200, seed=5)
+    sv.insert(emb)                               # 3 sealed + delta
+    nq, k = 6, 10
+    sv.index.query(emb[:nq] * 0.98, k, n_probes=4)
+
+    bal = reg.report()["t"]["stats"]["shard_balance"]
+    assert bal["n_sampled"] == 1
+    assert len(bal["per_segment_wins"]) == len(sv.index.segments)
+    assert 0 < sum(bal["per_segment_wins"]) <= nq * k
+    # every queried segment offered at least its winners as candidates
+    assert all(c >= w for c, w in zip(bal["per_segment_candidates"],
+                                      bal["per_segment_wins"]))
+    assert sum(abs(r) for r in bal["merge_win_rate"]) == pytest.approx(
+        1.0, abs=0.01)
+    assert bal["per_device_wins"] == []          # unsharded: no devices
+
+
+def test_fanout_telemetry_sharded():
+    """Sharded queries attribute wins per device through the placement's
+    round-robin assignment; the imbalance number is reportable."""
+    reg = ServableRegistry(mesh=_mesh1())
+    sv = reg.register(ServableSpec(
+        name="t", n_dims=N_DIMS, r=2.0, log2_buckets=8, bucket_capacity=64,
+        segment_capacity=64, insert_chunk=32, chunk_sizes=(8, 32),
+        shard_axis="serve"))
+    emb = _data(200, seed=6)
+    sv.insert(emb)
+    nq, k = 5, 10
+    sv.index.query(emb[:nq] * 0.98, k, n_probes=4)
+    sv.index.query(emb[5:5 + nq] * 0.98, k, n_probes=4)
+
+    bal = reg.report()["t"]["stats"]["shard_balance"]
+    assert bal["n_sampled"] == 2
+    assert len(bal["per_device_wins"]) == 1      # 1-device mesh
+    assert sum(bal["per_device_wins"]) == sum(bal["per_segment_wins"])
+    assert 0 < sum(bal["per_device_wins"]) <= 2 * nq * k
+    assert bal["device_imbalance"] == pytest.approx(1.0)
+
+
 # ---------------------------------------------------------------------------
 # subprocess: real multi-device mesh (device count locks at first jax init)
 # ---------------------------------------------------------------------------
@@ -204,8 +285,11 @@ def test_multi_device_parity_edge_cases():
                 cfg = lidx.IndexConfig(n_dims=16, n_tables=4, n_hashes=4,
                                        log2_buckets=8, bucket_capacity=64,
                                        r=2.0, p=p)
+                fanouts = []
                 si = SegmentedIndex(cfg, segment_capacity=64, insert_chunk=32,
-                                    seed=3)
+                                    seed=3,
+                                    on_fanout=lambda w, d, c:
+                                    fanouts.append((w, d, c)))
                 rng = np.random.default_rng(1)
                 emb = rng.normal(size=(450, 16)).astype(np.float32)
                 gids = si.insert(emb)            # 7 sealed segments + delta
@@ -221,6 +305,10 @@ def test_multi_device_parity_edge_cases():
                                                   np.asarray(want_i))
                     np.testing.assert_array_equal(np.asarray(got_d),
                                                   np.asarray(want_d))
+                    # load telemetry attributes every win to a real device
+                    seg_w, dev_w, _ = fanouts[-1]
+                    assert len(dev_w) == n_dev
+                    assert sum(dev_w) == sum(seg_w) > 0
                     si.unshard()
         print("OK")
     """)
