@@ -6,7 +6,6 @@ EXPERIMENTS.md)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import hashes
 from repro.kernels import ops

@@ -5,8 +5,6 @@ application: fast Wasserstein similarity search)."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import functional, index as lidx, wasserstein
 

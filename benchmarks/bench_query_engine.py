@@ -20,7 +20,6 @@ from __future__ import annotations
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import index as lidx

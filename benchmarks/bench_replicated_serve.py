@@ -1,0 +1,195 @@
+"""Replicated-serve benchmark: skewed queries, before/after load balance.
+
+The scenario replication exists for: a multi-device serve mesh where query
+traffic concentrates on one hot sealed segment (every query perturbs items
+living in segment 0), so under the plain round-robin placement one device
+wins most merges while the others idle.  The bench measures the same
+workload twice on the same index:
+
+* ``replication = none`` -- the PR-3 placement; per-device merge-win
+  imbalance (``ServingStats.shard_balance()["device_imbalance"]``) shows
+  the skew;
+* ``replication = auto`` -- factors derived from the *measured* phase-1
+  telemetry via ``serve.router.auto_factors`` (exactly what
+  ``ServableSpec.replication="auto"`` does at compact time), hot segment
+  materialized on several devices, the ``QueryRouter`` alternating replicas
+  per micro-batch.
+
+Asserted before anything is timed: **every** batch in both phases returns
+(gids, dists) bit-identical to the unsharded reference (invariant 6 on top
+of invariant 4), which also pins recall to exact equality; and the
+replicated device imbalance must land strictly closer to 1.0 than the
+unreplicated one.
+
+Host CPU "devices" share physical cores (see bench_sharded_serve), so QPS
+here is indicative of program structure, not real-chip throughput; the
+*imbalance* columns and the parity flag are the durable signal.  Runs in a
+subprocess because ``--xla_force_host_platform_device_count`` locks at
+first jax init.
+
+REPRO_BENCH_SMOKE=1 shrinks the workload for CI.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .bench_query_engine import smoke_mode
+from .common import write_csv
+
+N_DEV = 4
+
+_WORKER = """
+    import json, time
+    import numpy as np
+    import jax
+    from repro import compat
+    from repro.core import index as lidx
+    from repro.serve.router import auto_factors
+    from repro.serve.segments import SegmentedIndex
+    from repro.serve.stats import ServingStats
+
+    n_dev = {n_dev}
+    segs_per_dev = {segs_per_dev}
+    seg_cap = {seg_cap}
+    n_dims = {n_dims}
+    k = {k}
+    n_probes = {n_probes}
+    batches = {batches}
+    nq = {nq}
+
+    cfg = lidx.IndexConfig(n_dims=n_dims, n_tables=4, n_hashes=4,
+                           log2_buckets=10, bucket_capacity=32, r=4.0)
+    si = SegmentedIndex(cfg, segment_capacity=seg_cap,
+                        insert_chunk=seg_cap // 2, seed=0)
+    rng = np.random.default_rng(0)
+    n_items = n_dev * segs_per_dev * seg_cap
+    emb = rng.normal(size=(n_items, n_dims)).astype(np.float32)
+    gids = si.insert(emb)
+    si.delete(gids[::9])
+
+    # skewed traffic: every query batch perturbs items of sealed segment 0,
+    # so its holder answers (and wins) nearly everything unreplicated
+    hot = emb[:seg_cap]
+    qs = [np.asarray(hot[rng.integers(0, seg_cap, nq)] * 0.98, np.float32)
+          for _ in range(batches)]
+    want = [si.query(q, k, n_probes=n_probes) for q in qs]
+
+    mesh = compat.make_mesh((n_dev,), ("serve",))
+    si.shard(mesh)
+
+    def run_phase(label):
+        stats = ServingStats()
+        si._on_fanout = stats.record_fanout
+        parity = True
+        si.query(qs[0], k, n_probes=n_probes)       # warmup/compile
+        stats_t0 = time.perf_counter()
+        for q, (wi, wd) in zip(qs, want):
+            gi, gd = si.query(q, k, n_probes=n_probes)
+            jax.block_until_ready(gd)
+            parity &= bool(
+                np.array_equal(np.asarray(gi), np.asarray(wi)) and
+                np.array_equal(np.asarray(gd), np.asarray(wd)))
+        wall = time.perf_counter() - stats_t0
+        bal = stats.shard_balance()
+        return {{
+            "parity": parity,
+            "qps": round(batches * nq / wall, 1),
+            "device_imbalance": bal["device_imbalance"],
+            "load_imbalance": bal["device_load_imbalance"],
+            "per_device_wins": bal["per_device_wins"],
+            "wins": bal["per_segment_wins"],
+        }}
+
+    phase_none = run_phase("none")
+
+    # the telemetry -> placement loop, exactly as ServableSpec "auto" at
+    # compact time: sealed-only win prefix (delta is the trailing slot)
+    factors = auto_factors(phase_none["wins"][:-1], n_dev)
+    si.set_replication(factors)
+    phase_auto = run_phase("auto")
+
+    print(json.dumps({{
+        "n_dev": n_dev,
+        "n_items": n_items,
+        "factors": factors,
+        "parity_none": phase_none["parity"],
+        "parity_auto": phase_auto["parity"],
+        "qps_none": phase_none["qps"],
+        "qps_auto": phase_auto["qps"],
+        "imbalance_none": phase_none["device_imbalance"],
+        "imbalance_auto": phase_auto["device_imbalance"],
+        "load_imbalance_auto": phase_auto["load_imbalance"],
+        "wins_none": phase_none["per_device_wins"],
+        "wins_auto": phase_auto["per_device_wins"],
+    }}))
+"""
+
+
+def _run_worker(n_dev: int, segs_per_dev: int, seg_cap: int, n_dims: int,
+                k: int, n_probes: int, batches: int, nq: int) -> dict:
+    code = textwrap.dedent(_WORKER.format(
+        n_dev=n_dev, segs_per_dev=segs_per_dev, seg_cap=seg_cap,
+        n_dims=n_dims, k=k, n_probes=n_probes, batches=batches, nq=nq))
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(
+        os.environ,
+        JAX_PLATFORMS="cpu",
+        XLA_FLAGS=(os.environ.get("XLA_FLAGS", "") +
+                   f" --xla_force_host_platform_device_count={n_dev}"),
+        PYTHONPATH=os.path.join(root, "src") +
+        os.pathsep + os.environ.get("PYTHONPATH", ""),
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(f"replicated-serve worker failed: "
+                           f"{out.stderr[-2000:]}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def run(seed: int = 0,
+        out_csv: str = "experiments/replicated_serve.csv") -> dict:
+    smoke = smoke_mode()
+    r = _run_worker(
+        N_DEV,
+        segs_per_dev=2 if smoke else 4,
+        seg_cap=256 if smoke else 512,
+        n_dims=32, k=10, n_probes=2,
+        batches=6 if smoke else 12,
+        nq=16,
+    )
+    # the two hard gates: replication must never change results, and on
+    # skewed traffic "auto" must measurably flatten per-device wins
+    assert r["parity_none"], "unreplicated sharded query diverged"
+    assert r["parity_auto"], "replicated query diverged from unreplicated"
+    assert max(r["factors"]) > 1, (
+        f"auto kept factors {r['factors']} on a skewed workload")
+    assert abs(r["imbalance_auto"] - 1.0) < abs(r["imbalance_none"] - 1.0), (
+        f"replication did not improve balance: "
+        f"none={r['imbalance_none']} auto={r['imbalance_auto']}")
+    write_csv(out_csv,
+              "mode,n_dev,n_items,qps,device_imbalance,parity",
+              [("none", r["n_dev"], r["n_items"], r["qps_none"],
+                r["imbalance_none"], r["parity_none"]),
+               ("auto", r["n_dev"], r["n_items"], r["qps_auto"],
+                r["imbalance_auto"], r["parity_auto"])])
+    return {
+        "n_dev": r["n_dev"],
+        "n_items": r["n_items"],
+        "auto_max_factor": max(r["factors"]),
+        "parity": bool(r["parity_none"] and r["parity_auto"]),
+        "qps_none": r["qps_none"],
+        "qps_auto": r["qps_auto"],
+        "device_imbalance_none": r["imbalance_none"],
+        "device_imbalance_auto": r["imbalance_auto"],
+        "load_imbalance_auto": r["load_imbalance_auto"],
+    }
+
+
+if __name__ == "__main__":
+    run()

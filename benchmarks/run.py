@@ -49,8 +49,9 @@ def main(argv=None) -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     from . import (bench_cosine, bench_embed_error, bench_hash_throughput,
-                   bench_index, bench_l2, bench_query_engine, bench_serve,
-                   bench_sharded_serve, bench_w2, bench_wasserstein_serve)
+                   bench_index, bench_l2, bench_query_engine,
+                   bench_replicated_serve, bench_serve, bench_sharded_serve,
+                   bench_w2, bench_wasserstein_serve)
 
     sha = _git_sha()
     print("name,us_per_call,derived")
@@ -64,6 +65,7 @@ def main(argv=None) -> None:
         ("query_engine", bench_query_engine.run),
         ("serve", bench_serve.run),
         ("sharded_serve", bench_sharded_serve.run),
+        ("replicated_serve", bench_replicated_serve.run),
         ("wasserstein_serve", bench_wasserstein_serve.run),
     ]
     all_results = {}

@@ -14,7 +14,6 @@ ones.
 Run:  PYTHONPATH=src python examples/neuron_similarity.py
 """
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import basis, collision, functional, hashes, index as lidx
 

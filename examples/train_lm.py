@@ -12,7 +12,6 @@ Run:  PYTHONPATH=src python examples/train_lm.py [--full] [--steps N]
 """
 
 import argparse
-import dataclasses
 
 import jax
 import jax.numpy as jnp

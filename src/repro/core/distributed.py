@@ -33,7 +33,6 @@ bit-identical to the single-device path.
 
 from __future__ import annotations
 
-import dataclasses
 import functools
 from typing import Optional, Tuple
 
@@ -143,11 +142,20 @@ def _sharded_segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
     per-device segment count) -- the sharded analogue of the serve layer's
     ``_segment_query_fn``.  Each device runs the *same* per-segment
     hash -> probe -> gather -> rerank program as the unsharded path over its
-    local ``per_dev`` sealed segments plus the replicated delta (contributed
-    by rank 0 only, or every device would duplicate the delta's rows in the
-    merge), local-merges, then all-gathers the (nq, k) shards for the global
-    ``merge_topk`` -- collective volume O(n_dev * nq * k), independent of
-    database size."""
+    local ``per_dev`` sealed segment *instances* plus the replicated delta
+    (contributed by rank 0 only, or every device would duplicate the delta's
+    rows in the merge), local-merges, then all-gathers the (nq, k) shards
+    for the global merge -- collective volume O(n_dev * nq * k), independent
+    of database size.
+
+    Replica-awareness is two runtime inputs, not a new program: the
+    ``active`` mask (one flag per local instance, sharded like the sealed
+    stack) silences instances the :class:`repro.serve.router.QueryRouter`
+    did not route this micro-batch to, and the collective fan-in dedups by
+    gid (``ops.merge_topk_unique``) so that when several replicas of one
+    segment *do* answer (all-active mode, or no router), their bit-identical
+    rows collapse to one.  Either way the merged top-k equals the
+    unreplicated path's (invariant 6)."""
 
     def one_segment(state: LSHIndexState, gids: Array, live: Array, q: Array):
         # same program body as the unsharded fan-out -- parity by construction
@@ -155,7 +163,7 @@ def _sharded_segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
                                           n_probes=n_probes, backend=backend,
                                           live_mask=live)
 
-    def shard_fn(sealed_state, sealed_gids, sealed_live,
+    def shard_fn(sealed_state, sealed_gids, sealed_live, active,
                  delta_state, delta_gids, delta_live, q):
         # sealed_* leaves: this device's (per_dev, ...) block; delta_*
         # replicated.  Static unroll over the local segments -- identical
@@ -164,8 +172,8 @@ def _sharded_segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
         for i in range(per_dev):
             seg = jax.tree.map(lambda x: x[i], sealed_state)
             g, d = one_segment(seg, sealed_gids[i], sealed_live[i], q)
-            parts_g.append(g)
-            parts_d.append(d)
+            parts_g.append(jnp.where(active[i], g, -1))
+            parts_d.append(jnp.where(active[i], d, jnp.inf))
         g, d = one_segment(delta_state, delta_gids, delta_live, q)
         rank = jax.lax.axis_index(axis)
         parts_g.append(jnp.where(rank == 0, g, -1))
@@ -178,14 +186,14 @@ def _sharded_segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
         nd = all_g.shape[0]
         flat_g = all_g.transpose(1, 0, 2).reshape(q.shape[0], nd * k)
         flat_d = all_d.transpose(1, 0, 2).reshape(q.shape[0], nd * k)
-        d_out, g_out = ops.merge_topk(flat_d, flat_g, k)
+        d_out, g_out = ops.merge_topk_unique(flat_d, flat_g, k)
         return g_out, d_out
 
     state_sharded = jax.tree.map(lambda _: P(axis), _state_structure())
     state_repl = jax.tree.map(lambda _: P(), _state_structure())
     fn = compat.shard_map(
         shard_fn, mesh=mesh,
-        in_specs=(state_sharded, P(axis), P(axis),
+        in_specs=(state_sharded, P(axis), P(axis), P(axis),
                   state_repl, P(), P(), P()),
         out_specs=(P(), P()),
         check_vma=False)
@@ -194,7 +202,8 @@ def _sharded_segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
 
 def query_segments_sharded(placement, cfg: IndexConfig, queries: Array,
                            k: int, n_probes: int = 1,
-                           backend: Optional[str] = None
+                           backend: Optional[str] = None,
+                           active: Optional[Array] = None
                            ) -> Tuple[Array, Array]:
     """Collective cross-segment k-NN over a ``SegmentPlacement``.
 
@@ -208,18 +217,28 @@ def query_segments_sharded(placement, cfg: IndexConfig, queries: Array,
         backend: re-rank tail backend (resolve via
             ``kernels.dispatch.query_backend`` first, as the serve layer
             does, so the compile cache never keys on a raw None).
+        active: (n_dev * per_dev,) bool, one flag per placed segment
+            instance in device-stripe order -- the router's per-micro-batch
+            replica selection.  None = every instance answers (replicas are
+            deduped by gid at the fan-in, so this is always correct, just
+            unrouted).
 
     Returns:
         (gids (nq, k) int32, dists (nq, k) f32), replicated; -1/inf padded.
         Bit-identical to the unsharded ``SegmentedIndex.query`` over the
-        same live items (the serve layer's sharding invariant, enforced by
-        tests/test_sharded_serve.py and benchmarks/bench_sharded_serve.py).
+        same live items -- replicated or not (the serve layer's sharding +
+        replication invariants, enforced by tests/test_sharded_serve.py,
+        tests/test_replicated_serve.py and the serve benchmarks).
     """
     fn = _sharded_segment_query_fn(cfg, k, n_probes, backend,
                                    placement.mesh, placement.axis,
                                    placement.per_dev)
+    if active is None:
+        active = jnp.ones((placement.n_dev * placement.per_dev,), jnp.bool_)
+    else:
+        active = jnp.asarray(active, jnp.bool_)
     return fn(placement.sealed_state, placement.sealed_gids,
-              placement.sealed_live, placement.delta_state,
+              placement.sealed_live, active, placement.delta_state,
               placement.delta_gids, placement.delta_live,
               jnp.asarray(queries, jnp.float32))
 

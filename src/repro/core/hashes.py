@@ -18,7 +18,7 @@ fused Pallas versions live in kernels/ (hash_mm, simhash_pack).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -234,6 +234,17 @@ def _merge_topk_impl(dists, ids, k):
     return sd, jnp.where(jnp.isinf(sd), -1, si)
 
 
+def _pad_to_k(dists, ids, k: int):
+    """Right-pad the merge pool to at least k columns with (inf, -1) rows --
+    shared by both merge wrappers so their padding semantics can't drift."""
+    m = ids.shape[-1]
+    if m < k:
+        pad = k - m
+        dists = jnp.pad(dists, ((0, 0), (0, pad)), constant_values=jnp.inf)
+        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+    return dists, ids
+
+
 def merge_topk(dists, ids, k: int):
     """Merge per-shard top-k lists into a global top-k.
 
@@ -252,9 +263,41 @@ def merge_topk(dists, ids, k: int):
     (n_shards * k), so a full lexicographic sort beats a tournament tree at
     every realistic size.
     """
-    m = ids.shape[-1]
-    if m < k:
-        pad = k - m
-        dists = jnp.pad(dists, ((0, 0), (0, pad)), constant_values=jnp.inf)
-        ids = jnp.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+    dists, ids = _pad_to_k(dists, ids, k)
     return _merge_topk_impl(dists, ids, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _merge_topk_unique_impl(dists, ids, k):
+    d = jnp.where(ids < 0, jnp.inf, dists)
+    ids = ids.astype(jnp.int32)
+    sd, si = jax.lax.sort((d, ids), num_keys=2, is_stable=True)
+    # Replicas of one segment return bit-identical (dist, gid) rows, so
+    # duplicates are adjacent after the lexicographic sort; keep the first.
+    dup = jnp.concatenate([jnp.zeros_like(si[..., :1], dtype=bool),
+                           (si[..., 1:] == si[..., :-1]) & (si[..., 1:] >= 0)],
+                          axis=-1)
+    sd = jnp.where(dup, jnp.inf, sd)
+    si = jnp.where(dup, -1, si)
+    # Re-sort to push the masked duplicates past the top-k cut.  With no
+    # duplicates this stable re-sort is the identity, so the result is
+    # bit-identical to plain merge_topk.
+    sd, si = jax.lax.sort((sd, si), num_keys=2, is_stable=True)
+    sd, si = sd[..., :k], si[..., :k]
+    return sd, jnp.where(jnp.isinf(sd), -1, si)
+
+
+def merge_topk_unique(dists, ids, k: int):
+    """:func:`merge_topk` that additionally dedups by id.
+
+    The fan-in of the **replicated** sharded query
+    (core/distributed.py): when a hot segment is materialized on several
+    devices, the same (dist, gid) row can reach the collective merge once
+    per answering replica; keeping only the first occurrence makes the
+    merged top-k identical to the unreplicated path.  On duplicate-free
+    input this is bit-identical to :func:`merge_topk` (the dedup mask is
+    empty and the second stable sort is the identity), which is why the
+    replicated serve path can use it unconditionally.
+    """
+    dists, ids = _pad_to_k(dists, ids, k)
+    return _merge_topk_unique_impl(dists, ids, k)

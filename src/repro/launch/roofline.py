@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Dict, Optional
+from typing import Dict
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9

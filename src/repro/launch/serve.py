@@ -24,6 +24,10 @@ Optionally ``--snapshot DIR`` checkpoints every tenant at the end and
 ``--restore DIR`` starts from a previous snapshot.  ``--shard N`` serves
 both tenants SPMD over an N-device serve mesh (on CPU it forces N host
 devices; results are bit-identical to the unsharded run).
+``--replicate {none,static:k,auto}`` additionally materializes hot sealed
+segments on several devices -- with ``auto``, each compaction re-derives
+the replica factors from the tenant's live ``shard_balance`` merge-win
+telemetry (results again bit-identical; only placement changes).
 """
 
 import argparse
@@ -50,6 +54,11 @@ def main():
                     help="serve SPMD over this many devices (0 = off; on "
                          "CPU this forces the host device count, so it must "
                          "be the first jax-touching flag)")
+    ap.add_argument("--replicate", default="none",
+                    help="hot-segment replication policy for sharded "
+                         "tenants: none | static:k | auto (auto re-places "
+                         "from live shard_balance telemetry at every "
+                         "compaction)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -89,17 +98,17 @@ def main():
                          embedder="basis",
                          segment_capacity=args.segment_capacity,
                          chunk_sizes=(8, 32, 128), max_delay_ms=2.0,
-                         shard_axis=shard_axis),
+                         shard_axis=shard_axis, replication=args.replicate),
             ServableSpec(name="l1-qmc", n_dims=args.n_dims, p=1.0, r=8.0,
                          embedder="qmc",
                          segment_capacity=args.segment_capacity,
                          chunk_sizes=(8, 32, 128), max_delay_ms=2.0,
-                         shard_axis=shard_axis),
+                         shard_axis=shard_axis, replication=args.replicate),
             ServableSpec(name="w2-quantile", n_dims=args.n_dims, p=2.0,
                          r=0.5, embedder="wasserstein",
                          segment_capacity=args.segment_capacity,
                          chunk_sizes=(8, 32, 128), max_delay_ms=2.0,
-                         shard_axis=shard_axis),
+                         shard_axis=shard_axis, replication=args.replicate),
         ):
             registry.register(spec)
         print(f"[serve] registered tenants {registry.names()}")
@@ -151,7 +160,9 @@ def main():
                 sv.delete(victims)
             occ = occupancy_report(sv.index)
             if occ["tombstone_frac"] > args.compact_at:
-                sv.index.compact()
+                # Servable.compact, not index.compact: under --replicate
+                # auto this is where shard_balance skew becomes placement
+                sv.compact()
                 compactions[name] += 1
         if (step + 1) % 20 == 0:
             done = sum(f.done() for f in futures)
@@ -175,6 +186,7 @@ def main():
         occ = rep["occupancy"]
         lay = rep["shard_layout"]
         shard_s = (f"shards={lay['n_dev']}x{lay['per_dev']}"
+                   f" replicas={lay['n_instances']}/{lay['n_sealed']}"
                    if lay else "shards=off")
         bal = rep["stats"]["shard_balance"]
         print(f"[serve] {name}: live={occ['n_live']}/{occ['n_items']} "

@@ -18,7 +18,6 @@ import time
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import checkpoint as ckpt

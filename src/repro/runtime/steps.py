@@ -14,15 +14,13 @@ which the server uses for semantic dedup / similar-state lookup (launch/serve).
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig, ShapeConfig
-from ..core import montecarlo
 from ..models.model import ModelApi
 from ..optim import adamw
 from ..sharding import context as shctx

@@ -4,7 +4,11 @@ Layering (each module usable alone):
 
   segments -- SegmentedIndex: delta/sealed segment lifecycle over core.index
               (insert / tombstone delete / seal / compact / fan-out query /
-              shard(mesh) for SPMD serving -- see docs/architecture.md)
+              shard(mesh) for SPMD serving / set_replication for hot-segment
+              replicas -- see docs/architecture.md)
+  router   -- QueryRouter: per-micro-batch replica selection (least-loaded
+              holder) + auto_factors (shard_balance skew -> replication
+              factors, the "auto" policy's telemetry loop)
   batcher  -- MicroBatcher: deadline-based admission queue that coalesces
               heterogeneous requests into a fixed padded chunk palette
   stats    -- ServingStats (rates, latency, per-shard merge-win telemetry) /
@@ -21,17 +25,21 @@ Layering (each module usable alone):
 
 from .batcher import MicroBatcher
 from .registry import Servable, ServableRegistry, ServableSpec
+from .router import QueryRouter, RoutePlan, auto_factors
 from .segments import Segment, SegmentedIndex
 from .stats import ServingStats, occupancy_report, recall_proxy
 
 __all__ = [
     "MicroBatcher",
+    "QueryRouter",
+    "RoutePlan",
     "Segment",
     "SegmentedIndex",
     "Servable",
     "ServableRegistry",
     "ServableSpec",
     "ServingStats",
+    "auto_factors",
     "occupancy_report",
     "recall_proxy",
 ]

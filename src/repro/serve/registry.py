@@ -41,6 +41,7 @@ from ..checkpoint import checkpoint as ckpt
 from ..core.index import IndexConfig, LSHIndexState
 from ..embedders import embedder_names, make_embedder
 from .batcher import MicroBatcher
+from .router import auto_factors
 from .segments import Segment, SegmentedIndex
 from .stats import ServingStats, occupancy_report
 
@@ -78,11 +79,36 @@ class ServableSpec:
     # carrying this axis -- the spec declares intent, the registry owns
     # the hardware.
     shard_axis: Optional[str] = None
+    # hot-segment replication policy (sharded tenants only):
+    #   "none"     -- factor 1 everywhere (the classic placement);
+    #   "static:k" -- every sealed segment on k devices;
+    #   "auto"     -- factors re-derived from ServingStats.shard_balance
+    #                 merge-win skew at every compact() (the telemetry ->
+    #                 placement loop; see serve/router.auto_factors).
+    replication: str = "none"
 
     def __post_init__(self):
         if self.embedder not in embedder_names():
             raise ValueError(
                 f"embedder must be one of {embedder_names()}")
+        self.replication_policy()    # fail fast on a malformed policy
+
+    def replication_policy(self):
+        """The replication field parsed: None | int k | the string "auto"."""
+        rep = self.replication
+        if rep in ("none", None):
+            return None
+        if rep == "auto":
+            return "auto"
+        if isinstance(rep, str) and rep.startswith("static:"):
+            try:
+                k = int(rep.split(":", 1)[1])
+            except ValueError:
+                k = 0
+            if k >= 1:
+                return k
+        raise ValueError(
+            f"replication must be 'none', 'static:k' or 'auto', got {rep!r}")
 
     def index_config(self) -> IndexConfig:
         return IndexConfig(n_dims=self.n_dims, n_tables=self.n_tables,
@@ -132,6 +158,11 @@ class Servable:
         if spec.shard_axis is not None and mesh is not None \
                 and spec.shard_axis in mesh.axis_names:
             self.index.shard(mesh, spec.shard_axis)
+            policy = spec.replication_policy()
+            if isinstance(policy, int):
+                self.index.set_replication(policy)
+            # "auto" starts unreplicated and re-places at compact() time,
+            # once shard_balance has seen real traffic
         self.batcher = MicroBatcher(self._raw_query,
                                     chunk_sizes=spec.chunk_sizes,
                                     max_delay_ms=spec.max_delay_ms,
@@ -165,6 +196,35 @@ class Servable:
     def delete(self, gids) -> int:
         n = self.index.delete(gids)
         self.stats.record_delete(n)
+        return n
+
+    def compact(self) -> int:
+        """Compact the tenant's index; under ``replication="auto"`` this is
+        also the **re-placement point**: the factors for the post-compaction
+        placement are derived from the merge-win skew the tenant's
+        ``shard_balance`` telemetry accumulated since the last compaction
+        (``router.auto_factors``), so hot segments get materialized on more
+        devices exactly when the index is being rewritten anyway.
+
+        Positional caveat (same as the stats counters): wins are attributed
+        to segment *positions*; compaction re-packs live items in gid order,
+        which preserves rough positional identity, so the derived factors
+        describe recent traffic shape, not an exact per-item ledger.
+        """
+        factors = None
+        lay = self.index.shard_layout()
+        if self.spec.replication_policy() == "auto" and lay is not None:
+            wins = self.stats.shard_balance()["per_segment_wins"]
+            # the trailing positional slot is the delta at record time;
+            # sealed-segment wins are everything before it
+            factors = auto_factors(wins[:-1], lay["n_dev"])
+        n = self.index.compact()
+        if factors is not None:
+            self.index.set_replication(factors)
+            # each epoch's decision reads the traffic since the previous
+            # one -- an all-time ledger would keep replicating segments
+            # that went cold and react ever more slowly as it grows
+            self.stats.reset_fanout()
         return n
 
     def _raw_query(self, queries, k: int, n_probes: int):

@@ -1,0 +1,136 @@
+"""Replica-aware query routing: which replica answers this micro-batch.
+
+``sharding/placement.py`` can materialize a hot sealed segment on several
+devices (replication factor > 1).  Replicas are bit-identical, so *any* of
+them can answer a query -- the router's job is purely load placement: per
+micro-batch, activate exactly one replica of every sealed segment so that
+per-device work equalizes over time, and tell the telemetry which device
+actually served each segment.
+
+The router is deliberately dumb and deterministic:
+
+* unreplicated segments always run on their only holder (no choice);
+* each replicated segment goes to the **least-loaded holder** of that
+  segment, counting both the persistent load carried over from previous
+  batches and the load already routed within this batch (ties -> lowest
+  device id).  With symmetric load this degenerates to round-robin over the
+  replica set, which is what spreads a hot segment's wins across its
+  replicas;
+* the delta segment is pinned to rank 0 by the collective program
+  (core/distributed.py), so the router only accounts for it.
+
+Determinism matters: same placement + same batch sequence -> same routing,
+so replicated results are reproducible run to run (and the parity tests can
+assert bit-identity instead of set-equality).
+
+``auto_factors`` closes the telemetry loop: it turns
+``ServingStats.shard_balance``'s per-segment merge-win counters into
+replication factors (win share / fair share, clipped to [1, n_dev]) -- the
+``ServableSpec.replication = "auto"`` policy applies it at compact time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RoutePlan:
+    """One micro-batch's replica selection.
+
+    Attributes:
+        active: (n_dev * per_dev,) bool in device-stripe order -- the
+            ``active`` input of ``core.distributed.query_segments_sharded``
+            (True = this placed instance answers).
+        dev_of: sealed-segment position -> device chosen to serve it this
+            batch (telemetry attribution).
+        per_device_active: instances activated per device this batch (the
+            router's own load ledger, fed to
+            ``ServingStats.record_fanout(dev_load=...)``).
+    """
+
+    active: np.ndarray
+    dev_of: Dict[int, int]
+    per_device_active: List[int]
+
+
+class QueryRouter:
+    """Per-placement replica selector with a persistent load ledger.
+
+    Built from a placement ``layout_dict`` (the JSON-able assignment /
+    replication report, the same one snapshots record), so it never holds
+    device arrays -- rebuilding it after a placement change is free.
+    """
+
+    def __init__(self, layout: dict):
+        self.n_dev = int(layout["n_dev"])
+        self.per_dev = int(layout["per_dev"])
+        self.n_sealed = int(layout["n_sealed"])
+        self.assignment = [list(a) for a in layout["assignment"]]
+        # holders[i] = devices owning a replica of sealed segment i, and the
+        # flat active-mask slot of each instance (device-stripe order:
+        # device d's instances live at slots [d*per_dev, (d+1)*per_dev)).
+        self._slot: Dict[int, Dict[int, int]] = {i: {} for i in
+                                                 range(self.n_sealed)}
+        for d, block in enumerate(self.assignment):
+            for j, seg in enumerate(block):
+                self._slot[seg][d] = d * self.per_dev + j
+        self._load = np.zeros((self.n_dev,), np.int64)
+        self._lock = threading.Lock()
+
+    def route(self) -> RoutePlan:
+        """Pick one replica per sealed segment for the next micro-batch."""
+        active = np.zeros((self.n_dev * self.per_dev,), bool)
+        dev_of: Dict[int, int] = {}
+        with self._lock:
+            batch = np.zeros((self.n_dev,), np.int64)
+            batch[0] += 1                    # delta always serves on rank 0
+            # fixed load first (no routing freedom), choices second, so a
+            # replicated segment sees the true totals it is balancing against
+            multi = []
+            for seg, holders in self._slot.items():
+                if len(holders) == 1:
+                    (d, slot), = holders.items()
+                    active[slot] = True
+                    dev_of[seg] = d
+                    batch[d] += 1
+                elif holders:
+                    multi.append(seg)
+            for seg in multi:
+                holders = self._slot[seg]
+                d = min(holders, key=lambda d: (self._load[d] + batch[d], d))
+                active[holders[d]] = True
+                dev_of[seg] = d
+                batch[d] += 1
+            self._load += batch
+            per_dev_active = batch.tolist()
+        return RoutePlan(active=active, dev_of=dev_of,
+                         per_device_active=per_dev_active)
+
+    def device_load(self) -> List[int]:
+        """Cumulative instances routed per device (telemetry/report)."""
+        with self._lock:
+            return self._load.tolist()
+
+
+def auto_factors(seg_wins: Sequence[int], n_dev: int,
+                 max_factor: Optional[int] = None) -> List[int]:
+    """Replication factors from merge-win telemetry (the ``auto`` policy).
+
+    ``seg_wins[i]`` is sealed segment i's share of recent top-k wins
+    (``ServingStats.shard_balance()["per_segment_wins"]`` less the delta's
+    trailing slot).  A segment winning f times its fair share gets f
+    replicas, clipped to [1, min(n_dev, max_factor)] -- balanced traffic
+    (every share ~ fair) therefore stays at factor 1 everywhere, so "auto"
+    never pays replication memory for a workload that doesn't need it.
+    """
+    wins = np.asarray(list(seg_wins), np.float64)
+    cap = n_dev if max_factor is None else min(n_dev, int(max_factor))
+    if wins.size == 0 or wins.sum() <= 0:
+        return [1] * wins.size
+    fair = wins.sum() / wins.size
+    return [int(np.clip(round(w / fair), 1, cap)) for w in wins]

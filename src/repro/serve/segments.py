@@ -21,10 +21,17 @@ module turns it into a *living* index the way LSM storage engines do:
   ``sharding.placement``) -- results stay bit-identical to the
   single-device path (the sharding invariant, docs/architecture.md §
   "Invariants");
+* **set_replication(...)** materializes hot sealed segments on several
+  devices (``sharding/placement.py`` instance assignment); a per-placement
+  ``QueryRouter`` then activates one replica per segment per micro-batch so
+  per-device load equalizes, with results still bit-identical to the
+  unreplicated path (replicas are copies; the collective fan-in dedups by
+  gid as a second line of defense);
 * an optional **on_fanout hook** attributes every merged top-k slot back to
   the segment (and device, when sharded) that contributed it -- the serve
   layer wires it to ``ServingStats.record_fanout`` so placement skew is
-  observable per tenant.
+  observable per tenant, and the ``auto`` replication policy turns that
+  skew back into placement (``router.auto_factors`` at compact time).
 
 Every segment shares ONE hash family (``create_index(family=...)``), so an
 item's bucket ids are independent of which segment holds it.  Consequence
@@ -55,6 +62,7 @@ from ..core import distributed, index as lidx
 from ..core.index import IndexConfig, LSHIndexState
 from ..kernels import dispatch, ops
 from ..sharding import placement as seg_placement
+from .router import QueryRouter
 
 Array = jax.Array
 
@@ -156,6 +164,12 @@ class SegmentedIndex:
         self._version = 0
         self._sealed_version = 0
         self._delta_synced = -1        # _version the placement's delta is at
+        # replication policy: None (off) | int (every sealed segment) |
+        # positional per-sealed-segment factors.  Normalized against the
+        # live sealed count/mesh at placement-build time, so it can be set
+        # before shard() or while the segment set is still churning.
+        self._replication = None
+        self._router: Optional[QueryRouter] = None
         # distinct query batch shapes seen -- the serve bench asserts this
         # stays bounded by the batcher's chunk palette (no per-request traces)
         self.query_shapes: set = set()
@@ -224,6 +238,36 @@ class SegmentedIndex:
             self._mesh = None
             self._shard_axis = None
             self._placement = None
+            self._router = None
+
+    def set_replication(self, replication) -> None:
+        """Set the sealed-segment replication policy.
+
+        Args:
+            replication: None (factor 1 everywhere -- replication off), an
+                int (every sealed segment gets that factor, the
+                ``static:k`` registry policy), or a positional sequence of
+                per-sealed-segment factors (what the ``auto`` policy
+                derives from ``ServingStats.shard_balance``).  Factors are
+                clipped to the mesh size at placement-build time.
+
+        Replicas are bit-identical, so this changes *where* queries run,
+        never what they return (invariant 6); it takes effect on the next
+        sharded query (placement rebuild + fresh router ledger) and is
+        remembered across shard()/unshard().
+        """
+        with self._lock:
+            if replication is not None and not isinstance(replication, int):
+                replication = tuple(int(f) for f in replication)
+            self._replication = replication
+            # force a full placement rebuild: the instance assignment (not
+            # just the delta) changed shape
+            self._sealed_version += 1
+            self._version += 1
+
+    def replication(self):
+        """The current replication policy (as set, un-normalized)."""
+        return self._replication
 
     def _current_placement(self):
         """The up-to-date SegmentPlacement.
@@ -237,8 +281,13 @@ class SegmentedIndex:
             sealed = [s for s in self.segments[:-1] if s.n_live > 0]
             self._placement = seg_placement.place_segments(
                 sealed, self.delta, self._mesh, self._shard_axis,
-                self._sealed_version)
+                self._sealed_version, replication=self._replication)
             self._delta_synced = self._version
+            # fresh ledger per placement: the instance assignment the
+            # router balances over just changed
+            self._router = (QueryRouter(self._placement.layout())
+                            if any(f > 1 for f in self._placement.replication)
+                            else None)
         elif self._delta_synced != self._version:
             self._placement = seg_placement.refresh_delta(self._placement,
                                                           self.delta)
@@ -257,7 +306,8 @@ class SegmentedIndex:
                 return None
             n_sealed = sum(1 for s in self.segments[:-1] if s.n_live > 0)
             return seg_placement.layout_dict(self._mesh, self._shard_axis,
-                                             n_sealed)
+                                             n_sealed,
+                                             replication=self._replication)
 
     # -- mutation -----------------------------------------------------------
 
@@ -404,9 +454,15 @@ class SegmentedIndex:
             self.query_shapes.add((int(q.shape[0]), k, n_probes))
             if self._mesh is not None:
                 pl = self._current_placement()
+                # replica selection per micro-batch: the router activates
+                # one instance per sealed segment so replicated devices
+                # alternate; without a router every instance answers and
+                # the collective fan-in dedups by gid -- both bit-identical
+                plan = self._router.route() if self._router else None
                 g, d = distributed.query_segments_sharded(
                     pl, self.cfg, q, k, n_probes=n_probes,
-                    backend=self.backend)
+                    backend=self.backend,
+                    active=None if plan is None else plan.active)
             else:
                 g = None
                 seg_ids = [i for i, s in enumerate(self.segments)
@@ -419,7 +475,7 @@ class SegmentedIndex:
             # OUTSIDE the lock, like the unsharded telemetry below --
             # writers must not stall behind a collective readback
             if self._on_fanout is not None:
-                self._fanout_telemetry(np.asarray(g))
+                self._fanout_telemetry(np.asarray(g), plan=plan)
             return g, d
         if not shards:
             return (jnp.full((q.shape[0], k), -1, jnp.int32),
@@ -440,16 +496,20 @@ class SegmentedIndex:
 
     def _fanout_telemetry(self, g_np: np.ndarray,
                           seg_ids: Optional[List[int]] = None,
-                          shard_gs: Optional[List[np.ndarray]] = None
-                          ) -> None:
+                          shard_gs: Optional[List[np.ndarray]] = None,
+                          plan=None) -> None:
         """Attribute one merged top-k back to segments/devices and feed the
         ``on_fanout`` hook (ServingStats.record_fanout signature).
 
         Wins come from the merged gids via the locator (gids are globally
         unique, so the winning segment is unambiguous); candidate counts
         are the valid rows each unsharded shard offered the merge; device
-        wins map segments through the live placement's round-robin
-        assignment (delta -> rank 0, matching the collective program).
+        wins map segments through the live placement's assignment (delta ->
+        rank 0, matching the collective program).  When a router ``plan``
+        routed this batch, the win goes to the replica that actually
+        answered and the hook additionally receives the plan's per-device
+        instance load (4th argument -- only ever passed on routed batches,
+        so factor-1 deployments keep the 3-argument hook contract).
         """
         with self._lock:
             n_segs = len(self.segments)
@@ -472,15 +532,26 @@ class SegmentedIndex:
                 sealed_pos = [i for i, s in enumerate(self.segments[:-1])
                               if s.n_live > 0]
                 dev_of = {n_segs - 1: 0}          # delta contributes on rank 0
-                for dev, block in enumerate(pl.assignment):
-                    for fi in block:
-                        if fi < len(sealed_pos):  # placement may lag a
-                            dev_of[sealed_pos[fi]] = dev  # concurrent mutation
+                if plan is not None:
+                    # routed batch: attribute to the chosen replica
+                    for fi, dev in plan.dev_of.items():
+                        if fi < len(sealed_pos):
+                            dev_of[sealed_pos[fi]] = dev
+                else:
+                    for dev, block in enumerate(pl.assignment):
+                        for fi in block:
+                            if fi < len(sealed_pos):  # placement may lag a
+                                # concurrent mutation; replicas (instance
+                                # duplicates) attribute to the first holder
+                                dev_of.setdefault(sealed_pos[fi], dev)
                 dev_wins = [0] * pl.n_dev
                 for si, w in enumerate(wins):
                     if w:
                         dev_wins[dev_of.get(si, 0)] += w
-        self._on_fanout(wins, dev_wins, cands)
+        if plan is not None:
+            self._on_fanout(wins, dev_wins, cands, plan.per_device_active)
+        else:
+            self._on_fanout(wins, dev_wins, cands)
 
     def occupancy(self) -> List[dict]:
         return [s.occupancy() for s in self.segments]

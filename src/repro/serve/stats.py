@@ -15,9 +15,11 @@ every cross-segment merge.  A *win* is a top-k slot in the merged result
 attributed back to the segment (and, when sharded, the device) that
 contributed it -- so a skewed round-robin placement shows up as one device
 winning most merges instead of hiding inside an aggregate latency number.
-Counters are positional (slot i = segment/device i at record time) and
-reset only with the stats object; after a compaction the segment set
-changes, so read them as "recent traffic shape", not an exact ledger.
+Counters are positional (slot i = segment/device i at record time); after
+a compaction the segment set changes, so read them as "recent traffic
+shape", not an exact ledger.  ``reset_fanout`` zeroes them at re-placement
+points (the ``auto`` replication policy calls it after consuming the skew),
+otherwise they live as long as the stats object.
 """
 
 from __future__ import annotations
@@ -60,6 +62,7 @@ class ServingStats:
         self._seg_wins = np.zeros((0,), np.int64)
         self._seg_cands = np.zeros((0,), np.int64)
         self._dev_wins = np.zeros((0,), np.int64)
+        self._dev_load = np.zeros((0,), np.int64)
         self._fanout_n = 0
 
     def _trim(self, dq: deque, now: float) -> None:
@@ -98,42 +101,73 @@ class ServingStats:
 
     def record_fanout(self, seg_wins: Sequence[int],
                       dev_wins: Optional[Sequence[int]] = None,
-                      seg_candidates: Optional[Sequence[int]] = None) -> None:
+                      seg_candidates: Optional[Sequence[int]] = None,
+                      dev_load: Optional[Sequence[int]] = None) -> None:
         """One cross-segment merge's attribution: ``seg_wins[i]`` top-k slots
         won by segment i, ``seg_candidates[i]`` valid candidates it offered
         (unsharded fan-out only), ``dev_wins[d]`` wins per device (sharded
-        only)."""
+        only), ``dev_load[d]`` segment instances device d actually served
+        (router-planned batches only -- the replication balancer's own
+        ledger)."""
         with self._lock:
             self._seg_wins = _accumulate(self._seg_wins, seg_wins)
             if seg_candidates is not None:
                 self._seg_cands = _accumulate(self._seg_cands, seg_candidates)
             if dev_wins is not None:
                 self._dev_wins = _accumulate(self._dev_wins, dev_wins)
+            if dev_load is not None:
+                self._dev_load = _accumulate(self._dev_load, dev_load)
             self._fanout_n += 1
+
+    def reset_fanout(self) -> None:
+        """Zero the positional fan-out counters (wins/candidates/loads).
+
+        Called at re-placement points -- ``Servable.compact`` under the
+        ``auto`` replication policy -- so each placement decision reads the
+        traffic shape *since the previous one*, not an all-time ledger that
+        reacts ever more slowly as it grows (and whose positions went stale
+        when compaction rewrote the segment set anyway).  Rates, latency
+        and totals are untouched."""
+        with self._lock:
+            self._seg_wins = np.zeros((0,), np.int64)
+            self._seg_cands = np.zeros((0,), np.int64)
+            self._dev_wins = np.zeros((0,), np.int64)
+            self._dev_load = np.zeros((0,), np.int64)
+            self._fanout_n = 0
 
     def shard_balance(self) -> dict:
         """Merge-win / candidate balance across segments and devices.
 
         ``merge_win_rate[i]`` is segment i's share of all top-k wins;
         ``device_imbalance`` is max/mean of per-device wins (1.0 = perfectly
-        balanced round-robin, higher = skew an operator should see).
+        balanced, higher = skew an operator should see -- and the signal
+        the ``auto`` replication policy re-places from);
+        ``device_load_imbalance`` is the same max/mean over *routed
+        instances served* (replicated serving only; 0.0 = no routed
+        traffic yet).
         """
         with self._lock:
             seg_w = self._seg_wins.tolist()
             seg_c = self._seg_cands.tolist()
             dev_w = self._dev_wins.tolist()
+            dev_l = self._dev_load.tolist()
             n = self._fanout_n
         tot = sum(seg_w)
         dev_tot = sum(dev_w)
+        load_tot = sum(dev_l)
         return {
             "n_sampled": n,
             "per_segment_wins": seg_w,
             "per_segment_candidates": seg_c,
             "per_device_wins": dev_w,
+            "per_device_load": dev_l,
             "merge_win_rate": [round(w / tot, 4) for w in seg_w] if tot
             else [],
             "device_imbalance": (round(max(dev_w) * len(dev_w) / dev_tot, 3)
                                  if dev_tot else 0.0),
+            "device_load_imbalance": (
+                round(max(dev_l) * len(dev_l) / load_tot, 3)
+                if load_tot else 0.0),
         }
 
     def _rate(self, dq: deque) -> float:

@@ -30,12 +30,24 @@ and are **bit-identical** to the unsharded ``SegmentedIndex.query`` -- the
 same per-segment programs run, only their placement changes, and the
 two-level (local, then collective) ``merge_topk`` is order-equivalent to the
 single-level merge because the (distance, gid) order is total.
+
+**Replication** (the read-QPS lever): each sealed segment additionally
+carries a replication factor (default 1).  A factor-f segment is
+materialized on f distinct devices -- the *instance-level* assignment
+(:func:`replicated_assignment`) spreads replicas onto the least-loaded
+devices while factor-1 placements reduce exactly to the round-robin rule
+above.  Replicas are bit-identical copies, so query results cannot depend
+on which replica answers: either every replica answers and the collective
+fan-in dedups by gid (``ops.merge_topk_unique``), or a
+:class:`repro.serve.router.QueryRouter` activates exactly one replica per
+segment per micro-batch to spread load.  Both stay bit-identical to the
+unreplicated path (invariant 6, docs/architecture.md).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Sequence
+from typing import Any, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -62,6 +74,10 @@ class SegmentPlacement:
             replicated on every device.
         assignment: ``assignment[d]`` = list of index-level segment positions
             placed on device ``d`` (for reports and snapshot manifests).
+            Instance-level: a segment with replication factor f appears in f
+            distinct devices' lists.
+        replication: per-sealed-segment replication factors (all 1 = the
+            classic unreplicated placement).
     """
 
     mesh: Mesh
@@ -77,11 +93,13 @@ class SegmentPlacement:
     delta_gids: Array
     delta_live: Array
     assignment: tuple
+    replication: tuple = ()
 
     def layout(self) -> dict:
         """JSON-able description of the placement (snapshot manifests,
         ``launch.serve`` reports, tests)."""
-        return layout_dict(self.mesh, self.axis, self.n_sealed)
+        return layout_dict(self.mesh, self.axis, self.n_sealed,
+                           replication=self.replication or None)
 
 
 def round_robin(n_items: int, n_dev: int) -> List[List[int]]:
@@ -90,26 +108,72 @@ def round_robin(n_items: int, n_dev: int) -> List[List[int]]:
             for d in range(n_dev)]
 
 
-def layout_dict(mesh: Mesh, axis: str, n_sealed: int) -> dict:
+def normalize_replication(n_sealed: int, n_dev: int,
+                          replication) -> Tuple[int, ...]:
+    """Per-segment factors as a canonical tuple: length ``n_sealed``,
+    clipped to ``[1, n_dev]`` (a replica set can't exceed the device count),
+    missing positions defaulting to 1.  Accepts ``None`` (all 1), an int
+    (every sealed segment gets that factor) or a positional sequence."""
+    if replication is None:
+        return (1,) * n_sealed
+    if isinstance(replication, int):
+        return (max(1, min(int(replication), n_dev)),) * n_sealed
+    fac = [max(1, min(int(f), n_dev)) for f in replication][:n_sealed]
+    fac += [1] * (n_sealed - len(fac))
+    return tuple(fac)
+
+
+def replicated_assignment(n_sealed: int, n_dev: int,
+                          factors: Sequence[int]) -> List[List[int]]:
+    """Instance-level device assignment under per-segment replication.
+
+    Primary copies go round-robin (``i % n_dev``) -- so all-1 factors
+    reproduce :func:`round_robin` exactly, keeping unreplicated layouts
+    (and their parity guarantees) byte-for-byte stable.  Each extra
+    replica then lands on the least-loaded device that doesn't already
+    hold a copy of that segment (ties -> lowest device id), which is what
+    equalizes instance counts when a few hot segments carry factor > 1.
+    Deterministic: same inputs, same assignment.
+    """
+    assignment = round_robin(n_sealed, n_dev)
+    holders = [{d for d in range(n_dev) if i in assignment[d]}
+               for i in range(n_sealed)]
+    for i in range(n_sealed):
+        for _ in range(factors[i] - 1):
+            free = [d for d in range(n_dev) if d not in holders[i]]
+            if not free:
+                break
+            d = min(free, key=lambda d: (len(assignment[d]), d))
+            assignment[d].append(i)
+            holders[i].add(d)
+    return assignment
+
+
+def layout_dict(mesh: Mesh, axis: str, n_sealed: int,
+                replication=None) -> dict:
     """The placement rule as data: where ``n_sealed`` sealed segments land
     on ``mesh``'s ``axis``.  The single source of truth for per-device
     counts and assignment -- :func:`place_segments` builds device arrays
     from it and ``SegmentedIndex.shard_layout`` reports it, so the report
     can never drift from what actually runs."""
     n_dev = int(mesh.shape[axis])
+    factors = normalize_replication(n_sealed, n_dev, replication)
+    assignment = replicated_assignment(n_sealed, n_dev, factors)
     return {
         "axis": axis,
         "mesh_axes": list(mesh.axis_names),
         "mesh_shape": [int(mesh.shape[a]) for a in mesh.axis_names],
         "n_dev": n_dev,
-        "per_dev": max(1, -(-n_sealed // n_dev)),
+        "per_dev": max(1, max(len(a) for a in assignment)),
         "n_sealed": n_sealed,
-        "assignment": round_robin(n_sealed, n_dev),
+        "n_instances": int(sum(factors)),
+        "replication": list(factors),
+        "assignment": assignment,
     }
 
 
 def place_segments(segments: Sequence, delta, mesh: Mesh, axis: str,
-                   version: int) -> SegmentPlacement:
+                   version: int, replication=None) -> SegmentPlacement:
     """Build a :class:`SegmentPlacement` from serve-layer segments.
 
     Args:
@@ -120,6 +184,9 @@ def place_segments(segments: Sequence, delta, mesh: Mesh, axis: str,
         delta: the mutable delta segment, replicated across the mesh.
         mesh: serve mesh; ``axis`` must be one of its axis names.
         version: mutation counter recorded on the placement.
+        replication: per-segment replication factors (None / int / sequence,
+            see :func:`normalize_replication`); factor-f segments are
+            stacked into f devices' stripes.
 
     Returns:
         A placement whose device arrays are already ``device_put`` with the
@@ -129,7 +196,7 @@ def place_segments(segments: Sequence, delta, mesh: Mesh, axis: str,
     if axis not in mesh.axis_names:
         raise ValueError(f"mesh has axes {mesh.axis_names}, no {axis!r}")
     n_sealed = len(segments)
-    lay = layout_dict(mesh, axis, n_sealed)
+    lay = layout_dict(mesh, axis, n_sealed, replication=replication)
     n_dev, per_dev, assignment = lay["n_dev"], lay["per_dev"], lay["assignment"]
 
     # Block layout: device d's contiguous stripe is assignment[d] + padding.
@@ -163,6 +230,7 @@ def place_segments(segments: Sequence, delta, mesh: Mesh, axis: str,
         delta_gids=jax.device_put(delta.gids, repl),
         delta_live=jax.device_put(delta.live, repl),
         assignment=tuple(tuple(a) for a in assignment),
+        replication=tuple(lay["replication"]),
     )
 
 

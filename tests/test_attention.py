@@ -1,7 +1,6 @@
 """Attention-path equivalences: flash (blockwise online-softmax) vs dense,
 RoPE / M-RoPE properties, local windows, head padding."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,345 @@
+"""Replicated hot-segment serving: placement plan, router, parity, policy.
+
+Invariant 6 (docs/architecture.md): replication changes *where* queries run,
+never what they return.  Replicas of a sealed segment are bit-identical
+copies, so whether one replica answers (router-planned) or all of them do
+(unrouted, deduped by gid at the collective fan-in), the merged top-k must
+equal the unreplicated sharded path -- which invariant 4 already pins to the
+single-device path.  In-process tests cover the plan/router/policy host
+logic and the 1-device degenerate mesh; real replica behaviour (alternating
+routed batches, all-active dedup, auto re-placement) runs on a multi-device
+host mesh in a subprocess, like tests/test_sharded_serve.py.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import index as lidx
+from repro.kernels import ops
+from repro.serve import SegmentedIndex, ServableRegistry, ServableSpec
+from repro.serve.router import QueryRouter, auto_factors
+from repro.sharding import placement
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_DIMS = 16
+
+
+def _cfg():
+    return lidx.IndexConfig(n_dims=N_DIMS, n_tables=4, n_hashes=4,
+                            log2_buckets=8, bucket_capacity=64, r=2.0)
+
+
+def _data(n, seed=0, scale=1.0):
+    return (np.random.default_rng(seed).normal(size=(n, N_DIMS)) *
+            scale).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# placement plan (pure host logic)
+# ---------------------------------------------------------------------------
+
+
+def test_normalize_replication():
+    assert placement.normalize_replication(3, 4, None) == (1, 1, 1)
+    assert placement.normalize_replication(3, 4, 2) == (2, 2, 2)
+    # clipped to the device count, padded with 1s, truncated to n_sealed
+    assert placement.normalize_replication(3, 2, [9, 0]) == (2, 1, 1)
+    assert placement.normalize_replication(1, 4, [2, 3, 4]) == (2,)
+    assert placement.normalize_replication(0, 4, 3) == ()
+
+
+def test_replicated_assignment_factor1_is_round_robin():
+    for n, d in ((7, 3), (4, 4), (0, 2), (5, 1)):
+        assert (placement.replicated_assignment(n, d, (1,) * n)
+                == placement.round_robin(n, d))
+
+
+def test_replicated_assignment_spreads_replicas():
+    # one hot segment, factor 3 on 4 devices: replicas on 3 distinct
+    # devices, instance counts balanced (no device holds 2 copies)
+    asn = placement.replicated_assignment(4, 4, (3, 1, 1, 1))
+    holders = [d for d, block in enumerate(asn) if 0 in block]
+    assert len(holders) == 3
+    assert all(block.count(0) <= 1 for block in asn)
+    assert max(len(b) for b in asn) - min(len(b) for b in asn) <= 1
+    # factors saturate at n_dev: every device gets exactly one copy
+    asn = placement.replicated_assignment(2, 3, (3, 3))
+    assert all(sorted(b) == sorted(set(b)) for b in asn)
+    assert sum(b.count(0) for b in asn) == 3
+    assert sum(b.count(1) for b in asn) == 3
+
+
+def test_layout_dict_reports_replication():
+    mesh = compat.make_mesh((1,), ("serve",))
+    lay = placement.layout_dict(mesh, "serve", 3, replication=[5, 1, 1])
+    # factors clip to the 1-device mesh: layout identical to unreplicated
+    assert lay["replication"] == [1, 1, 1]
+    assert lay["n_instances"] == 3
+    assert lay == placement.layout_dict(mesh, "serve", 3)
+
+
+# ---------------------------------------------------------------------------
+# router
+# ---------------------------------------------------------------------------
+
+
+def _layout(n_dev, assignment, n_sealed):
+    per_dev = max(1, max(len(a) for a in assignment))
+    return {"n_dev": n_dev, "per_dev": per_dev, "n_sealed": n_sealed,
+            "assignment": assignment}
+
+
+def test_router_activates_one_replica_per_segment():
+    # segment 0 on devices {0,1}, segment 1 on {1}, segment 2 on {2}
+    r = QueryRouter(_layout(3, [[0], [1, 0], [2]], 3))
+    for _ in range(6):
+        plan = r.route()
+        assert set(plan.dev_of) == {0, 1, 2}
+        assert plan.dev_of[1] == 1 and plan.dev_of[2] == 2
+        # exactly one active instance per sealed segment
+        assert int(plan.active.sum()) == 3
+        # the activated slot belongs to the chosen device's stripe
+        d0 = plan.dev_of[0]
+        assert plan.active[d0 * r.per_dev:(d0 + 1) * r.per_dev].any()
+
+
+def test_router_prefers_least_loaded_device():
+    # hot segment 0 replicated on all 4 devices; segments 1-3 pinned on
+    # devices 0-2 and the delta pinned on rank 0 -- device 3 is always the
+    # least loaded, so the router must consistently route segment 0 there
+    r = QueryRouter(_layout(4, [[1, 0], [2, 0], [3, 0], [0]], 4))
+    for _ in range(8):
+        assert r.route().dev_of[0] == 3
+    load = r.device_load()
+    # rank 0 carries delta + its pinned segment; 1-3 stay equalized
+    assert load[0] == 16
+    assert load[1] == load[2] == load[3] == 8
+
+
+def test_router_deterministic():
+    mk = lambda: QueryRouter(_layout(3, [[0, 1], [1, 0], [2]], 3))
+    a, b = mk(), mk()
+    for _ in range(5):
+        pa, pb = a.route(), b.route()
+        np.testing.assert_array_equal(pa.active, pb.active)
+        assert pa.dev_of == pb.dev_of
+        assert pa.per_device_active == pb.per_device_active
+
+
+def test_auto_factors():
+    # balanced traffic stays unreplicated
+    assert auto_factors([10, 11, 9, 10], 8) == [1, 1, 1, 1]
+    # a segment winning ~4x its fair share gets ~4 replicas
+    assert auto_factors([80, 7, 7, 6], 8) == [3, 1, 1, 1]
+    # clipped to the device count / max_factor
+    assert auto_factors([100, 0], 4) == [2, 1]
+    assert auto_factors([400, 1, 1, 1], 8, max_factor=2) == [2, 1, 1, 1]
+    # degenerate inputs: no traffic yet -> no replication
+    assert auto_factors([], 4) == []
+    assert auto_factors([0, 0], 4) == [1, 1]
+
+
+# ---------------------------------------------------------------------------
+# merge fan-in dedup
+# ---------------------------------------------------------------------------
+
+
+def test_merge_topk_unique_drops_replica_duplicates():
+    d = jnp.asarray([[0.5, 0.1, 0.5, 0.3, jnp.inf]])
+    g = jnp.asarray([[7, 3, 7, 5, -1]], dtype=jnp.int32)
+    dd, gg = ops.merge_topk_unique(d, g, 4)
+    np.testing.assert_array_equal(np.asarray(gg), [[3, 5, 7, -1]])
+    np.testing.assert_array_equal(
+        np.asarray(dd)[0, :3], np.asarray([0.1, 0.3, 0.5], np.float32))
+    assert np.isinf(np.asarray(dd)[0, 3])
+
+
+def test_merge_topk_unique_matches_merge_topk_without_duplicates():
+    rng = np.random.default_rng(0)
+    d = rng.uniform(size=(6, 40)).astype(np.float32)
+    g = rng.permutation(40 * 6).reshape(6, 40).astype(np.int32)
+    want_d, want_i = ops.merge_topk(jnp.asarray(d), jnp.asarray(g), 10)
+    got_d, got_i = ops.merge_topk_unique(jnp.asarray(d), jnp.asarray(g), 10)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+# ---------------------------------------------------------------------------
+# in-process: 1-device degenerate mesh + registry policy
+# ---------------------------------------------------------------------------
+
+
+def test_one_device_replication_degenerates_to_parity():
+    """Factors clip to 1 on a 1-device mesh: no router, same results."""
+    si = SegmentedIndex(_cfg(), segment_capacity=128, insert_chunk=64, seed=3)
+    gids = si.insert(_data(300, seed=1))
+    si.delete(gids[::7])
+    q = _data(9, seed=2, scale=0.9)
+    want_i, want_d = si.query(q, 10, n_probes=4)
+
+    si.shard(compat.make_mesh((1,), ("serve",)))
+    si.set_replication(4)
+    got_i, got_d = si.query(q, 10, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    assert si._router is None                    # all factors clipped to 1
+    assert si.shard_layout()["replication"] == [1, 1]
+
+
+def test_spec_replication_policy():
+    mk = lambda rep: ServableSpec(name="t", n_dims=N_DIMS, replication=rep)
+    assert mk("none").replication_policy() is None
+    assert mk("static:3").replication_policy() == 3
+    assert mk("auto").replication_policy() == "auto"
+    for bad in ("static:0", "static:x", "always", "2"):
+        with pytest.raises(ValueError, match="replication"):
+            mk(bad)
+
+
+def test_registry_replication_static_and_snapshot(tmp_path):
+    """static:k is applied at register time, rides the snapshot manifest,
+    and restores with identical results."""
+    mesh = compat.make_mesh((1,), ("serve",))
+    reg = ServableRegistry(mesh=mesh)
+    spec = ServableSpec(name="t", n_dims=N_DIMS, r=2.0, log2_buckets=8,
+                        bucket_capacity=64, segment_capacity=128,
+                        insert_chunk=64, chunk_sizes=(8, 32),
+                        shard_axis="serve", replication="static:2")
+    sv = reg.register(spec)
+    assert sv.index.replication() == 2
+    gids = sv.insert(_data(200, seed=14))
+    sv.delete(gids[::3])
+    q = _data(5, seed=15, scale=0.9)
+    want_i, want_d = sv.index.query(q, 10, n_probes=4)
+
+    reg.snapshot(str(tmp_path), step=1)
+    reg2 = ServableRegistry(mesh=mesh)
+    assert reg2.restore(str(tmp_path)) == ["t"]
+    sv2 = reg2.get("t")
+    assert sv2.spec.replication == "static:2"
+    assert sv2.index.replication() == 2
+    got_i, got_d = sv2.index.query(q, 10, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+def test_servable_auto_compact_replaces():
+    """Servable.compact() under "auto" derives factors from shard_balance
+    and re-applies them; on a 1-device mesh they normalize to 1 (parity),
+    but the policy plumbing must run and results must not change."""
+    mesh = compat.make_mesh((1,), ("serve",))
+    reg = ServableRegistry(mesh=mesh)
+    sv = reg.register(ServableSpec(
+        name="t", n_dims=N_DIMS, r=2.0, log2_buckets=8, bucket_capacity=64,
+        segment_capacity=64, insert_chunk=32, chunk_sizes=(8, 32),
+        shard_axis="serve", replication="auto"))
+    emb = _data(200, seed=5)
+    gids = sv.insert(emb)
+    q = emb[:6] * 0.98
+    sv.index.query(q, 10, n_probes=4)           # feed shard_balance
+    sv.delete(gids[::4])
+    want_i, want_d = sv.index.query(q, 10, n_probes=4)
+
+    sv.compact()
+    assert isinstance(sv.index.replication(), tuple)   # factors applied
+    got_i, got_d = sv.index.query(q, 10, n_probes=4)
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+
+
+# ---------------------------------------------------------------------------
+# subprocess: real replicas on a multi-device host mesh
+# ---------------------------------------------------------------------------
+
+
+def _run(code: str, timeout=560) -> str:
+    env = dict(os.environ,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8",
+               JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, timeout=timeout,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+def test_multi_device_replicated_parity_and_balance():
+    """The full invariant-6 story on an 8-device mesh: routed replicas stay
+    bit-identical batch after batch, the all-active (router-less) path
+    dedups by gid, telemetry spreads a hot segment's wins across its
+    replicas, and auto re-placement at compact time keeps parity."""
+    stdout = _run("""
+        import numpy as np
+        from repro import compat
+        from repro.core import distributed, index as lidx
+        from repro.serve.segments import SegmentedIndex
+        from repro.serve.router import auto_factors
+        from repro.serve.stats import ServingStats
+
+        cfg = lidx.IndexConfig(n_dims=16, n_tables=4, n_hashes=4,
+                               log2_buckets=8, bucket_capacity=64, r=2.0)
+        stats = ServingStats()
+        si = SegmentedIndex(cfg, segment_capacity=64, insert_chunk=32,
+                            seed=3, on_fanout=stats.record_fanout)
+        rng = np.random.default_rng(1)
+        emb = rng.normal(size=(450, 16)).astype(np.float32)
+        gids = si.insert(emb)                    # 7 sealed + delta
+        si.delete(gids[::7])
+        # skewed traffic: perturbations of items living in sealed segment 0
+        q = (emb[:9] * 0.98).astype(np.float32)
+        want_i, want_d = si.query(q, 10, n_probes=4)
+
+        mesh = compat.make_mesh((4,), ("serve",))
+        si.shard(mesh)
+        base_i, base_d = si.query(q, 10, n_probes=4)
+        np.testing.assert_array_equal(np.asarray(base_i), np.asarray(want_i))
+
+        # -- routed replicas: parity on every batch, alternating devices --
+        si.set_replication([4, 1, 1, 1, 1, 1, 1])
+        lay = si.shard_layout()
+        assert lay["replication"] == [4, 1, 1, 1, 1, 1, 1]
+        assert lay["n_instances"] == 10
+        stats2 = ServingStats()
+        si._on_fanout = stats2.record_fanout
+        for _ in range(8):
+            got_i, got_d = si.query(q, 10, n_probes=4)
+            np.testing.assert_array_equal(np.asarray(got_i),
+                                          np.asarray(want_i))
+            np.testing.assert_array_equal(np.asarray(got_d),
+                                          np.asarray(want_d))
+        bal = stats2.shard_balance()
+        assert len(bal["per_device_wins"]) == 4
+        assert sum(bal["per_device_load"]) > 0
+        # the hot segment's wins no longer pile on one device
+        seg0_dev_wins = [w for w in bal["per_device_wins"] if w > 0]
+        assert len(seg0_dev_wins) > 1, bal
+
+        # -- all-active mode (no router): gid dedup at the fan-in --
+        pl = si._current_placement()
+        g_all, d_all = distributed.query_segments_sharded(
+            pl, cfg, q, 10, n_probes=4, backend=si.backend)
+        np.testing.assert_array_equal(np.asarray(g_all), np.asarray(want_i))
+        np.testing.assert_array_equal(np.asarray(d_all), np.asarray(want_d))
+
+        # -- auto factors from real telemetry + compact re-place --
+        wins = stats2.shard_balance()["per_segment_wins"]
+        fac = auto_factors(wins[:-1], 4)
+        assert len(fac) == 7 and all(1 <= f <= 4 for f in fac)
+        si.set_replication(fac)
+        si.compact()
+        after_i, after_d = si.query(q, 10, n_probes=4)
+        si.unshard()
+        ref_i, ref_d = si.query(q, 10, n_probes=4)
+        np.testing.assert_array_equal(np.asarray(after_i), np.asarray(ref_i))
+        np.testing.assert_array_equal(np.asarray(after_d), np.asarray(ref_d))
+        print("OK")
+    """)
+    assert "OK" in stdout

@@ -20,7 +20,8 @@ import pytest
 from repro.core import index as lidx
 from repro.kernels import ops
 from repro.serve import (MicroBatcher, SegmentedIndex, ServableRegistry,
-                         ServableSpec, occupancy_report, recall_proxy)
+                         ServableSpec, ServingStats, occupancy_report,
+                         recall_proxy)
 
 N_DIMS = 16
 
@@ -162,6 +163,91 @@ def test_merge_topk_helper():
     md, mi = ops.merge_topk(jnp.asarray([[0.5, 0.5, 0.5]]),
                             jnp.asarray([[9, 2, 5]]), 2)
     assert mi.tolist() == [[2, 5]]
+
+
+# ---------------------------------------------------------------------------
+# shard_balance telemetry edge cases (the auto replication policy's input)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_balance_zero_candidate_reports():
+    """A merge where no segment offered a candidate (empty index, all
+    tombstoned, cold probe set) must report cleanly -- no division by zero,
+    empty win rates, zero imbalance -- because "auto" replication reads
+    these fields verbatim."""
+    st = ServingStats()
+    st.record_fanout([0, 0], dev_wins=[0], seg_candidates=[0, 0])
+    bal = st.shard_balance()
+    assert bal["n_sampled"] == 1
+    assert bal["per_segment_wins"] == [0, 0]
+    assert bal["per_segment_candidates"] == [0, 0]
+    assert bal["merge_win_rate"] == []
+    assert bal["device_imbalance"] == 0.0
+    assert bal["device_load_imbalance"] == 0.0
+    # an index with no live items produces exactly such a report
+    si = SegmentedIndex(_cfg(), segment_capacity=64,
+                        on_fanout=st.record_fanout)
+    si.insert(_data(5, seed=0))
+    si.delete(list(range(5)))
+    ids, _ = si.query(_data(3, seed=1), 5)
+    assert np.all(np.asarray(ids) == -1)
+    assert sum(st.shard_balance()["per_segment_wins"]) == 0
+
+
+def test_shard_balance_single_device_imbalance_is_exactly_one():
+    """On a 1-device mesh every win lands on device 0, so max/mean must be
+    exactly 1.0 (not approximately): the baseline "perfectly balanced"
+    anchor the auto policy compares against."""
+    st = ServingStats()
+    for wins in ([3], [11], [5]):
+        st.record_fanout([wins[0]], dev_wins=wins, dev_load=[1])
+    bal = st.shard_balance()
+    assert bal["device_imbalance"] == 1.0
+    assert bal["device_load_imbalance"] == 1.0
+
+    from repro import compat
+    st2 = ServingStats()
+    si = SegmentedIndex(_cfg(), segment_capacity=64, insert_chunk=32,
+                        on_fanout=st2.record_fanout)
+    emb = _data(150, seed=2)
+    si.insert(emb)
+    si.shard(compat.make_mesh((1,), ("serve",)))
+    si.query(emb[:6] * 0.98, 10, n_probes=4)
+    bal = st2.shard_balance()
+    assert sum(bal["per_device_wins"]) > 0
+    assert bal["device_imbalance"] == 1.0
+
+
+def test_shard_balance_wins_after_compact_replacement():
+    """Counters are positional and survive a compact() re-placement: the
+    post-compaction segment set keeps accumulating into the same slots, the
+    report stays internally consistent, and the delta's trailing slot (what
+    Servable.compact strips before deriving auto factors) is still last."""
+    st = ServingStats()
+    si = SegmentedIndex(_cfg(), segment_capacity=64, insert_chunk=32,
+                        on_fanout=st.record_fanout)
+    emb = _data(200, seed=3)
+    gids = si.insert(emb)                        # 3 sealed + delta
+    q = emb[:6] * 0.98
+    si.query(q, 10, n_probes=4)
+    pre = st.shard_balance()
+    n_slots_pre = len(pre["per_segment_wins"])
+    assert n_slots_pre == len(si.segments)
+
+    si.delete(gids[::4])
+    si.compact()                                 # re-placement: new segments
+    si.query(q, 10, n_probes=4)
+    post = st.shard_balance()
+    assert post["n_sampled"] == 2
+    # positional accumulation: slot count only grows to the max seen
+    assert len(post["per_segment_wins"]) >= n_slots_pre
+    assert sum(post["per_segment_wins"]) > sum(pre["per_segment_wins"])
+    assert sum(abs(r) for r in post["merge_win_rate"]) == pytest.approx(
+        1.0, abs=0.01)
+    # the sealed-only prefix the auto policy consumes is well-formed
+    sealed_wins = post["per_segment_wins"][:-1]
+    assert len(sealed_wins) == len(post["per_segment_wins"]) - 1
+    assert all(w >= 0 for w in sealed_wins)
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config, smoke_config
+from repro.configs import get_config
 from repro.launch import specs as lspecs
 from repro.models import get_model
 from repro.sharding import rules

@@ -1,8 +1,6 @@
 """End-to-end behaviour tests for the paper's system: the full pipeline from
 functions to hashes to index to retrieval, plus the serving-path LSH cache."""
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -10,7 +8,7 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.core import (basis, collision, functional, hashes, index as lidx,
-                        montecarlo, wasserstein)
+                        montecarlo)
 from repro.models import get_model
 from repro.runtime import steps as rt
 

@@ -1,0 +1,166 @@
+"""Benchmark regression gate: smoke results vs the committed baseline.
+
+Usage (CI runs it right after ``python -m benchmarks.run --smoke``)::
+
+    python tools/check_bench_regression.py \
+        [--current BENCH_results.smoke.json] \
+        [--baseline benchmarks/baselines/smoke_baseline.json]
+
+What is gated, per benchmark section:
+
+* the benchmark must still exist and must not have errored;
+* every ``*recall*`` metric must not drop below baseline by more than
+  ``RECALL_TOL`` (absolute -- smoke workloads are deterministic, so the
+  tolerance only absorbs environment-level jitter such as a different
+  BLAS);
+* every ``*parity*`` flag that was true in the baseline must stay true
+  (bit-identity gates are never allowed to rot into "almost");
+* ``wall_s`` must stay within ``WALL_RATIO``x the baseline plus
+  ``WALL_SLACK`` seconds -- deliberately generous, because CI runners and
+  laptops differ far more than real regressions do; this catches
+  order-of-magnitude blowups (an accidental O(n^2), a kernel falling off
+  its compiled path), not percent-level noise.
+
+Metrics outside those families (throughputs, imbalance numbers, raw
+timings) are never gated and are omitted from the delta table -- keeping
+the gate green under normal drift is what lets it stay a required check;
+diff the two JSON files directly when you want the full picture.
+
+**Refreshing the baseline** (after an intentional perf/recall change)::
+
+    python -m benchmarks.run --smoke
+    cp BENCH_results.smoke.json benchmarks/baselines/smoke_baseline.json
+
+then commit the new baseline together with the change that justified it,
+so the diff reviewer sees both.  A benchmark present in the current run
+but absent from the baseline prints a NEW row (not a failure) -- refresh
+the baseline to start gating it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RECALL_TOL = 0.02      # absolute recall drop absorbed as jitter
+WALL_RATIO = 4.0       # current wall_s may be up to 4x baseline ...
+WALL_SLACK = 20.0      # ... plus 20s flat (compile-cache cold starts)
+
+GATED_NOTE = {"ok": "", "FAIL": "  <-- gate", "NEW": "  (not in baseline)"}
+
+
+def _fmt(v):
+    if isinstance(v, bool):
+        return str(v)
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+def compare(current: dict, baseline: dict):
+    """Returns (rows, failures): rows for the delta table, failures as
+    human-readable strings.  Pure function -- unit-testable without files."""
+    rows, failures = [], []
+    for name in sorted(set(baseline) | set(current)):
+        if name == "_meta":
+            continue
+        base, cur = baseline.get(name), current.get(name)
+        if base is None:
+            rows.append((name, "-", "-", "-", "NEW"))
+            continue
+        if "error" in base:
+            # a broken baseline entry can't gate anything; surface it
+            rows.append((name, "baseline error", "-", "-", "NEW"))
+            continue
+        if cur is None:
+            failures.append(f"{name}: present in baseline but missing "
+                            f"from the current run")
+            rows.append((name, "missing", "-", "-", "FAIL"))
+            continue
+        if "error" in cur:
+            failures.append(f"{name}: errored: {cur['error']}")
+            rows.append((name, "error", "-", _fmt(cur["error"]), "FAIL"))
+            continue
+        for key in sorted(base):
+            bv, cv = base[key], cur.get(key)
+            if key in ("git_sha", "us_total"):
+                continue
+            gated = (("recall" in key) or ("parity" in key)
+                     or key == "wall_s")
+            if cv is None:
+                # a *gated* metric vanishing is itself a regression: a
+                # renamed parity flag must not silently stop being checked
+                if gated:
+                    failures.append(f"{name}/{key}: gated metric present "
+                                    f"in baseline but missing from the "
+                                    f"current run")
+                    rows.append((name, key, _fmt(bv), "missing", "FAIL"))
+                continue
+            status = "ok"
+            if "recall" in key and isinstance(bv, (int, float)) \
+                    and not isinstance(bv, bool):
+                if cv < bv - RECALL_TOL:
+                    status = "FAIL"
+                    failures.append(
+                        f"{name}/{key}: recall dropped {bv:.4f} -> "
+                        f"{cv:.4f} (tolerance {RECALL_TOL})")
+            elif "parity" in key and bv is True:
+                if cv is not True:
+                    status = "FAIL"
+                    failures.append(f"{name}/{key}: parity was true in "
+                                    f"baseline, now {cv!r}")
+            elif key == "wall_s":
+                limit = bv * WALL_RATIO + WALL_SLACK
+                if cv > limit:
+                    status = "FAIL"
+                    failures.append(
+                        f"{name}/{key}: {cv:.1f}s exceeds the generous "
+                        f"limit {limit:.1f}s ({WALL_RATIO}x baseline "
+                        f"{bv:.1f}s + {WALL_SLACK}s)")
+            else:
+                continue        # informational metric: not gated
+            rows.append((name, key, _fmt(bv), _fmt(cv), status))
+    return rows, failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail CI when smoke benchmarks regress vs the "
+                    "committed baseline")
+    ap.add_argument("--current", default="BENCH_results.smoke.json")
+    ap.add_argument("--baseline",
+                    default="benchmarks/baselines/smoke_baseline.json")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    rows, failures = compare(current, baseline)
+    widths = [max(len(str(r[i])) for r in rows + [("benchmark", "metric",
+                                                   "baseline", "current",
+                                                   "status")])
+              for i in range(5)]
+    header = ("benchmark", "metric", "baseline", "current", "status")
+    print("  ".join(h.ljust(w) for h, w in zip(header, widths)))
+    print("  ".join("-" * w for w in widths))
+    for r in rows:
+        print("  ".join(str(v).ljust(w) for v, w in zip(r, widths))
+              + GATED_NOTE.get(r[4], ""))
+
+    if failures:
+        print(f"\n{len(failures)} regression(s) vs {args.baseline}:",
+              file=sys.stderr)
+        for f_ in failures:
+            print(f"  - {f_}", file=sys.stderr)
+        print("\nIf this change is intentional, refresh the baseline "
+              "(see this script's docstring).", file=sys.stderr)
+        return 1
+    print(f"\nno regressions vs {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
