@@ -1,0 +1,142 @@
+"""Durable write-path benchmark: WAL group-commit cost + recovery time.
+
+Two experiments, reported into BENCH_results.json:
+
+1. **Ingest throughput vs fsync interval** -- the group-commit dial priced.
+   The same insert workload runs with no WAL (the pre-durability baseline)
+   and with ``fsync_every`` in {1, 8, 64}: synchronous commit pays an fsync
+   per insert batch, group commit amortizes it, and the spread between
+   ``nowal`` and ``fsync64`` is the logging overhead proper (framing + crc
+   + write-through).  Reported as rows/s per setting plus the relative cost
+   of each against the no-WAL baseline.
+
+2. **Recovery wall-clock vs WAL length** -- how long a crashed process
+   takes to come back as a function of how much un-snapshotted history it
+   must replay.  For each WAL length we build a log of that many insert
+   records (plus churn deletes/seals), then time a cold
+   ``ServableRegistry.recover`` (WAL-only: the worst case -- no snapshot
+   absorbs any of the tail).  ``recovered_parity`` asserts the recovered
+   index answers queries bit-identically to the writer (the invariant-7
+   bench-gate guard: ``tools/check_bench_regression.py`` fails the gate if
+   it ever goes false).
+
+REPRO_BENCH_SMOKE=1 shrinks both sweeps for CI.  Run standalone with
+``python -m benchmarks.bench_ingest_durability [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.serve import ServableRegistry, ServableSpec
+
+from .bench_query_engine import smoke_mode
+from .common import write_csv
+
+N_DIMS = 32
+K = 10
+N_PROBES = 2
+BATCH = 128
+FSYNC_SWEEP = (1, 8, 64)
+
+
+def _spec(segment_capacity: int) -> ServableSpec:
+    return ServableSpec(name="t", n_dims=N_DIMS, r=4.0, n_tables=4,
+                        n_hashes=4, log2_buckets=10, bucket_capacity=32,
+                        segment_capacity=segment_capacity, insert_chunk=BATCH,
+                        chunk_sizes=(8, 32))
+
+
+def _ingest(wal_dir, fsync_every, n_batches, seg_cap, rng):
+    """One tenant absorbing n_batches x BATCH rows; returns (rows/s, reg)."""
+    reg = ServableRegistry(wal_dir=wal_dir, fsync_every=fsync_every)
+    sv = reg.register(_spec(seg_cap))
+    data = [rng.normal(size=(BATCH, N_DIMS)).astype(np.float32)
+            for _ in range(n_batches)]
+    sv.insert(data[0])                           # warmup compile
+    t0 = time.perf_counter()
+    for emb in data[1:]:
+        sv.insert(emb)
+    dt = time.perf_counter() - t0
+    return (n_batches - 1) * BATCH / dt, reg
+
+
+def run(seed: int = 0, out_csv: str = "experiments/ingest_durability.csv"
+        ) -> dict:
+    smoke = smoke_mode()
+    n_batches = 8 if smoke else 40
+    seg_cap = 1024
+    wal_lengths = (4, 16) if smoke else (8, 32, 128)   # insert batches
+    rng = np.random.default_rng(seed)
+
+    tmp = tempfile.mkdtemp(prefix="bench_wal_")
+    results, rows = {}, []
+    try:
+        # -- 1. throughput vs group-commit interval -------------------------
+        _ingest(None, None, 3, seg_cap, rng)     # process-wide warmup
+        base_rps, _ = _ingest(None, None, n_batches, seg_cap, rng)
+        results["ingest_rows_per_s_nowal"] = round(base_rps)
+        for fs in FSYNC_SWEEP:
+            rps, _ = _ingest(f"{tmp}/fs{fs}", fs, n_batches, seg_cap, rng)
+            results[f"ingest_rows_per_s_fsync{fs}"] = round(rps)
+            results[f"ingest_overhead_fsync{fs}"] = round(base_rps / rps, 3)
+            rows.append(("throughput", fs, (n_batches - 1) * BATCH,
+                         round(rps), ""))
+
+        # -- 2. recovery wall-clock vs WAL length ---------------------------
+        parity = True
+        for n in wal_lengths:
+            wal_dir = f"{tmp}/rec{n}"
+            reg = ServableRegistry(wal_dir=wal_dir, fsync_every=8)
+            sv = reg.register(_spec(seg_cap))
+            g = None
+            for i in range(n):
+                g = sv.insert(rng.normal(size=(BATCH, N_DIMS)
+                                         ).astype(np.float32))
+                if i % 5 == 4:
+                    sv.delete(g[::8])
+                if i % 7 == 6:
+                    sv.index.seal()
+            qs = (rng.normal(size=(16, N_DIMS)) * 0.9).astype(np.float32)
+            want_i, want_d = map(np.asarray,
+                                 sv.index.query(qs, K, n_probes=N_PROBES))
+            wal_bytes = sv.index.wal.stats()["offset"]
+
+            t0 = time.perf_counter()
+            reg2 = ServableRegistry()
+            rep = reg2.recover(wal_dir=wal_dir)["t"]
+            recovery_s = time.perf_counter() - t0
+            got_i, got_d = map(np.asarray,
+                               reg2.get("t").index.query(qs, K,
+                                                         n_probes=N_PROBES))
+            parity &= (np.array_equal(want_i, got_i)
+                       and np.array_equal(want_d, got_d))
+            results[f"recovery_s_wal{n * BATCH}"] = round(recovery_s, 3)
+            rows.append(("recovery", 8, n * BATCH, round(recovery_s, 3),
+                         wal_bytes))
+            assert rep["applied"] == rep["n_records"] and not rep["truncated"]
+
+        results["recovered_parity"] = parity
+        results["n_rows_ingested"] = (n_batches - 1) * BATCH
+        write_csv(out_csv,
+                  "experiment,fsync_every,n_rows,rows_per_s_or_recovery_s,"
+                  "wal_bytes", rows)
+        # the gate: recovery must land bit-identical, every run
+        assert parity, "recovered index diverged from the writer"
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv:
+        import os
+
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    print(run())

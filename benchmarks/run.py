@@ -49,9 +49,9 @@ def main(argv=None) -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
 
     from . import (bench_cosine, bench_embed_error, bench_hash_throughput,
-                   bench_index, bench_l2, bench_query_engine,
-                   bench_replicated_serve, bench_serve, bench_sharded_serve,
-                   bench_w2, bench_wasserstein_serve)
+                   bench_index, bench_ingest_durability, bench_l2,
+                   bench_query_engine, bench_replicated_serve, bench_serve,
+                   bench_sharded_serve, bench_w2, bench_wasserstein_serve)
 
     sha = _git_sha()
     print("name,us_per_call,derived")
@@ -67,6 +67,7 @@ def main(argv=None) -> None:
         ("sharded_serve", bench_sharded_serve.run),
         ("replicated_serve", bench_replicated_serve.run),
         ("wasserstein_serve", bench_wasserstein_serve.run),
+        ("ingest_durability", bench_ingest_durability.run),
     ]
     all_results = {}
     for name, fn in jobs:

@@ -1,1 +1,5 @@
 """checkpoint substrate."""
+
+from .checkpoint import CheckpointCorruptError
+
+__all__ = ["CheckpointCorruptError"]

@@ -1,15 +1,29 @@
-"""Sharded, atomic, reshardable checkpoints (npz + json manifest).
+"""Sharded, atomic, checksummed, reshardable checkpoints (npz + json manifest).
 
-Fault-tolerance contract (DESIGN.md §6):
-* **atomic**: payload written to ``<dir>/tmp.<step>``, fsync'd, then renamed to
-  ``<dir>/step_<k>`` -- a crash mid-save never corrupts the latest checkpoint.
+Fault-tolerance contract (docs/architecture.md, invariant 7):
+* **atomic**: payload written to ``<dir>/tmp-<step>``, fsync'd, then moved to
+  ``<dir>/step_<k>`` with ``os.replace`` + a parent-directory fsync -- a crash
+  at any instant leaves either the complete new checkpoint or none of it,
+  and never touches an older one.
+* **checksummed**: the manifest stores a crc32 per array and one over the
+  manifest body itself; ``restore``/``verify`` check them and raise
+  :class:`CheckpointCorruptError` naming the damaged file -- corruption is a
+  diagnosis, never silently-wrong weights.  Recovery callers
+  (``ServableRegistry.recover``) fall back to the previous ``keep`` step.
 * **reshardable / elastic**: restore takes target shardings; arrays are
   ``device_put`` with the *new* NamedSharding, so the same checkpoint restores
   onto any mesh (lose a pod -> restart on the smaller mesh).
-* **keep-last-k** garbage collection; ``latest_step`` scans for the newest
-  complete checkpoint (a crashed partial save is invisible to it).
+* **keep-last-k** garbage collection that **never deletes the last
+  verifiable checkpoint**: if every kept step is damaged, the newest older
+  step that still verifies survives the sweep.
+* ``latest_step`` scans for the newest complete checkpoint (a crashed
+  partial save -- a stale ``tmp-*`` dir or a step without a readable
+  manifest -- is invisible to it).
 * **async**: save_async snapshots to host then writes on a background thread
   so the train loop is not blocked by disk.
+
+Fault site (``serve/faults.py``): ``ckpt.rename`` fires after the temp dir
+is fully written, before the rename -- the classic torn-snapshot instant.
 """
 
 from __future__ import annotations
@@ -18,12 +32,28 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 _SEP = "/"
+
+
+class CheckpointCorruptError(Exception):
+    """A checkpoint failed its integrity checks.
+
+    ``path`` names the damaged file (manifest or array container) so the
+    operator knows exactly what rotted; the message says which check
+    failed.  Callers with older checkpoints on disk should fall back to
+    them (see ``ServableRegistry.recover``).
+    """
+
+    def __init__(self, path: str, reason: str):
+        super().__init__(f"corrupt checkpoint {path}: {reason}")
+        self.path = path
+        self.reason = reason
 
 
 def _flatten(tree: Any):
@@ -36,6 +66,32 @@ def _flatten(tree: Any):
     return out, treedef
 
 
+def _manifest_crc(manifest: dict) -> int:
+    """crc32 over the canonical manifest JSON, excluding the crc field."""
+    body = {k: v for k, v in manifest.items() if k != "manifest_crc32"}
+    return zlib.crc32(json.dumps(body, sort_keys=True).encode())
+
+
+def _fire(site: str) -> None:
+    # lazy import: checkpoint is below serve in the layer order; the fault
+    # module is leaf-level (stdlib only), so this cannot cycle
+    from ..serve import faults
+    faults.fire(site)
+
+
+def _fsync_dir(path: str) -> None:
+    """fsync a directory so a rename inside it is durable (best-effort on
+    filesystems that refuse directory fds)."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3,
          extra: Optional[dict] = None) -> str:
     """Blocking save.  Returns the final checkpoint path.
@@ -45,7 +101,7 @@ def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3,
     segment bookkeeping); read it back with ``load_extra``.
     """
     os.makedirs(ckpt_dir, exist_ok=True)
-    tmp = os.path.join(ckpt_dir, f"tmp.{step}")
+    tmp = os.path.join(ckpt_dir, f"tmp-{step}")
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
@@ -64,16 +120,33 @@ def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3,
                                     else np.uint16)
         else:
             arrays[name] = arr
-        manifest["keys"][key] = {"file": name, "shape": list(arr.shape),
-                                 "dtype": dtype_str}
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest["keys"][key] = {
+            "file": name, "shape": list(arr.shape), "dtype": dtype_str,
+            # crc over the *stored* bytes: restore re-hashes what it read
+            "crc32": zlib.crc32(np.ascontiguousarray(arrays[name]).tobytes()),
+        }
+    manifest["manifest_crc32"] = _manifest_crc(manifest)
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **arrays)
+    with open(npz_path, "rb+") as f:
+        os.fsync(f.fileno())
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
         os.fsync(f.fileno())
+    _fire("ckpt.rename")
     if os.path.exists(final):
-        shutil.rmtree(final)
-    os.rename(tmp, final)
+        # re-saving an existing step: move the old one aside first so there
+        # is never an instant with no checkpoint at this step on disk
+        aside = os.path.join(ckpt_dir, f"old-{step}")
+        if os.path.exists(aside):
+            shutil.rmtree(aside)
+        os.rename(final, aside)
+        os.replace(tmp, final)
+        shutil.rmtree(aside, ignore_errors=True)
+    else:
+        os.replace(tmp, final)
+    _fsync_dir(ckpt_dir)
     _gc(ckpt_dir, keep)
     return final
 
@@ -81,13 +154,15 @@ def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3,
 _save_thread: Optional[threading.Thread] = None
 
 
-def save_async(ckpt_dir: str, step: int, tree: Any, keep: int = 3) -> None:
+def save_async(ckpt_dir: str, step: int, tree: Any, keep: int = 3,
+               extra: Optional[dict] = None) -> None:
     """Snapshot to host memory now; write to disk on a background thread."""
     global _save_thread
     host_tree = jax.tree.map(lambda l: np.asarray(jax.device_get(l)), tree)
     wait()
     _save_thread = threading.Thread(
-        target=save, args=(ckpt_dir, step, host_tree, keep), daemon=True)
+        target=save, args=(ckpt_dir, step, host_tree, keep, extra),
+        daemon=True)
     _save_thread.start()
 
 
@@ -96,33 +171,120 @@ def wait() -> None:
         _save_thread.join()
 
 
+def _read_manifest(path: str) -> dict:
+    """Parse + integrity-check one checkpoint's manifest.
+
+    Raises CheckpointCorruptError on unreadable/underspecified/crc-failing
+    manifests; checkpoints from before the checksum era (no
+    ``manifest_crc32``) still load -- there is nothing to check against.
+    """
+    mpath = os.path.join(path, "manifest.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError) as e:
+        raise CheckpointCorruptError(mpath, f"unreadable manifest ({e})")
+    if "keys" not in manifest:
+        raise CheckpointCorruptError(mpath, "manifest has no 'keys' table")
+    want = manifest.get("manifest_crc32")
+    if want is not None and _manifest_crc(manifest) != want:
+        raise CheckpointCorruptError(mpath, "manifest crc mismatch")
+    return manifest
+
+
+def verify(ckpt_dir: str, step: int, deep: bool = True) -> dict:
+    """Integrity-check ``step``; returns its manifest or raises
+    :class:`CheckpointCorruptError`.
+
+    ``deep=True`` additionally loads every array and checks its stored
+    crc32 (what ``restore`` does anyway); ``deep=False`` is the cheap
+    manifest-only check ``_gc`` uses to decide what is still restorable.
+    """
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    manifest = _read_manifest(path)
+    npz_path = os.path.join(path, "arrays.npz")
+    if not os.path.exists(npz_path):
+        raise CheckpointCorruptError(npz_path, "array container missing")
+    if not deep:
+        return manifest
+    try:
+        data = np.load(npz_path)
+        for key, meta in manifest["keys"].items():
+            _checked_array(data, meta, npz_path, key)
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:         # BadZipFile, truncated npy headers, ...
+        raise CheckpointCorruptError(npz_path,
+                                     f"unreadable array container ({e})")
+    return manifest
+
+
+def _checked_array(data, meta: dict, npz_path: str, key: str) -> np.ndarray:
+    """One array out of the npz, crc-verified when the manifest has one."""
+    try:
+        arr = data[meta["file"]]
+    except Exception as e:
+        raise CheckpointCorruptError(
+            npz_path, f"array {meta['file']!r} (key {key!r}) unreadable "
+                      f"({e})")
+    want = meta.get("crc32")
+    if want is not None and zlib.crc32(
+            np.ascontiguousarray(arr).tobytes()) != want:
+        raise CheckpointCorruptError(
+            npz_path, f"array {meta['file']!r} (key {key!r}) crc mismatch")
+    return arr
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step with a *complete* manifest (a crashed partial save --
+    a stale ``tmp-*`` dir, or a step dir whose manifest is missing or
+    unparseable -- is skipped, not surfaced)."""
     if not os.path.isdir(ckpt_dir):
         return None
     steps = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step_") and os.path.exists(
-                os.path.join(ckpt_dir, name, "manifest.json")):
-            steps.append(int(name[len("step_"):]))
+        if not name.startswith("step_"):
+            continue
+        try:
+            _read_manifest(os.path.join(ckpt_dir, name))
+        except CheckpointCorruptError:
+            continue
+        steps.append(int(name[len("step_"):]))
     return max(steps) if steps else None
+
+
+def steps(ckpt_dir: str) -> list:
+    """All step numbers present (complete or not), ascending."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(int(n[len("step_"):]) for n in os.listdir(ckpt_dir)
+                  if n.startswith("step_"))
 
 
 def load_extra(ckpt_dir: str, step: int) -> dict:
     """The ``extra`` metadata dict stored at save time ({} if absent)."""
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        return json.load(f).get("extra", {})
+    return _read_manifest(path).get("extra", {})
 
 
 def restore(ckpt_dir: str, step: int, target: Any,
             shardings: Optional[Any] = None) -> Any:
     """Restore into the structure of ``target`` (a pytree of arrays or
     ShapeDtypeStructs).  ``shardings``: matching tree of NamedShardings for
-    elastic re-mesh restore; None -> default placement."""
+    elastic re-mesh restore; None -> default placement.
+
+    Every array's crc32 is checked against the manifest before it is
+    placed on device; any mismatch raises :class:`CheckpointCorruptError`
+    naming the file -- restore never hands back silently-wrong data.
+    """
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    manifest = _read_manifest(path)
+    npz_path = os.path.join(path, "arrays.npz")
+    try:
+        data = np.load(npz_path)
+    except Exception as e:
+        raise CheckpointCorruptError(npz_path,
+                                     f"unreadable array container ({e})")
     flat_t, treedef = _flatten(target)
     flat_s, _ = _flatten(shardings) if shardings is not None else ({}, None)
     out = {}
@@ -130,7 +292,7 @@ def restore(ckpt_dir: str, step: int, target: Any,
         meta = manifest["keys"].get(key)
         if meta is None:
             raise KeyError(f"checkpoint missing key {key}")
-        arr = data[meta["file"]]
+        arr = _checked_array(data, meta, npz_path, key)
         if tuple(arr.shape) != tuple(spec.shape):
             raise ValueError(f"shape mismatch for {key}: "
                              f"{arr.shape} vs {spec.shape}")
@@ -152,9 +314,26 @@ def restore(ckpt_dir: str, step: int, target: Any,
 
 
 def _gc(ckpt_dir: str, keep: int) -> None:
-    steps = sorted(
-        int(n[len("step_"):]) for n in os.listdir(ckpt_dir)
-        if n.startswith("step_"))
-    for s in steps[:-keep]:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
-                      ignore_errors=True)
+    """Drop all but the last ``keep`` steps -- except that the newest step
+    that still passes the cheap integrity check is always retained, even
+    if it is older than the keep window.  Deleting it would turn "some
+    kept checkpoints are damaged" into "nothing on disk restores"."""
+    all_steps = steps(ckpt_dir)
+    kept = set(all_steps[-keep:]) if keep > 0 else set()
+
+    def _ok(s: int) -> bool:
+        try:
+            verify(ckpt_dir, s, deep=False)
+            return True
+        except CheckpointCorruptError:
+            return False
+
+    if not any(_ok(s) for s in kept):
+        for s in reversed(all_steps):
+            if s not in kept and _ok(s):
+                kept.add(s)            # the last verifiable one survives
+                break
+    for s in all_steps:
+        if s not in kept:
+            shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"),
+                          ignore_errors=True)

@@ -21,7 +21,12 @@ Drives the repro.serve stack end to end with synthetic traffic:
   the number of requests).
 
 Optionally ``--snapshot DIR`` checkpoints every tenant at the end and
-``--restore DIR`` starts from a previous snapshot.  ``--shard N`` serves
+``--restore DIR`` starts from a previous snapshot.  ``--wal-dir DIR``
+turns on the durable write path (per-tenant write-ahead delta log,
+group-commit interval ``--fsync-every``); with both ``--restore`` and
+``--wal-dir`` the launcher goes through ``ServableRegistry.recover`` --
+latest verifiable snapshot plus WAL-tail replay, the crash-recovery
+path -- and prints each tenant's recovery report.  ``--shard N`` serves
 both tenants SPMD over an N-device serve mesh (on CPU it forces N host
 devices; results are bit-identical to the unsharded run).
 ``--replicate {none,static:k,auto}`` additionally materializes hot sealed
@@ -50,6 +55,14 @@ def main():
     ap.add_argument("--segment-capacity", type=int, default=1024)
     ap.add_argument("--snapshot", default=None, help="write snapshot here")
     ap.add_argument("--restore", default=None, help="restore snapshot first")
+    ap.add_argument("--wal-dir", default=None,
+                    help="durable write path: per-tenant write-ahead delta "
+                         "log under this dir (with --restore this becomes "
+                         "full crash recovery: snapshot + WAL-tail replay)")
+    ap.add_argument("--fsync-every", type=int, default=None,
+                    help="WAL group-commit interval (records per fsync; "
+                         "1 = synchronous commit, 0 = only at snapshot "
+                         "points; default REPRO_WAL_FSYNC_EVERY or 8)")
     ap.add_argument("--shard", type=int, default=0,
                     help="serve SPMD over this many devices (0 = off; on "
                          "CPU this forces the host device count, so it must "
@@ -79,11 +92,27 @@ def main():
     rng = np.random.default_rng(args.seed)
     mesh = make_serve_mesh(args.shard) if args.shard else None
     shard_axis = "serve" if mesh is not None else None
-    registry = ServableRegistry(mesh=mesh)
+    registry = ServableRegistry(mesh=mesh, wal_dir=args.wal_dir,
+                                fsync_every=args.fsync_every)
     if mesh is not None:
         print(f"[serve] SPMD serve mesh: {dict(mesh.shape)}")
 
-    if args.restore:
+    if args.restore and args.wal_dir:
+        # crash-recovery path: latest verifiable snapshot + WAL-tail replay
+        reports = registry.recover(ckpt_root=args.restore,
+                                   wal_dir=args.wal_dir)
+        names = sorted(reports)
+        for name, rep in reports.items():
+            print(f"[serve] recovered {name}: step={rep.get('restored_step')}"
+                  f" replayed={rep.get('applied', 0)}"
+                  f" dup_dropped={rep.get('dropped_duplicates', 0)}"
+                  f" truncated={rep.get('truncated', False)}")
+        if mesh is not None:
+            for name in names:
+                registry.get(name).index.shard(mesh, shard_axis)
+        print(f"[serve] recovered tenants {names} from {args.restore} "
+              f"+ WAL {args.wal_dir}")
+    elif args.restore:
         names = registry.restore(args.restore)
         if mesh is not None:
             # the CLI mesh wins over whatever shard_axis the snapshot was
@@ -203,6 +232,15 @@ def main():
     if args.snapshot:
         registry.snapshot(args.snapshot, step=args.steps)
         print(f"[serve] snapshot -> {args.snapshot}")
+
+    if args.wal_dir:
+        for name in registry.names():
+            wal = registry.get(name).index.wal
+            if wal is not None:
+                s = wal.stats()
+                print(f"[serve] wal {name}: {s['offset']}B "
+                      f"appends={s['appends']} syncs={s['syncs']} "
+                      f"fsync_every={s['fsync_every']}")
 
     print("[serve] report:",
           json.dumps({n: r["stats"] for n, r in report.items()}))

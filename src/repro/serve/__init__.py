@@ -18,18 +18,30 @@ Layering (each module usable alone):
               resolved by name from repro.embedders (basis / qmc /
               wasserstein), so function- and distribution-valued tenants
               share one front end
+  wal      -- WriteAheadLog / read_wal: per-tenant framed + checksummed
+              delta log, the durable half of the write path
+              (``ServableRegistry.recover`` = snapshot + WAL-tail replay)
+  faults   -- FaultPlan / InjectedFault: deterministic fault injection at
+              named crash points (wal.append, wal.fsync, ckpt.rename,
+              seal, snapshot) for the crash-recovery test harness
 
 ``python -m repro.launch.serve`` drives the whole stack;
-``benchmarks/bench_serve.py`` measures it.
+``benchmarks/bench_serve.py`` and ``benchmarks/bench_ingest_durability.py``
+measure it.
 """
 
 from .batcher import MicroBatcher
+from .faults import FaultPlan, FaultSpec, InjectedFault
 from .registry import Servable, ServableRegistry, ServableSpec
 from .router import QueryRouter, RoutePlan, auto_factors
 from .segments import Segment, SegmentedIndex
 from .stats import ServingStats, occupancy_report, recall_proxy
+from .wal import WalRecord, WriteAheadLog, read_wal
 
 __all__ = [
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
     "MicroBatcher",
     "QueryRouter",
     "RoutePlan",
@@ -39,7 +51,10 @@ __all__ = [
     "ServableRegistry",
     "ServableSpec",
     "ServingStats",
+    "WalRecord",
+    "WriteAheadLog",
     "auto_factors",
     "occupancy_report",
+    "read_wal",
     "recall_proxy",
 ]

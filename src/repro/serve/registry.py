@@ -40,6 +40,7 @@ import numpy as np
 from ..checkpoint import checkpoint as ckpt
 from ..core.index import IndexConfig, LSHIndexState
 from ..embedders import embedder_names, make_embedder
+from . import faults, wal as walmod
 from .batcher import MicroBatcher
 from .router import auto_factors
 from .segments import Segment, SegmentedIndex
@@ -189,7 +190,15 @@ class Servable:
         return self.embedder.nodes()
 
     def insert(self, embeddings, gids=None) -> np.ndarray:
-        out = self.index.insert(embeddings, gids=gids)
+        before = self.index.n_rejected
+        try:
+            out = self.index.insert(embeddings, gids=gids)
+        except ValueError:
+            # validation rejections (NaN/Inf rows, width mismatch) are an
+            # operator signal: count them per tenant, then let the caller
+            # see the error -- nothing was inserted
+            self.stats.record_rejected(self.index.n_rejected - before)
+            raise
         self.stats.record_insert(len(out))
         return out
 
@@ -260,21 +269,51 @@ class ServableRegistry:
         mesh: optional serve mesh handed to every tenant whose spec asks
             for sharding (``ServableSpec.shard_axis``); tenants without a
             shard axis stay single-device on the same registry.
+        wal_dir: when set, every tenant gets a write-ahead delta log at
+            ``<wal_dir>/<name>.wal`` -- all mutations are framed and
+            appended before being applied, and ``recover`` replays
+            ``latest snapshot + WAL tail`` after a crash
+            (docs/architecture.md, invariant 7).
+        fsync_every: WAL group-commit interval (see
+            ``wal.WriteAheadLog``); default from ``REPRO_WAL_FSYNC_EVERY``.
     """
 
-    def __init__(self, *, backend: Optional[str] = None, mesh=None):
+    def __init__(self, *, backend: Optional[str] = None, mesh=None,
+                 wal_dir: Optional[str] = None,
+                 fsync_every: Optional[int] = None):
         self._servables: Dict[str, Servable] = {}
         self._backend = backend
         self._mesh = mesh
+        self._wal_dir = wal_dir
+        self._fsync_every = fsync_every
         self._lock = threading.Lock()
+
+    def _wal_path(self, name: str) -> Optional[str]:
+        return (os.path.join(self._wal_dir, f"{name}.wal")
+                if self._wal_dir else None)
 
     def register(self, spec: ServableSpec) -> Servable:
         with self._lock:
-            if spec.name in self._servables:
-                raise ValueError(f"servable {spec.name!r} already registered")
-            sv = Servable(spec, backend=self._backend, mesh=self._mesh)
-            self._servables[spec.name] = sv
+            sv = self._register(spec)
+            wpath = self._wal_path(spec.name)
+            if wpath is not None:
+                # a fresh tenant's log starts with its spec, so WAL-only
+                # recovery (no snapshot yet) can rebuild the endpoint
+                wal = walmod.WriteAheadLog(wpath,
+                                           fsync_every=self._fsync_every)
+                wal.append(walmod.encode_register(
+                    dataclasses.asdict(spec)))
+                wal.sync()
+                sv.index.attach_wal(wal)
             return sv
+
+    def _register(self, spec: ServableSpec) -> Servable:
+        """Build + record the servable (callers hold the lock; no WAL)."""
+        if spec.name in self._servables:
+            raise ValueError(f"servable {spec.name!r} already registered")
+        sv = Servable(spec, backend=self._backend, mesh=self._mesh)
+        self._servables[spec.name] = sv
+        return sv
 
     def get(self, name: str) -> Servable:
         try:
@@ -298,9 +337,20 @@ class ServableRegistry:
     # -- persistence --------------------------------------------------------
 
     def snapshot(self, root: str, step: int = 0, keep: int = 3) -> str:
-        """Atomic per-tenant checkpoints under ``root/<name>/step_*``."""
+        """Atomic per-tenant checkpoints under ``root/<name>/step_*``.
+
+        WAL-backed tenants additionally fsync their log and record the
+        durable byte offset (``wal_offset``) in the manifest -- the point
+        ``recover`` replays the tail from.  The offset is captured under
+        the same index lock as the array payload, so snapshot + tail is
+        exactly one consistent history.
+        """
         for name, sv in self._servables.items():
             idx = sv.index
+            # per-tenant crash point: a kill here leaves some tenants
+            # snapshotted at `step` and others not -- recovery must replay
+            # a longer WAL tail for the others, and does
+            faults.fire("snapshot")
             # capture under the index lock so the array payload and the
             # host-side counters describe the same instant (a concurrent
             # insert must not land between them)
@@ -318,13 +368,17 @@ class ServableRegistry:
                     # may be a different size -- elastic re-mesh)
                     "shard_layout": idx.shard_layout(),
                 }
+                if idx.wal is not None:
+                    idx.wal.sync()
+                    extra["wal_offset"] = idx.wal.offset
             ckpt.save(os.path.join(root, name), step, tree, keep=keep,
                       extra=extra)
         return root
 
     def restore(self, root: str, step: Optional[int] = None) -> List[str]:
         """Load every tenant checkpoint under ``root`` into this registry.
-        Returns the restored names."""
+        Returns the restored names.  (Snapshot-only; ``recover`` is the
+        crash path that also replays the WAL tail.)"""
         restored = []
         for name in sorted(os.listdir(root)):
             tdir = os.path.join(root, name)
@@ -333,51 +387,154 @@ class ServableRegistry:
             s = ckpt.latest_step(tdir) if step is None else step
             if s is None:
                 continue
-            extra = ckpt.load_extra(tdir, s)
-            spec = _spec_from_manifest(extra["spec"])
-            sv = self.register(spec)
-            idx = sv.index
-            cfg = spec.index_config()
-            cap = spec.segment_capacity
-            lk = spec.n_tables * spec.n_hashes
-            seg_meta = extra["segments"]
-            seg_struct = {
-                "state": LSHIndexState(
-                    alpha=jax.ShapeDtypeStruct((spec.n_dims, lk), jnp.float32),
-                    b=jax.ShapeDtypeStruct((lk,), jnp.float32),
-                    mix=jax.ShapeDtypeStruct((spec.n_tables, spec.n_hashes),
-                                             jnp.uint32),
-                    table=jax.ShapeDtypeStruct(
-                        (spec.n_tables, cfg.n_buckets, spec.bucket_capacity),
-                        jnp.int32),
-                    counts=jax.ShapeDtypeStruct(
-                        (spec.n_tables, cfg.n_buckets), jnp.int32),
-                    db=jax.ShapeDtypeStruct((cap, spec.n_dims), jnp.float32)),
-                "gids": jax.ShapeDtypeStruct((cap,), jnp.int32),
-                "live": jax.ShapeDtypeStruct((cap,), jnp.bool_),
-            }
-            target = {"segments": [seg_struct for _ in seg_meta]}
-            tree = ckpt.restore(tdir, s, target)
-            idx.segments = []
-            idx._locator = {}
-            for si, (payload, meta) in enumerate(zip(tree["segments"],
-                                                     seg_meta)):
-                seg = Segment(state=payload["state"], gids=payload["gids"],
-                              live=payload["live"], n_items=meta["n_items"],
-                              n_live=meta["n_live"], sealed=meta["sealed"])
-                idx.segments.append(seg)
-                g = np.asarray(seg.gids)[:seg.n_items]
-                for slot, gid in enumerate(g.tolist()):
-                    idx._locator[int(gid)] = (si, slot)
-            idx.family = (idx.segments[0].state.alpha,
-                          idx.segments[0].state.b,
-                          idx.segments[0].state.mix)
-            idx._next_gid = extra["next_gid"]
-            # segments were swapped in under the register()-time placement:
-            # bump both versions so a sharded tenant fully re-snapshots its
-            # device placement (possibly onto a different-size mesh) on the
-            # next query
-            idx._version += 1
-            idx._sealed_version += 1
+            self._restore_tenant(tdir, s)
             restored.append(name)
         return restored
+
+    def _restore_tenant(self, tdir: str, s: int) -> Servable:
+        """Rebuild one tenant from checkpoint step ``s`` (integrity-checked;
+        raises CheckpointCorruptError on damage).  Returns the servable."""
+        extra = ckpt.load_extra(tdir, s)
+        spec = _spec_from_manifest(extra["spec"])
+        with self._lock:
+            sv = self._register(spec)
+        idx = sv.index
+        cfg = spec.index_config()
+        cap = spec.segment_capacity
+        lk = spec.n_tables * spec.n_hashes
+        seg_meta = extra["segments"]
+        seg_struct = {
+            "state": LSHIndexState(
+                alpha=jax.ShapeDtypeStruct((spec.n_dims, lk), jnp.float32),
+                b=jax.ShapeDtypeStruct((lk,), jnp.float32),
+                mix=jax.ShapeDtypeStruct((spec.n_tables, spec.n_hashes),
+                                         jnp.uint32),
+                table=jax.ShapeDtypeStruct(
+                    (spec.n_tables, cfg.n_buckets, spec.bucket_capacity),
+                    jnp.int32),
+                counts=jax.ShapeDtypeStruct(
+                    (spec.n_tables, cfg.n_buckets), jnp.int32),
+                db=jax.ShapeDtypeStruct((cap, spec.n_dims), jnp.float32)),
+            "gids": jax.ShapeDtypeStruct((cap,), jnp.int32),
+            "live": jax.ShapeDtypeStruct((cap,), jnp.bool_),
+        }
+        target = {"segments": [seg_struct for _ in seg_meta]}
+        try:
+            tree = ckpt.restore(tdir, s, target)
+        except ckpt.CheckpointCorruptError:
+            # the half-built tenant must not shadow a retry on an older step
+            with self._lock:
+                self._servables.pop(spec.name, None)
+            sv.batcher.stop()
+            raise
+        idx.segments = []
+        idx._locator = {}
+        for si, (payload, meta) in enumerate(zip(tree["segments"],
+                                                 seg_meta)):
+            seg = Segment(state=payload["state"], gids=payload["gids"],
+                          live=payload["live"], n_items=meta["n_items"],
+                          n_live=meta["n_live"], sealed=meta["sealed"])
+            idx.segments.append(seg)
+            g = np.asarray(seg.gids)[:seg.n_items]
+            for slot, gid in enumerate(g.tolist()):
+                idx._locator[int(gid)] = (si, slot)
+        idx.family = (idx.segments[0].state.alpha,
+                      idx.segments[0].state.b,
+                      idx.segments[0].state.mix)
+        idx._next_gid = extra["next_gid"]
+        # segments were swapped in under the register()-time placement:
+        # bump both versions so a sharded tenant fully re-snapshots its
+        # device placement (possibly onto a different-size mesh) on the
+        # next query
+        idx._version += 1
+        idx._sealed_version += 1
+        return sv
+
+    def recover(self, ckpt_root: Optional[str] = None,
+                wal_dir: Optional[str] = None,
+                replay_from: str = "offset") -> Dict[str, dict]:
+        """Crash recovery: latest verifiable snapshot + WAL-tail replay.
+
+        For every tenant found under ``ckpt_root`` (checkpoint subdirs)
+        and/or ``wal_dir`` (``<name>.wal`` logs):
+
+        1. restore the newest checkpoint step that passes its integrity
+           checks -- a corrupt step (``CheckpointCorruptError``) is
+           reported and the next older step is tried (``checkpoint._gc``
+           guarantees at least one verifiable step survives GC);
+        2. a tenant with a WAL but no usable snapshot is rebuilt from the
+           log's leading REGISTER record and replayed from byte 0;
+        3. replay the WAL from the snapshot's durable ``wal_offset``
+           (``replay_from="offset"``) or from the beginning
+           (``replay_from="start"`` -- correct either way: replayed
+           inserts drop idempotently by gid, deletes/seals/compacts are
+           naturally idempotent);
+        4. reattach the WAL for appending, so the recovered process keeps
+           logging to the same file.
+
+        Returns per-tenant reports: the replay report (records applied,
+        duplicates dropped, truncation diagnostics) plus
+        ``restored_step`` / ``corrupt_steps``.  Recovered state answers
+        queries **bit-identically** to an uninterrupted process that
+        performed the same durable operations -- invariant 7, guarded by
+        ``tests/test_crash_recovery.py``.
+        """
+        if replay_from not in ("offset", "start"):
+            raise ValueError(f"replay_from must be 'offset' or 'start', "
+                             f"got {replay_from!r}")
+        wal_dir = wal_dir if wal_dir is not None else self._wal_dir
+        names = set()
+        if ckpt_root and os.path.isdir(ckpt_root):
+            names.update(n for n in os.listdir(ckpt_root)
+                         if os.path.isdir(os.path.join(ckpt_root, n)))
+        if wal_dir and os.path.isdir(wal_dir):
+            names.update(n[:-len(".wal")] for n in os.listdir(wal_dir)
+                         if n.endswith(".wal"))
+        reports: Dict[str, dict] = {}
+        for name in sorted(names):
+            report: dict = {"restored_step": None, "corrupt_steps": []}
+            sv = None
+            offset = 0
+            tdir = (os.path.join(ckpt_root, name)
+                    if ckpt_root and os.path.isdir(
+                        os.path.join(ckpt_root, name)) else None)
+            if tdir is not None:
+                for s in reversed(ckpt.steps(tdir)):
+                    try:
+                        sv = self._restore_tenant(tdir, s)
+                        extra = ckpt.load_extra(tdir, s)
+                        offset = int(extra.get("wal_offset", 0))
+                        report["restored_step"] = s
+                        break
+                    except ckpt.CheckpointCorruptError as e:
+                        report["corrupt_steps"].append([s, str(e)])
+            wpath = (os.path.join(wal_dir, f"{name}.wal")
+                     if wal_dir else None)
+            has_wal = wpath is not None and os.path.exists(wpath)
+            if sv is None:
+                if not has_wal:
+                    continue               # nothing restorable for it
+                raw = walmod.read_spec(wpath)
+                if raw is None:
+                    report["error"] = "no snapshot and no REGISTER record"
+                    reports[name] = report
+                    continue
+                with self._lock:
+                    sv = self._register(_spec_from_manifest(raw))
+                offset = 0
+            if has_wal:
+                start = 0 if replay_from == "start" else offset
+                rep = sv.index.replay(wpath, start=start)
+                report.update(rep)
+                if rep.get("truncated"):
+                    # drop the torn/corrupt tail before reattaching:
+                    # appends after a bad frame would be invisible to every
+                    # future replay (which stops at the first bad frame)
+                    with open(wpath, "rb+") as f:
+                        f.truncate(rep["end_offset"])
+                    report["truncated_to"] = rep["end_offset"]
+                # keep logging where the crashed process stopped
+                sv.index.attach_wal(walmod.WriteAheadLog(
+                    wpath, fsync_every=self._fsync_every))
+            reports[name] = report
+        return reports

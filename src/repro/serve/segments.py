@@ -62,6 +62,7 @@ from ..core import distributed, index as lidx
 from ..core.index import IndexConfig, LSHIndexState
 from ..kernels import dispatch, ops
 from ..sharding import placement as seg_placement
+from . import faults, wal as walmod
 from .router import QueryRouter
 
 Array = jax.Array
@@ -173,6 +174,13 @@ class SegmentedIndex:
         # distinct query batch shapes seen -- the serve bench asserts this
         # stays bounded by the batcher's chunk palette (no per-request traces)
         self.query_shapes: set = set()
+        # durability: when a WAL is attached every mutation is framed and
+        # appended BEFORE it is applied; _wal_mute suppresses logging for
+        # mutations that are consequences of an already-logged record
+        # (compaction's internal re-inserts, replay itself)
+        self._wal: Optional[walmod.WriteAheadLog] = None
+        self._wal_mute = False
+        self.n_rejected = 0            # rows refused by insert validation
         self._open_segment()
 
     # -- lifecycle ----------------------------------------------------------
@@ -199,14 +207,97 @@ class SegmentedIndex:
         return sum(s.n_items for s in self.segments)
 
     def seal(self) -> None:
-        """Seal the current delta (no-op if empty) and open a fresh one."""
+        """Seal the current delta (no-op if empty) and open a fresh one.
+
+        Logged to the WAL as an explicit SEAL record; the implicit seal
+        that ``insert`` performs when the delta fills is *not* logged --
+        replaying the INSERT record reproduces it.  A replayed SEAL on an
+        emptier-than-original delta only changes segment *structure*, and
+        invariant 3 makes structure invisible to query results.
+        """
         with self._lock:
             if self.delta.n_items == 0:
                 return
-            self.delta.sealed = True
-            self._open_segment()
-            self._version += 1
-            self._sealed_version += 1
+            self._log(walmod.encode_seal())
+            # mid-seal crash point: the SEAL record is durable-framed but
+            # the segment mutation below has not happened yet
+            faults.fire("seal")
+            self._seal()
+
+    def _seal(self) -> None:
+        """Apply a seal (callers hold the lock; never logs)."""
+        if self.delta.n_items == 0:
+            return
+        self.delta.sealed = True
+        self._open_segment()
+        self._version += 1
+        self._sealed_version += 1
+
+    # -- durability ---------------------------------------------------------
+
+    def attach_wal(self, wal: Optional[walmod.WriteAheadLog]) -> None:
+        """Log every subsequent mutation to ``wal`` (None detaches)."""
+        with self._lock:
+            self._wal = wal
+
+    @property
+    def wal(self) -> Optional[walmod.WriteAheadLog]:
+        return self._wal
+
+    def _log(self, payload: bytes) -> None:
+        """Append one framed record (write-ahead: callers log, then apply).
+        Callers hold the lock, so the WAL order is the apply order."""
+        if self._wal is not None and not self._wal_mute:
+            self._wal.append(payload)
+
+    def replay(self, wal_path: str, start: int = 0) -> dict:
+        """Apply the WAL records in ``wal_path`` from byte ``start``.
+
+        The recovery half of the durability contract: duplicate-gid
+        inserts (records already reflected in this index -- replay after a
+        partial apply, or a full-log replay over a restored snapshot) are
+        **dropped idempotently** and counted; deletes/seals/compactions
+        are naturally idempotent.  Replay stops at the first bad frame
+        (truncated tail, crc mismatch) and reports it -- everything before
+        the damage is recovered, nothing after it is guessed at.
+
+        Returns the ``read_wal`` report plus ``applied`` (records applied)
+        and ``dropped_duplicates`` (gids skipped as already present).
+        Never appends to the attached WAL (mutations here re-apply records
+        the log already holds).
+        """
+        records, report = walmod.read_wal(wal_path, start=start)
+        report = dict(report, applied=0, dropped_duplicates=0)
+        with self._lock:
+            self._wal_mute = True
+            try:
+                for rec in records:
+                    if rec.op == walmod.OP_INSERT:
+                        gids = np.asarray(rec.gids, np.int32)
+                        fresh = np.array(
+                            [int(g) not in self._locator for g in
+                             gids.tolist()], bool)
+                        report["dropped_duplicates"] += int(
+                            (~fresh).sum())
+                        if fresh.any():
+                            self.insert(
+                                np.asarray(rec.embeddings,
+                                           np.float32)[fresh],
+                                gids=gids[fresh])
+                    elif rec.op == walmod.OP_DELETE:
+                        self.delete(rec.gids)
+                    elif rec.op == walmod.OP_SEAL:
+                        self._seal()
+                    elif rec.op == walmod.OP_COMPACT:
+                        self.compact()
+                    elif rec.op == walmod.OP_SET_REPLICATION:
+                        self.set_replication(rec.value)
+                    elif rec.op == walmod.OP_REGISTER:
+                        pass               # registry-level; nothing to apply
+                    report["applied"] += 1
+            finally:
+                self._wal_mute = False
+        return report
 
     # -- SPMD placement -----------------------------------------------------
 
@@ -259,6 +350,7 @@ class SegmentedIndex:
         with self._lock:
             if replication is not None and not isinstance(replication, int):
                 replication = tuple(int(f) for f in replication)
+            self._log(walmod.encode_set_replication(replication))
             self._replication = replication
             # force a full placement rebuild: the instance assignment (not
             # just the delta) changed shape
@@ -318,10 +410,26 @@ class SegmentedIndex:
         Splits across segment boundaries automatically; sealing happens when
         the delta fills.  Every device call is a fixed (insert_chunk, N)
         padded program.
+
+        Validation is all-or-nothing: width-mismatched batches and batches
+        containing NaN/Inf rows are rejected with a ``ValueError`` before
+        any row lands (and before anything reaches the WAL) -- silently
+        hashing garbage would poison the segment tables for every later
+        query.  Rejected rows are counted in ``n_rejected`` (surfaced per
+        tenant via ``ServingStats``).
         """
         emb = np.asarray(embeddings, np.float32)
         if emb.ndim != 2 or emb.shape[1] != self.cfg.n_dims:
-            raise ValueError(f"expected (m, {self.cfg.n_dims}), got {emb.shape}")
+            self.n_rejected += emb.shape[0] if emb.ndim == 2 else 1
+            raise ValueError(
+                f"expected embeddings of shape (m, {self.cfg.n_dims}), "
+                f"got {emb.shape}")
+        if not np.isfinite(emb).all():
+            bad = int((~np.isfinite(emb).all(axis=1)).sum())
+            self.n_rejected += emb.shape[0]
+            raise ValueError(
+                f"embeddings contain NaN/Inf in {bad} of {emb.shape[0]} "
+                f"rows; rejecting the batch (nothing was inserted)")
         m = emb.shape[0]
         with self._lock:
             # gid allocation + uniqueness checks must sit inside the lock or
@@ -343,13 +451,20 @@ class SegmentedIndex:
                     raise ValueError(f"gids already present: {dup[:5]}")
             self._next_gid = max(self._next_gid, int(out_gids.max()) + 1 if m else
                                  self._next_gid)
+            # write-ahead: the record (with resolved gids) hits the log
+            # before the first row hits a segment, so a crash mid-apply
+            # replays to the same end state (duplicates drop by gid)
+            if m:
+                self._log(walmod.encode_insert(out_gids, emb))
             ins = _segment_insert_fn(self.cfg, self.insert_chunk)
             pos = 0
             while pos < m:
                 seg = self.delta
                 room = seg.capacity - seg.n_items
                 if room == 0:
-                    self.seal()
+                    # implicit seal: not logged -- replaying the INSERT
+                    # record reproduces it at the same fill point
+                    self._seal()
                     continue
                 take = min(m - pos, room, self.insert_chunk)
                 chunk = np.zeros((self.insert_chunk, self.cfg.n_dims),
@@ -373,8 +488,14 @@ class SegmentedIndex:
     def delete(self, gids: Sequence[int]) -> int:
         """Tombstone items by global id; returns how many were live."""
         with self._lock:
+            req = np.asarray(gids).ravel().astype(np.int32)
+            if req.size:
+                # logged as requested (not as applied): deletes are
+                # idempotent, so replaying a delete of already-dead or
+                # unknown gids is a no-op
+                self._log(walmod.encode_delete(req))
             by_seg: dict = {}
-            for g in np.asarray(gids).ravel().tolist():
+            for g in req.tolist():
                 loc = self._locator.get(int(g))
                 if loc is None:
                     continue
@@ -426,6 +547,7 @@ class SegmentedIndex:
         bucket-overflow shadows are dropped; gids are preserved).  Returns
         the number of segments after compaction."""
         with self._lock:
+            self._log(walmod.encode_compact())
             emb, gid = self.live_items()
             self.segments = []
             self._locator = {}
@@ -434,7 +556,13 @@ class SegmentedIndex:
             self._sealed_version += 1
             if len(gid):
                 order = np.argsort(gid, kind="stable")   # insertion order
-                self.insert(emb[order], gids=gid[order])
+                # the rebuild is a *consequence* of the COMPACT record:
+                # its internal inserts must not re-enter the WAL
+                prev_mute, self._wal_mute = self._wal_mute, True
+                try:
+                    self.insert(emb[order], gids=gid[order])
+                finally:
+                    self._wal_mute = prev_mute
             return len(self.segments)
 
     # -- query --------------------------------------------------------------

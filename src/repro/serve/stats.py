@@ -57,7 +57,8 @@ class ServingStats:
         self._deletes: deque = deque()
         self._lat = np.zeros((reservoir,), np.float64)
         self._lat_n = 0                       # total recorded (ring index)
-        self.totals = {"queries": 0, "inserts": 0, "deletes": 0, "batches": 0}
+        self.totals = {"queries": 0, "inserts": 0, "deletes": 0, "batches": 0,
+                       "rejected_inserts": 0}
         # fan-out load balance (see module docstring): positional counters
         self._seg_wins = np.zeros((0,), np.int64)
         self._seg_cands = np.zeros((0,), np.int64)
@@ -91,6 +92,13 @@ class ServingStats:
             self._inserts.append((now, n))
             self._trim(self._inserts, now)
             self.totals["inserts"] += n
+
+    def record_rejected(self, n: int) -> None:
+        """Count ``n`` rows refused by insert validation (NaN/Inf or shape
+        mismatch) -- rejected garbage is an operator signal, not a silent
+        drop."""
+        with self._lock:
+            self.totals["rejected_inserts"] += n
 
     def record_delete(self, n: int) -> None:
         now = self.clock()

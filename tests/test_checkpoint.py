@@ -73,6 +73,8 @@ def test_registry_restore_tolerates_unknown_spec_keys(tmp_path):
         manifest = json.load(f)
     manifest["extra"]["spec"]["future_knob"] = {"nested": True}
     manifest["extra"]["totally_new_section"] = [1, 2]
+    # a newer build writes a *valid* checksum over its richer manifest
+    manifest["manifest_crc32"] = ckpt._manifest_crc(manifest)
     with open(mpath, "w") as f:
         json.dump(manifest, f)
 
@@ -117,3 +119,124 @@ def test_restore_missing_key_still_raises(tmp_path):
     with pytest.raises(KeyError, match="missing key"):
         ckpt.restore(str(tmp_path), 1, {"w": _tree()["w"],
                                         "extra_leaf": jnp.zeros((2,))})
+
+
+# ---------------------------------------------------------------------------
+# durability hardening: atomicity, checksums, GC, async
+# ---------------------------------------------------------------------------
+
+
+def _corrupt(path, delta=1):
+    with open(path, "rb+") as f:
+        f.seek(os.path.getsize(path) // 2)
+        b = f.read(1)
+        f.seek(-1, os.SEEK_CUR)
+        f.write(bytes([b[0] ^ (0xFF if delta else 0)]))
+
+
+def test_partial_save_invisible_to_latest_step(tmp_path):
+    """A crashed save -- stale tmp dir, or a step dir with a missing or
+    mangled manifest -- must not be offered as the latest checkpoint."""
+    ckpt.save(str(tmp_path), 1, _tree())
+    os.makedirs(tmp_path / "tmp-5")                 # crashed mid-write
+    os.makedirs(tmp_path / f"step_{7:010d}")        # no manifest at all
+    mangled = tmp_path / f"step_{9:010d}"
+    os.makedirs(mangled)
+    (mangled / "manifest.json").write_text("{not json")
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    assert ckpt.steps(str(tmp_path)) == [1, 7, 9]   # steps() is raw listing
+
+
+def test_corrupt_array_raises_naming_file(tmp_path):
+    ckpt.save(str(tmp_path), 1, _tree())
+    npz = os.path.join(tmp_path, f"step_{1:010d}", "arrays.npz")
+    _corrupt(npz)
+    with pytest.raises(ckpt.CheckpointCorruptError) as ei:
+        ckpt.restore(str(tmp_path), 1, _tree())
+    assert npz in str(ei.value)
+    assert ei.value.path == npz
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.verify(str(tmp_path), 1)
+
+
+def test_corrupt_manifest_raises_naming_file(tmp_path):
+    ckpt.save(str(tmp_path), 2, _tree())
+    mpath = os.path.join(tmp_path, f"step_{2:010d}", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["keys"]["w"]["shape"] = [999, 999]     # tamper -> crc mismatch
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ckpt.CheckpointCorruptError, match="crc"):
+        ckpt.load_extra(str(tmp_path), 2)
+    assert ckpt.latest_step(str(tmp_path)) is None  # nothing verifiable
+
+
+def test_pre_checksum_checkpoints_still_load(tmp_path):
+    """Checkpoints written before the checksum era (no crc fields) load:
+    there is nothing to verify against, not a corruption."""
+    ckpt.save(str(tmp_path), 1, _tree())
+    mpath = os.path.join(tmp_path, f"step_{1:010d}", "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest.pop("manifest_crc32")
+    for meta in manifest["keys"].values():
+        meta.pop("crc32")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    out = ckpt.restore(str(tmp_path), 1, _tree())
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(_tree()["w"]))
+
+
+def test_gc_keeps_last_k_in_order(tmp_path):
+    for s in range(1, 7):
+        ckpt.save(str(tmp_path), s, _tree(), keep=3)
+    assert ckpt.steps(str(tmp_path)) == [4, 5, 6]
+    assert ckpt.latest_step(str(tmp_path)) == 6
+
+
+def test_gc_never_deletes_last_verifiable(tmp_path):
+    """If every kept step is damaged, the newest older verifiable step must
+    survive the sweep -- GC must not turn 'some checkpoints are damaged'
+    into 'nothing on disk restores'."""
+    for s in (1, 2, 3):
+        ckpt.save(str(tmp_path), s, _tree(), keep=10)
+    for s in (2, 3):
+        (tmp_path / f"step_{s:010d}" / "manifest.json").write_text("{broken")
+    ckpt.save(str(tmp_path), 4, _tree(), keep=10)
+    (tmp_path / f"step_{4:010d}" / "manifest.json").write_text("{broken")
+    ckpt._gc(str(tmp_path), keep=2)                 # kept window = {3, 4}
+    assert 1 in ckpt.steps(str(tmp_path))           # last verifiable kept
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    out = ckpt.restore(str(tmp_path), 1, _tree())
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(_tree()["w"]))
+
+
+def test_save_async_wait_semantics(tmp_path):
+    """save_async snapshots to host immediately; wait() blocks until the
+    write landed; a second save_async joins the first (no interleaving)."""
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    ckpt.save_async(str(tmp_path), 1, tree, extra={"tag": "a"})
+    ckpt.save_async(str(tmp_path), 2, tree, extra={"tag": "b"})
+    ckpt.wait()
+    ckpt.wait()                                     # idempotent
+    assert ckpt.steps(str(tmp_path)) == [1, 2]
+    assert ckpt.load_extra(str(tmp_path), 1) == {"tag": "a"}
+    assert ckpt.load_extra(str(tmp_path), 2) == {"tag": "b"}
+    for s in (1, 2):
+        ckpt.verify(str(tmp_path), s)
+        out = ckpt.restore(str(tmp_path), s, tree)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(tree["w"]))
+
+
+def test_resave_same_step_never_leaves_gap(tmp_path):
+    """Re-saving an existing step goes through the aside-dance: afterwards
+    exactly the new payload is at the step, nothing stale around it."""
+    ckpt.save(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+    ckpt.save(str(tmp_path), 1, {"w": jnp.ones((4,))})
+    assert sorted(os.listdir(tmp_path)) == [f"step_{1:010d}"]
+    out = ckpt.restore(str(tmp_path), 1, {"w": jnp.zeros((4,))})
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.ones((4,)))

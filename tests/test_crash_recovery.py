@@ -1,0 +1,192 @@
+"""kill -9 crash/recovery: the durability contract under real SIGKILL.
+
+Each case runs a deterministic two-tenant workload (p=2 basis + p=1 qmc --
+both halves of the paper's p-stable family) in a **crash subprocess** with
+a seeded :class:`repro.serve.faults.FaultPlan` that SIGKILLs the process at
+a chosen write-path event -- mid-WAL-append (torn frame on disk), around
+the group-commit fsync, mid-checkpoint-rename, mid-seal.  The parent
+asserts the subprocess really died with SIGKILL, then runs a **recovery
+subprocess** that:
+
+* recovers via ``ServableRegistry.recover`` (latest verifiable snapshot +
+  WAL-tail replay);
+* rebuilds a *reference* registry by replaying each tenant's full durable
+  WAL prefix onto a fresh index -- which IS the uninterrupted run over the
+  durable operations, wherever the kill landed;
+* asserts query results are **bit-identical** (ids and distances), both
+  unsharded and sharded over an 8-device host mesh (invariant 7 composed
+  with invariant 5);
+* replays the WAL a second time onto the recovered index and asserts the
+  duplicates drop idempotently with results unchanged.
+
+A final case crashes a process that was *serving sharded* on 8 devices
+while writing the WAL, covering the write path under SPMD placement.
+"""
+
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _env(n_devices=1):
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count"
+                        f"={n_devices}")
+    return env
+
+
+def _run(code: str, n_devices=1, timeout=560):
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=_env(n_devices))
+
+
+# The deterministic workload both subprocesses agree on.  12 steps of
+# insert/delete/explicit-seal churn across two tenants, one snapshot
+# mid-way -- enough traffic that every fault site fires several times.
+_WORKLOAD = """
+    import numpy as np
+    from repro.serve import ServableRegistry, ServableSpec
+
+    def build_registry(wal_dir, fsync_every=2, mesh=None, shard=False):
+        reg = ServableRegistry(wal_dir=wal_dir, fsync_every=fsync_every,
+                               mesh=mesh)
+        for name, p, emb in (("p2", 2.0, "basis"), ("p1", 1.0, "qmc")):
+            reg.register(ServableSpec(
+                name=name, n_dims=16, p=p, r=2.0, embedder=emb,
+                log2_buckets=8, bucket_capacity=64, segment_capacity=64,
+                insert_chunk=32, chunk_sizes=(8, 32),
+                shard_axis="serve" if shard else None))
+        return reg
+
+    def run_workload(reg, ckpt_dir):
+        rng = np.random.default_rng(0)
+        for step in range(12):
+            for name in ("p2", "p1"):
+                sv = reg.get(name)
+                g = sv.insert(rng.normal(size=(20, 16)).astype(np.float32))
+                if step % 3 == 2:
+                    sv.delete(g[:5])
+                if step % 4 == 3:
+                    sv.index.seal()
+            if step == 5:
+                reg.snapshot(ckpt_dir, step=1)
+
+    def queries():
+        return (np.random.default_rng(1).normal(size=(9, 16)) *
+                0.9).astype(np.float32)
+"""
+
+_CRASH = _WORKLOAD + """
+    import sys
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serve import faults
+
+    faults.install(faults.FaultPlan(
+        faults.FaultSpec({site!r}, nth={nth}, action="kill")))
+    reg = build_registry({wal!r}{extra})
+    run_workload(reg, {ckpt!r})
+    print("SURVIVED")          # reached only if the fault never fired
+    sys.exit(3)
+"""
+
+_RECOVER = _WORKLOAD + """
+    import os
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serve.registry import _spec_from_manifest
+    from repro.serve.wal import read_spec
+
+    WAL, CKPT = {wal!r}, {ckpt!r}
+    reg = ServableRegistry()
+    reports = reg.recover(ckpt_root=CKPT, wal_dir=WAL)
+    assert sorted(reports) == ["p1", "p2"], reports
+
+    # reference = the uninterrupted run over the durable operations:
+    # a fresh index fed the full verifiable WAL prefix
+    ref = ServableRegistry()
+    for name in ("p1", "p2"):
+        wpath = os.path.join(WAL, name + ".wal")
+        sv = ref.register(_spec_from_manifest(read_spec(wpath)))
+        sv.index.replay(wpath)
+
+    qs = queries()
+    want = {{}}
+    for name in ("p1", "p2"):
+        wi, wd = ref.get(name).index.query(qs, 10, n_probes=4)
+        want[name] = (np.asarray(wi), np.asarray(wd))
+        gi, gd = reg.get(name).index.query(qs, 10, n_probes=4)
+        assert np.array_equal(np.asarray(gi), want[name][0]), name
+        assert np.array_equal(np.asarray(gd), want[name][1]), name
+
+    # replaying the log a second time must drop every insert as a
+    # duplicate and leave results unchanged
+    for name in ("p1", "p2"):
+        rep2 = reg.get(name).index.replay(os.path.join(WAL, name + ".wal"))
+        assert rep2["dropped_duplicates"] > 0, rep2
+        gi, gd = reg.get(name).index.query(qs, 10, n_probes=4)
+        assert np.array_equal(np.asarray(gi), want[name][0]), name
+        assert np.array_equal(np.asarray(gd), want[name][1]), name
+
+    # sharded parity: the recovered tenants served SPMD over 8 devices
+    # must answer the same bits (invariant 7 composed with invariant 5)
+    mesh = make_serve_mesh(8)
+    for name in ("p1", "p2"):
+        reg.get(name).index.shard(mesh)
+        gi, gd = reg.get(name).index.query(qs, 10, n_probes=4)
+        assert np.array_equal(np.asarray(gi), want[name][0]), name
+        assert np.array_equal(np.asarray(gd), want[name][1]), name
+
+    print("PARITY_OK", {{n: (reports[n].get("restored_step"),
+                             reports[n].get("applied"),
+                             reports[n].get("truncated"))
+                         for n in sorted(reports)}})
+"""
+
+
+def _crash_then_recover(tmp_path, site, nth, crash_devices=1,
+                        crash_extra=""):
+    wal_dir = str(tmp_path / "wal")
+    ckpt_dir = str(tmp_path / "ckpt")
+    crash = _run(_CRASH.format(site=site, nth=nth, wal=wal_dir,
+                               ckpt=ckpt_dir, extra=crash_extra),
+                 n_devices=crash_devices)
+    assert crash.returncode == -signal.SIGKILL, (
+        f"expected SIGKILL at {site}#{nth}, got rc={crash.returncode}\n"
+        f"stdout: {crash.stdout[-1500:]}\nstderr: {crash.stderr[-1500:]}")
+    assert "SURVIVED" not in crash.stdout
+
+    rec = _run(_RECOVER.format(wal=wal_dir, ckpt=ckpt_dir), n_devices=8)
+    assert rec.returncode == 0, (
+        f"recovery after {site}#{nth} failed\n"
+        f"stdout: {rec.stdout[-1500:]}\nstderr: {rec.stderr[-3000:]}")
+    assert "PARITY_OK" in rec.stdout
+    return rec.stdout
+
+
+# the >= 5 distinct crash points the durability contract is tested at:
+# mid-append (torn frame), pre-fsync, post-fsync, mid-snapshot-rename
+# (second tenant: asymmetric -- one tenant snapshotted, one not),
+# mid-seal (SEAL framed, mutation not applied)
+_SITES = [("wal.append", 9), ("wal.fsync", 4), ("wal.fsynced", 4),
+          ("ckpt.rename", 2), ("seal", 2)]
+
+
+@pytest.mark.parametrize("site,nth", _SITES,
+                         ids=[s for s, _ in _SITES])
+def test_kill9_recovery_bit_identical(tmp_path, site, nth):
+    _crash_then_recover(tmp_path, site, nth)
+
+
+def test_kill9_while_serving_sharded(tmp_path):
+    """The crashing process itself serves SPMD on 8 devices (WAL written
+    under sharded placement); recovery parity still holds."""
+    _crash_then_recover(
+        tmp_path, "wal.append", 12, crash_devices=8,
+        crash_extra=", mesh=make_serve_mesh(8), shard=True")

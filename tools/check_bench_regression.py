@@ -19,7 +19,11 @@ What is gated, per benchmark section:
   ``WALL_SLACK`` seconds -- deliberately generous, because CI runners and
   laptops differ far more than real regressions do; this catches
   order-of-magnitude blowups (an accidental O(n^2), a kernel falling off
-  its compiled path), not percent-level noise.
+  its compiled path), not percent-level noise;
+* every ``recovery_s*`` metric (crash-recovery wall-clock from
+  ``bench_ingest_durability``) is gated like ``wall_s`` but with a tighter
+  ``RECOVERY_SLACK`` -- recovery time is a product property (how long a
+  crashed serving process stays dark), not just harness overhead.
 
 Metrics outside those families (throughputs, imbalance numbers, raw
 timings) are never gated and are omitted from the delta table -- keeping
@@ -46,6 +50,7 @@ import sys
 RECALL_TOL = 0.02      # absolute recall drop absorbed as jitter
 WALL_RATIO = 4.0       # current wall_s may be up to 4x baseline ...
 WALL_SLACK = 20.0      # ... plus 20s flat (compile-cache cold starts)
+RECOVERY_SLACK = 5.0   # recovery_s_* gets the 4x ratio but only 5s flat
 
 GATED_NOTE = {"ok": "", "FAIL": "  <-- gate", "NEW": "  (not in baseline)"}
 
@@ -87,7 +92,7 @@ def compare(current: dict, baseline: dict):
             if key in ("git_sha", "us_total"):
                 continue
             gated = (("recall" in key) or ("parity" in key)
-                     or key == "wall_s")
+                     or key == "wall_s" or key.startswith("recovery_s"))
             if cv is None:
                 # a *gated* metric vanishing is itself a regression: a
                 # renamed parity flag must not silently stop being checked
@@ -110,14 +115,15 @@ def compare(current: dict, baseline: dict):
                     status = "FAIL"
                     failures.append(f"{name}/{key}: parity was true in "
                                     f"baseline, now {cv!r}")
-            elif key == "wall_s":
-                limit = bv * WALL_RATIO + WALL_SLACK
+            elif key == "wall_s" or key.startswith("recovery_s"):
+                slack = WALL_SLACK if key == "wall_s" else RECOVERY_SLACK
+                limit = bv * WALL_RATIO + slack
                 if cv > limit:
                     status = "FAIL"
                     failures.append(
                         f"{name}/{key}: {cv:.1f}s exceeds the generous "
                         f"limit {limit:.1f}s ({WALL_RATIO}x baseline "
-                        f"{bv:.1f}s + {WALL_SLACK}s)")
+                        f"{bv:.1f}s + {slack}s)")
             else:
                 continue        # informational metric: not gated
             rows.append((name, key, _fmt(bv), _fmt(cv), status))

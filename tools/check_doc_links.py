@@ -1,11 +1,17 @@
 #!/usr/bin/env python
-"""Fail on broken intra-repo links in the Markdown docs.
+"""Fail on broken intra-repo links and stale env-knob names in the docs.
 
 Scans every ``*.md`` under the repo root (skipping dot-dirs and
 ``experiments/``) for inline links/images ``[text](target)`` and verifies
 each *relative* target resolves to an existing file or directory.  External
 schemes (http/https/mailto) and pure ``#anchor`` links are ignored; a
 ``path#anchor`` target is checked for the path part only.
+
+Additionally, every ``REPRO_*`` environment knob the Markdown docs mention
+must correspond to a string literal in the Python tree (``src/``,
+``benchmarks/``, ``tools/`` -- i.e. a grep-able ``os.environ`` read) -- a
+documented knob nobody reads is exactly the kind of rot this check exists
+for.
 
 CI runs this in the docs job so README/docs can't rot silently:
 
@@ -56,6 +62,42 @@ def check_file(path: str, root: str):
     return broken, n_links
 
 
+_KNOB_RE = re.compile(r"\bREPRO_[A-Z0-9_]+\b")
+_CODE_DIRS = ("src", "benchmarks", "tools")
+
+
+def knobs_in_code(root: str) -> set:
+    """Every REPRO_* string literal in the Python tree (the set of knobs
+    some ``os.environ`` read actually consults)."""
+    found = set()
+    for sub in _CODE_DIRS:
+        top = os.path.join(root, sub)
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+            for name in filenames:
+                if not name.endswith(".py"):
+                    continue
+                with open(os.path.join(dirpath, name),
+                          encoding="utf-8") as f:
+                    found.update(_KNOB_RE.findall(f.read()))
+    return found
+
+
+def check_env_knobs(root: str):
+    """-> (stale [(relpath, lineno, knob)], n_knob_mentions_checked)."""
+    known = knobs_in_code(root)
+    stale, n_mentions = [], 0
+    for md in iter_markdown(root):
+        with open(md, encoding="utf-8") as f:
+            for lineno, line in enumerate(f, 1):
+                for knob in _KNOB_RE.findall(line):
+                    n_mentions += 1
+                    if knob not in known:
+                        stale.append((os.path.relpath(md, root), lineno,
+                                      knob))
+    return stale, n_mentions
+
+
 def main(argv=None) -> int:
     root = os.path.abspath(
         (argv or sys.argv[1:] or [os.path.join(os.path.dirname(
@@ -68,9 +110,14 @@ def main(argv=None) -> int:
         n_links += file_links
     for path, lineno, target in broken:
         print(f"BROKEN {path}:{lineno}: {target}")
-    print(f"# checked {n_files} markdown files, {n_links} intra-repo links, "
-          f"{len(broken)} broken")
-    return 1 if broken else 0
+    stale, n_knobs = check_env_knobs(root)
+    for path, lineno, knob in stale:
+        print(f"STALE-KNOB {path}:{lineno}: {knob} is documented but no "
+              f"code under {'/'.join(_CODE_DIRS)} reads it")
+    print(f"# checked {n_files} markdown files, {n_links} intra-repo links "
+          f"({len(broken)} broken), {n_knobs} env-knob mentions "
+          f"({len(stale)} stale)")
+    return 1 if broken or stale else 0
 
 
 if __name__ == "__main__":
