@@ -18,6 +18,13 @@ Two experiments, reported into BENCH_results.json:
    (higher device efficiency) at higher admission latency -- the curve makes
    the trade-off visible per PR.
 
+3. **Tracing overhead** -- batched queries timed in adjacent
+   off/on/deep triples; ``trace_overhead_frac`` (the median per-pair
+   cost of full-rate coarse tracing) is gated absolutely at 5% by
+   ``tools/check_bench_regression.py`` (docs/architecture.md, invariant
+   8).  Deep (staged-engine) tracing is measured too but only reported --
+   it is a profiling mode, not a production path.
+
 REPRO_BENCH_SMOKE=1 shrinks both sweeps for CI.
 """
 
@@ -28,6 +35,7 @@ import time
 import numpy as np
 
 from repro.core.index import IndexConfig
+from repro.obs import trace as obs_trace
 from repro.serve.batcher import MicroBatcher
 from repro.serve.segments import SegmentedIndex
 from repro.serve.stats import occupancy_report, recall_proxy
@@ -152,6 +160,71 @@ def _batcher_curve(rng, n_requests: int, segment_capacity: int) -> dict:
     return out
 
 
+def _trace_overhead(rng, segment_capacity: int, smoke: bool) -> dict:
+    """Query cost with tracing off / full coarse / full deep.
+
+    The dial under test is exactly the production one:
+    ``obs.trace.configure``.  The bench host drifts 15-25% across
+    multi-second phases (thermal, noisy CI neighbours), which is an
+    order of magnitude larger than the effect being measured, so plain
+    A-then-B throughput timing flakes the gate no matter how long the
+    windows are.  Instead each *single* batched query is timed in an
+    adjacent off/on/deep triple -- drift phases are long, so both sides
+    of a pair see the same machine -- and the gated number is the
+    **median of per-pair ratios**, which additionally discards the
+    occasional scheduler stall.  Batches are the palette's largest chunk
+    (throughput-shaped traffic): tracing cost is per-span, not per-row,
+    so this is the fraction a saturated server actually pays.
+
+    ``qps_trace_*`` are informational aggregates over the same pairs;
+    the gated ``trace_overhead_frac`` is the paired median, which is why
+    it can differ slightly from ``1 - qps_on/qps_off``.
+    """
+    idx = _fresh_index(segment_capacity)
+    idx.insert(rng.normal(size=(segment_capacity, N_DIMS)))
+    qs = rng.normal(size=(CHUNK_SIZES[-1], N_DIMS)).astype(np.float32)
+    n_pairs = 60 if smoke else 150
+    batcher = MicroBatcher(
+        lambda q, k, npb: tuple(map(np.asarray,
+                                    idx.query(q, k, n_probes=npb))),
+        chunk_sizes=CHUNK_SIZES, max_delay_ms=2.0)
+    modes = (("off", 0.0, False), ("on", 1.0, False), ("deep", 1.0, True))
+
+    def one(rate: float, deep: bool) -> float:
+        obs_trace.configure(sample_rate=rate, deep=deep)
+        try:
+            t0 = time.perf_counter()
+            batcher.query(qs, K, N_PROBES)
+            return time.perf_counter() - t0
+        finally:
+            obs_trace.configure(sample_rate=0.0, deep=False)
+
+    for _ in range(6):                      # warm every mode's programs
+        for _, rate, deep in modes:
+            one(rate, deep)
+    total = {name: 0.0 for name, _, _ in modes}
+    on_ratio, deep_ratio = [], []
+    for _ in range(n_pairs):
+        t = {name: one(rate, deep) for name, rate, deep in modes}
+        for name in total:
+            total[name] += t[name]
+        on_ratio.append(t["on"] / t["off"] - 1.0)
+        deep_ratio.append(t["deep"] / t["off"] - 1.0)
+    rows = n_pairs * qs.shape[0]
+    return {
+        "qps_trace_off": round(rows / total["off"]),
+        "qps_trace_on": round(rows / total["on"]),
+        "qps_trace_deep": round(rows / total["deep"]),
+        # the gated number: coarse tracing at sample 1.0 vs off
+        "trace_overhead_frac": round(
+            max(0.0, float(np.median(on_ratio))), 4),
+        # informational: the profiling mode's cost (staged engine + block
+        # per stage); never gated
+        "deep_overhead_frac": round(
+            max(0.0, float(np.median(deep_ratio))), 4),
+    }
+
+
 def run(seed: int = 0) -> dict:
     rng = np.random.default_rng(seed)
     smoke = smoke_mode()
@@ -170,8 +243,9 @@ def run(seed: int = 0) -> dict:
     rec = recall_proxy(idx, probes, K, n_probes=6)
 
     batcher = _batcher_curve(rng, n_requests, segment_capacity)
+    overhead = _trace_overhead(rng, segment_capacity, smoke)
 
-    flat = {"recall_proxy": round(rec, 3)}
+    flat = {"recall_proxy": round(rec, 3), **overhead}
     for mix, vals in interleave.items():
         for kk, vv in vals.items():
             flat[f"interleave_{mix}_{kk}"] = vv

@@ -37,9 +37,20 @@ def _git_sha():
 
 
 def _run(name, fn):
+    from repro.obs import trace as obs_trace
+    obs_trace.tracer().drain()     # a previous job's spans are not ours
     t0 = time.perf_counter()
     res = fn()
     us = (time.perf_counter() - t0) * 1e6
+    # per-stage wall-clock from whatever spans the job emitted (empty with
+    # tracing off): observability rides the perf trajectory, so a stage
+    # blowup is attributable to its commit like any other number
+    stage = {}
+    for s in obs_trace.tracer().drain():
+        stage[s["name"]] = stage.get(s["name"], 0.0) + (s["t1"] - s["t0"])
+    if stage:
+        res = {**res, "trace_stage_s":
+               {k: round(v, 4) for k, v in sorted(stage.items())}}
     return name, us, res
 
 

@@ -38,7 +38,17 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
+
 _SEP = "/"
+
+
+def _tenant(ckpt_dir: str) -> str:
+    """Metric/span tenant label for a checkpoint directory.  The registry
+    checkpoints each tenant under ``<root>/<name>``, so the basename is
+    the tenant name; standalone dirs label as themselves."""
+    return os.path.basename(os.path.normpath(ckpt_dir)) or "default"
 
 
 class CheckpointCorruptError(Exception):
@@ -100,6 +110,19 @@ def save(ckpt_dir: str, step: int, tree: Any, keep: int = 3,
     (host-side metadata that isn't an array -- e.g. the serve registry's
     segment bookkeeping); read it back with ``load_extra``.
     """
+    tenant = _tenant(ckpt_dir)
+    tr = obs_trace.tracer()
+    t0 = tr.clock()
+    with tr.span("ckpt.save", tenant=tenant, step=int(step)):
+        final = _save_body(ckpt_dir, step, tree, keep, extra)
+    reg = obs_metrics.registry()
+    reg.inc("ckpt_saves_total", tenant=tenant)
+    reg.observe("ckpt_save_latency_s", tr.clock() - t0, tenant=tenant)
+    return final
+
+
+def _save_body(ckpt_dir: str, step: int, tree: Any, keep: int,
+               extra: Optional[dict]) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     tmp = os.path.join(ckpt_dir, f"tmp-{step}")
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
@@ -200,6 +223,15 @@ def verify(ckpt_dir: str, step: int, deep: bool = True) -> dict:
     crc32 (what ``restore`` does anyway); ``deep=False`` is the cheap
     manifest-only check ``_gc`` uses to decide what is still restorable.
     """
+    try:
+        return _verify_body(ckpt_dir, step, deep)
+    except CheckpointCorruptError:
+        obs_metrics.registry().inc("ckpt_corrupt_total",
+                                   tenant=_tenant(ckpt_dir))
+        raise
+
+
+def _verify_body(ckpt_dir: str, step: int, deep: bool) -> dict:
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
     manifest = _read_manifest(path)
     npz_path = os.path.join(path, "arrays.npz")
@@ -277,6 +309,23 @@ def restore(ckpt_dir: str, step: int, target: Any,
     placed on device; any mismatch raises :class:`CheckpointCorruptError`
     naming the file -- restore never hands back silently-wrong data.
     """
+    tenant = _tenant(ckpt_dir)
+    tr = obs_trace.tracer()
+    t0 = tr.clock()
+    reg = obs_metrics.registry()
+    try:
+        with tr.span("ckpt.restore", tenant=tenant, step=int(step)):
+            out = _restore_body(ckpt_dir, step, target, shardings)
+    except CheckpointCorruptError:
+        reg.inc("ckpt_corrupt_total", tenant=tenant)
+        raise
+    reg.inc("ckpt_restores_total", tenant=tenant)
+    reg.observe("ckpt_restore_latency_s", tr.clock() - t0, tenant=tenant)
+    return out
+
+
+def _restore_body(ckpt_dir: str, step: int, target: Any,
+                  shardings: Optional[Any]) -> Any:
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
     manifest = _read_manifest(path)
     npz_path = os.path.join(path, "arrays.npz")

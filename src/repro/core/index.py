@@ -129,13 +129,24 @@ def hash_family(state: LSHIndexState) -> Tuple[Array, Array, Array]:
     return state.alpha, state.b, state.mix
 
 
-def _hashes_and_proj(state: LSHIndexState, cfg: IndexConfig, x: Array
-                     ) -> Tuple[Array, Array]:
-    """(..., L, K) int32 hashes and pre-floor projections (kernel-dispatched)."""
-    h, proj = ops.pstable_hash_proj(x, state.alpha, state.b, cfg.r,
+def hash_stage(alpha: Array, b: Array, cfg: IndexConfig, x: Array
+               ) -> Tuple[Array, Array]:
+    """Stage 1 of the query pipeline: (..., L, K) int32 hashes and
+    pre-floor projections (kernel-dispatched).  Takes the family arrays
+    directly so the traced *staged* engine (serve/segments.py) can run it
+    once per query batch -- every segment shares one family -- while the
+    fused path calls it through :func:`_hashes_and_proj` with identical
+    inputs, keeping the two paths parity-by-construction."""
+    h, proj = ops.pstable_hash_proj(x, alpha, b, cfg.r,
                                     backend=dispatch.hash_backend())
     shape = x.shape[:-1] + (cfg.n_tables, cfg.n_hashes)
     return h.reshape(shape), proj.reshape(shape)
+
+
+def _hashes_and_proj(state: LSHIndexState, cfg: IndexConfig, x: Array
+                     ) -> Tuple[Array, Array]:
+    """(..., L, K) int32 hashes and pre-floor projections (kernel-dispatched)."""
+    return hash_stage(state.alpha, state.b, cfg, x)
 
 
 def build_index(state: LSHIndexState, cfg: IndexConfig, embeddings: Array
@@ -223,15 +234,16 @@ def insert_items(state: LSHIndexState, cfg: IndexConfig, embeddings: Array,
     return dataclasses.replace(state, table=table, counts=counts, db=db)
 
 
-def _probe_buckets(state: LSHIndexState, cfg: IndexConfig, hashes: Array,
-                   proj: Array, n_probes: int) -> Array:
-    """(..., L, T) bucket ids: base bucket + best (T-1) single-coordinate
-    perturbations ranked by distance-to-boundary (Lv et al. step-wise probing).
-    """
+def probe_stage(mix: Array, cfg: IndexConfig, hashes: Array,
+                proj: Array, n_probes: int) -> Array:
+    """Stage 2: (..., L, T) bucket ids: base bucket + best (T-1)
+    single-coordinate perturbations ranked by distance-to-boundary
+    (Lv et al. step-wise probing).  Family-array form for the staged
+    engine; the fused path wraps it via :func:`_probe_buckets`."""
     frac = proj - jnp.floor(proj)                                    # (..., L, K)
     # score for delta=+1 is (1 - frac), for delta=-1 is frac; smaller = better.
     scores = jnp.concatenate([1.0 - frac, frac], axis=-1)            # (..., L, 2K)
-    base = _bucket_ids(hashes, state.mix, cfg.log2_buckets)[..., None]
+    base = _bucket_ids(hashes, mix, cfg.log2_buckets)[..., None]
     if n_probes <= 1:
         return base
     t = min(n_probes - 1, 2 * cfg.n_hashes)
@@ -240,8 +252,13 @@ def _probe_buckets(state: LSHIndexState, cfg: IndexConfig, hashes: Array,
     delta = jnp.where(pick < cfg.n_hashes, 1, -1).astype(jnp.int32)
     pert = hashes[..., None, :] + delta[..., :, None] * (
         jax.nn.one_hot(k_idx, cfg.n_hashes, dtype=jnp.int32))        # (..., L, t, K)
-    pb = _bucket_ids(pert, state.mix[:, None, :], cfg.log2_buckets)  # (..., L, t)
+    pb = _bucket_ids(pert, mix[:, None, :], cfg.log2_buckets)        # (..., L, t)
     return jnp.concatenate([base, pb], axis=-1)
+
+
+def _probe_buckets(state: LSHIndexState, cfg: IndexConfig, hashes: Array,
+                   proj: Array, n_probes: int) -> Array:
+    return probe_stage(state.mix, cfg, hashes, proj, n_probes)
 
 
 def _dedup_candidates(cands: Array, buckets: Array, cfg: IndexConfig,
@@ -287,15 +304,28 @@ def _dedup_candidates(cands: Array, buckets: Array, cfg: IndexConfig,
     return jnp.where(keep, cands, -1)
 
 
+def gather_stage(table: Array, buckets: Array, cfg: IndexConfig,
+                 n_cap: int, live_mask: Optional[Array] = None) -> Array:
+    """Stage 3: gather bucket slots + dedup (+ optional tombstone filter):
+    (nq, L*T*S) candidate ids, -1 = empty/dup/dead.  The live filter sits
+    here (not in rerank) to mirror the fused path's op order exactly."""
+    nq = buckets.shape[0]
+    cands = table[jnp.arange(cfg.n_tables)[:, None, None],
+                  buckets.transpose(1, 0, 2)]                        # (L, nq, T, S)
+    cands = cands.transpose(1, 0, 2, 3).reshape(nq, -1)              # (nq, L*T*S)
+    cands = _dedup_candidates(cands, buckets, cfg, n_cap)
+    if live_mask is not None:
+        safe = jnp.clip(cands, 0, live_mask.shape[0] - 1)
+        cands = jnp.where((cands >= 0) & live_mask[safe], cands, -1)
+    return cands
+
+
 def _candidate_ids(state: LSHIndexState, cfg: IndexConfig, q: Array,
                    n_probes: int) -> Array:
     """hash -> probe -> gather bucket slots -> dedup: (nq, L*T*S) ids."""
     hashes, proj = _hashes_and_proj(state, cfg, q)
     buckets = _probe_buckets(state, cfg, hashes, proj, n_probes)     # (nq, L, T)
-    cands = state.table[jnp.arange(cfg.n_tables)[:, None, None],
-                        buckets.transpose(1, 0, 2)]                  # (L, nq, T, S)
-    cands = cands.transpose(1, 0, 2, 3).reshape(q.shape[0], -1)      # (nq, L*T*S)
-    return _dedup_candidates(cands, buckets, cfg, state.db.shape[0])
+    return gather_stage(state.table, buckets, cfg, state.db.shape[0])
 
 
 def query_index(state: LSHIndexState, cfg: IndexConfig, queries: Array,
@@ -354,6 +384,21 @@ def query_index_gids(state: LSHIndexState, cfg: IndexConfig, queries: Array,
     """
     ids, dist = query_index(state, cfg, queries, k, n_probes=n_probes,
                             backend=backend, live_mask=live_mask)
+    g = jnp.where(ids >= 0, gids[jnp.clip(ids, 0, gids.shape[0] - 1)], -1)
+    return g, dist
+
+
+def rerank_stage(db: Array, gids: Array, cfg: IndexConfig, q: Array,
+                 cands: Array, k: int, backend: Optional[str] = None
+                 ) -> Tuple[Array, Array]:
+    """Stage 4: exact re-rank + top-k + local-slot -> global-id translation.
+
+    The staged engine's tail: candidates come pre-filtered from
+    :func:`gather_stage`, the distance/top-k op is the same
+    ``ops.fused_query_topk`` the fused path runs, so staged results are
+    bitwise those of :func:`query_index_gids` on the same segment."""
+    dist, ids = ops.fused_query_topk(q, db, cands, k, p=cfg.p,
+                                     backend=backend)
     g = jnp.where(ids >= 0, gids[jnp.clip(ids, 0, gids.shape[0] - 1)], -1)
     return g, dist
 

@@ -131,6 +131,24 @@ def embed_backend(override: str | None = None) -> str:
     return "compiled" if _platform() == "tpu" else "reference"
 
 
+def describe() -> dict:
+    """Every dispatch decision as it would resolve *right now*, plus the
+    env overrides that produced it -- the observability hook the serve
+    report and the telemetry exporter publish so an operator can tell
+    which code path a deployment is actually running without reading env
+    vars off the process.
+    """
+    return {
+        "platform": _platform(),
+        "kernel_mode": kernel_mode(),
+        "query_backend": query_backend(),
+        "hash_backend": hash_backend(),
+        "embed_backend": embed_backend(),
+        "env": {_ENV_KERNEL: os.environ.get(_ENV_KERNEL),
+                _ENV_QUERY: os.environ.get(_ENV_QUERY)},
+    }
+
+
 # ---------------------------------------------------------------------------
 # Per-shape block-size selection
 # ---------------------------------------------------------------------------

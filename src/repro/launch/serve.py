@@ -33,6 +33,18 @@ devices; results are bit-identical to the unsharded run).
 segments on several devices -- with ``auto``, each compaction re-derives
 the replica factors from the tenant's live ``shard_balance`` merge-win
 telemetry (results again bit-identical; only placement changes).
+
+Observability (docs/architecture.md § Observability): ``--metrics-dir DIR``
+turns on structured out-of-process export -- the unified metrics registry
+and the span ring are flushed every loop step to ``DIR/metrics.jsonl``
+(OTel-style JSON lines) and rendered to ``DIR/metrics.prom`` (Prometheus
+text), enough for an external reader to reconstruct QPS, per-stage latency,
+device balance, WAL fsync latency and the recall gauge without touching the
+process.  ``--trace-sample RATE`` samples that fraction of query traces
+(``--trace-deep`` additionally runs sampled queries through the staged
+engine for per-stage spans); ``--recall-interval`` / ``--recall-probe-size``
+drive the periodic sampled recall-vs-brute-force probe behind the
+``serve_recall_proxy`` gauge.
 """
 
 import argparse
@@ -72,6 +84,21 @@ def main():
                          "tenants: none | static:k | auto (auto re-places "
                          "from live shard_balance telemetry at every "
                          "compaction)")
+    ap.add_argument("--metrics-dir", default=None,
+                    help="export telemetry here every loop step: "
+                         "metrics.jsonl (JSON-lines metric snapshots + "
+                         "trace spans) and metrics.prom (Prometheus text)")
+    ap.add_argument("--trace-sample", type=float, default=None,
+                    help="fraction of query traces to sample (default "
+                         "REPRO_TRACE_SAMPLE or 0 = tracing off)")
+    ap.add_argument("--trace-deep", action="store_true",
+                    help="run sampled queries through the staged engine "
+                         "for per-stage spans (default REPRO_TRACE_DEEP)")
+    ap.add_argument("--recall-interval", type=int, default=20,
+                    help="probe sampled recall vs brute force every this "
+                         "many steps (0 = only the final probe)")
+    ap.add_argument("--recall-probe-size", type=int, default=16,
+                    help="queries per periodic recall probe")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -85,9 +112,16 @@ def main():
 
     import numpy as np
 
+    from ..obs import Exporter, configure as obs_configure
     from ..serve import ServableRegistry, ServableSpec, recall_proxy
     from ..serve.stats import occupancy_report
     from .mesh import make_serve_mesh
+
+    if args.trace_sample is not None or args.trace_deep:
+        obs_configure(sample_rate=args.trace_sample,
+                      deep=True if args.trace_deep else None)
+    exporter = (Exporter.for_directory(args.metrics_dir)
+                if args.metrics_dir else None)
 
     rng = np.random.default_rng(args.seed)
     mesh = make_serve_mesh(args.shard) if args.shard else None
@@ -193,6 +227,17 @@ def main():
                 # auto this is where shard_balance skew becomes placement
                 sv.compact()
                 compactions[name] += 1
+        if args.recall_interval and (step + 1) % args.recall_interval == 0:
+            # the telemetry loop's quality signal: a small sampled probe of
+            # recall vs exact brute force, published as a per-tenant gauge
+            for name in registry.names():
+                sv = registry.get(name)
+                qs = np.asarray(sv.embed(
+                    sample_fvals(sv, args.recall_probe_size)))
+                sv.stats.record_recall(recall_proxy(
+                    sv.index, qs, args.k, n_probes=args.n_probes))
+        if exporter is not None:
+            exporter.flush()
         if (step + 1) % 20 == 0:
             done = sum(f.done() for f in futures)
             print(f"[serve] step {step + 1}/{args.steps}: "
@@ -206,9 +251,10 @@ def main():
     probe = {}
     for name in registry.names():
         sv = registry.get(name)
-        qs = np.asarray(sv.embed(sample_fvals(sv, 16)))
-        probe[name] = round(recall_proxy(sv.index, qs, args.k,
-                                         n_probes=args.n_probes), 3)
+        qs = np.asarray(sv.embed(sample_fvals(sv, args.recall_probe_size)))
+        r = recall_proxy(sv.index, qs, args.k, n_probes=args.n_probes)
+        sv.stats.record_recall(r)
+        probe[name] = round(r, 3)
 
     report = registry.report()
     for name, rep in report.items():
@@ -244,6 +290,12 @@ def main():
 
     print("[serve] report:",
           json.dumps({n: r["stats"] for n, r in report.items()}))
+    if exporter is not None:
+        # final snapshot carries everything after flush_all + snapshot +
+        # the last recall probe, then the sink is released
+        exporter.flush()
+        exporter.close()
+        print(f"[serve] telemetry -> {args.metrics_dir}")
     print("[serve] OK")
 
 

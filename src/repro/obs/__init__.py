@@ -1,0 +1,34 @@
+"""Process-wide observability: tracing, metrics, structured export.
+
+Layering: ``obs`` sits *below* everything else in the repo (stdlib-only --
+no jax, no numpy), so any layer may import it without cycles:
+
+    obs.metrics   unified registry (counters/gauges/histograms, label
+                  sets) with a canonical CATALOG -- the documented schema
+    obs.trace     sampled span tracer (trace-id propagation, deterministic
+                  sampling, bounded ring buffer) -- the REPRO_TRACE_* knobs
+    obs.export    JSON-lines / Prometheus export to file or UDS sink
+
+The one exception to "anyone may import obs" is ``serve/faults.py``, which
+stays import-free at module level by design and publishes via a lazy
+import inside ``fire()`` (same pattern as the checkpoint layer's fault
+hook).
+"""
+
+from .export import Exporter, render_prometheus
+from .metrics import CATALOG, MetricsRegistry, MetricSpec, registry
+from .trace import STAGE_SPANS, TraceContext, Tracer, configure, tracer
+
+__all__ = [
+    "CATALOG",
+    "Exporter",
+    "MetricSpec",
+    "MetricsRegistry",
+    "STAGE_SPANS",
+    "TraceContext",
+    "Tracer",
+    "configure",
+    "registry",
+    "render_prometheus",
+    "tracer",
+]

@@ -12,7 +12,9 @@ Layering (each module usable alone):
   batcher  -- MicroBatcher: deadline-based admission queue that coalesces
               heterogeneous requests into a fixed padded chunk palette
   stats    -- ServingStats (rates, latency, per-shard merge-win telemetry) /
-              recall_proxy / occupancy_report
+              recall_proxy / occupancy_report; every record_* also publishes
+              into the unified repro.obs.metrics registry under the tenant
+              label (repro.obs.export ships it out of process)
   registry -- ServableSpec / Servable / ServableRegistry: named multi-tenant
               endpoints with checkpoint snapshot/restore; embedders are
               resolved by name from repro.embedders (basis / qmc /

@@ -24,6 +24,14 @@ The batcher is synchronous-core + optional pump thread: ``submit`` enqueues
 and returns a Future; ``pump`` (called by the loop thread, or manually in
 tests with an injected clock) decides flushes.  ``flush_all`` drains
 everything regardless of deadlines.
+
+Observability: ``submit`` is where a request's *trace* begins -- it captures
+the ambient trace context (or mints one at the sampling rate) into the
+pending entry, and ``_dispatch`` re-attaches the first sampled request's
+context on the dispatching thread, records each request's queue-wait as a
+retroactive ``admission`` span, and wraps the padded execution in a
+``batch`` span carrying rows_real/rows_padded.  Queue-wait also feeds the
+always-on ``serve_queue_wait_s`` histogram.
 """
 
 from __future__ import annotations
@@ -37,6 +45,9 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
+
 # fn(queries_padded (c, N), k, n_probes) -> (ids (c, k), dists (c, k))
 QueryFn = Callable[[np.ndarray, int, int], Tuple[np.ndarray, np.ndarray]]
 
@@ -49,6 +60,7 @@ class _Pending:
     deadline: float
     future: Future = field(default_factory=Future)
     submitted: float = 0.0
+    ctx: Optional[obs_trace.TraceContext] = None   # trace ctx at admission
 
 
 class MicroBatcher:
@@ -58,7 +70,9 @@ class MicroBatcher:
                  chunk_sizes: Sequence[int] = (8, 32, 128),
                  max_delay_ms: float = 5.0,
                  clock: Callable[[], float] = time.monotonic,
-                 on_batch: Optional[Callable[[int, int, float], None]] = None):
+                 on_batch: Optional[Callable[[int, int, float], None]] = None,
+                 tenant: str = "default",
+                 metrics: Optional[obs_metrics.MetricsRegistry] = None):
         if not chunk_sizes or sorted(chunk_sizes) != list(chunk_sizes):
             raise ValueError("chunk_sizes must be ascending and non-empty")
         self.query_fn = query_fn
@@ -66,6 +80,8 @@ class MicroBatcher:
         self.max_delay = max_delay_ms / 1e3
         self.clock = clock
         self.on_batch = on_batch            # (rows_real, rows_padded, dt)
+        self.tenant = tenant
+        self.metrics = obs_metrics.registry() if metrics is None else metrics
         self.shape_counts: Counter = Counter()   # (chunk, k, n_probes) -> n
         self.n_requests = 0
         self.n_batches = 0
@@ -83,8 +99,16 @@ class MicroBatcher:
         if q.ndim != 2:
             raise ValueError(f"expected (nq, N) queries, got {q.shape}")
         now = self.clock()
+        tr = obs_trace.tracer()
+        # a request's trace starts at admission: inherit the submitter's
+        # context (e.g. a "request" root span) or mint one at the sample
+        # rate (None when sampling is off -- the entire tracing-off cost)
+        ctx = tr.current()
+        if ctx is None:
+            ctx = tr.start_trace()
         req = _Pending(queries=q, k=int(k), n_probes=int(n_probes),
-                       deadline=now + self.max_delay, submitted=now)
+                       deadline=now + self.max_delay, submitted=now,
+                       ctx=ctx)
         with self._wake:
             self._q.setdefault((req.k, req.n_probes), []).append(req)
             self.n_requests += 1
@@ -136,6 +160,24 @@ class MicroBatcher:
         """
         k, n_probes = key
         batches = 0
+        tr = obs_trace.tracer()
+        t_disp = self.clock()
+        # queue-wait per request: always a histogram observation, and a
+        # retroactive "admission" span on each sampled request's own trace
+        # (timestamps re-based onto the tracer clock so the span timeline
+        # is consistent even under an injected sim clock)
+        t_tr = tr.clock()
+        for r in reqs:
+            wait = max(t_disp - r.submitted, 0.0)
+            self.metrics.observe("serve_queue_wait_s", wait,
+                                 tenant=self.tenant)
+            if r.ctx is not None and r.ctx.sampled:
+                tr.record("admission", t_tr - wait, t_tr, ctx=r.ctx,
+                          tenant=self.tenant, rows=int(r.queries.shape[0]))
+        # the batch executes under the first sampled request's context, so
+        # in-engine stage spans (hash/probe/...) attach to a real trace
+        ctx = next((r.ctx for r in reqs
+                    if r.ctx is not None and r.ctx.sampled), None)
         try:
             rows = np.concatenate([r.queries for r in reqs])
             total = rows.shape[0]
@@ -149,7 +191,14 @@ class MicroBatcher:
                 buf = np.zeros((chunk, n_dims), np.float32)
                 buf[:take] = rows[pos:pos + take]
                 t0 = self.clock()
-                ids, dists = self.query_fn(buf, k, n_probes)
+                if ctx is not None:
+                    with tr.attach(ctx), tr.span(
+                            "batch", tenant=self.tenant,
+                            rows_real=take, rows_padded=chunk,
+                            k=k, n_probes=n_probes):
+                        ids, dists = self.query_fn(buf, k, n_probes)
+                else:
+                    ids, dists = self.query_fn(buf, k, n_probes)
                 self.shape_counts[(chunk, k, n_probes)] += 1
                 self.n_batches += 1
                 batches += 1

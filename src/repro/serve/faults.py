@@ -150,6 +150,10 @@ def fire(site: str) -> None:
         # recovery path finds on disk is exactly what was durable.
         os.kill(os.getpid(), signal.SIGKILL)
     plan.fired.append(site)
+    # lazy import keeps this module leaf-level (no repro imports at top);
+    # only the triggered path pays it, and only once per process
+    from ..obs import metrics as obs_metrics
+    obs_metrics.registry().inc("faults_fired_total", site=site)
     raise InjectedFault(f"injected fault at {site!r} "
                         f"(event #{spec.nth})")
 

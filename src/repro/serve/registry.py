@@ -40,6 +40,9 @@ import numpy as np
 from ..checkpoint import checkpoint as ckpt
 from ..core.index import IndexConfig, LSHIndexState
 from ..embedders import embedder_names, make_embedder
+from ..kernels import dispatch
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import faults, wal as walmod
 from .batcher import MicroBatcher
 from .router import auto_factors
@@ -149,13 +152,14 @@ class Servable:
         self.embedder = make_embedder(spec.embedder, n_dims=spec.n_dims,
                                       p=spec.p, volume=spec.volume,
                                       params=spec.embedder_params)
-        self.stats = ServingStats()
+        self.stats = ServingStats(tenant=spec.name)
         self.index = SegmentedIndex(spec.index_config(),
                                     segment_capacity=spec.segment_capacity,
                                     insert_chunk=spec.insert_chunk,
                                     key=jax.random.PRNGKey(spec.seed),
                                     backend=backend,
-                                    on_fanout=self.stats.record_fanout)
+                                    on_fanout=self.stats.record_fanout,
+                                    tenant=spec.name)
         if spec.shard_axis is not None and mesh is not None \
                 and spec.shard_axis in mesh.axis_names:
             self.index.shard(mesh, spec.shard_axis)
@@ -167,7 +171,8 @@ class Servable:
         self.batcher = MicroBatcher(self._raw_query,
                                     chunk_sizes=spec.chunk_sizes,
                                     max_delay_ms=spec.max_delay_ms,
-                                    on_batch=self.stats.record_batch)
+                                    on_batch=self.stats.record_batch,
+                                    tenant=spec.name)
 
     # -- data plane ---------------------------------------------------------
 
@@ -181,8 +186,12 @@ class Servable:
         kernel-backend dispatch, so sustained ingest compiles one embed
         program per chunk, like queries do.
         """
-        return self.embedder.embed_batched(
-            fvals, batch_size=max(self.spec.chunk_sizes))
+        fvals = np.asarray(fvals)
+        with obs_trace.tracer().span("embed", tenant=self.spec.name,
+                                     rows=int(fvals.shape[0]),
+                                     embedder=self.spec.embedder):
+            return self.embedder.embed_batched(
+                fvals, batch_size=max(self.spec.chunk_sizes))
 
     def nodes(self) -> np.ndarray:
         """Where to sample functions for ``embed`` (tenant's shared node
@@ -257,7 +266,16 @@ class Servable:
                             "n_batches": self.batcher.n_batches,
                             "n_requests": self.batcher.n_requests},
                 "occupancy": occupancy_report(self.index),
-                "shard_layout": self.index.shard_layout()}
+                "shard_layout": self.index.shard_layout(),
+                # which kernel/query/hash/embed paths this process resolves
+                # to right now (env overrides included)
+                "dispatch": dispatch.describe(),
+                # the unified registry's view of this tenant (counters,
+                # gauges, histogram summaries) -- same names the exporter
+                # emits, so in-process reports and out-of-process scrapes
+                # can be cross-checked
+                "metrics": obs_metrics.registry().summary(
+                    tenant=self.spec.name)}
 
 
 class ServableRegistry:
@@ -498,13 +516,17 @@ class ServableRegistry:
             tdir = (os.path.join(ckpt_root, name)
                     if ckpt_root and os.path.isdir(
                         os.path.join(ckpt_root, name)) else None)
+            tr = obs_trace.tracer()
+            reg = obs_metrics.registry()
             if tdir is not None:
                 for s in reversed(ckpt.steps(tdir)):
                     try:
-                        sv = self._restore_tenant(tdir, s)
+                        with tr.span("recover.restore", tenant=name, step=s):
+                            sv = self._restore_tenant(tdir, s)
                         extra = ckpt.load_extra(tdir, s)
                         offset = int(extra.get("wal_offset", 0))
                         report["restored_step"] = s
+                        reg.inc("recovery_restores_total", tenant=name)
                         break
                     except ckpt.CheckpointCorruptError as e:
                         report["corrupt_steps"].append([s, str(e)])
@@ -524,7 +546,10 @@ class ServableRegistry:
                 offset = 0
             if has_wal:
                 start = 0 if replay_from == "start" else offset
-                rep = sv.index.replay(wpath, start=start)
+                with tr.span("recover.replay", tenant=name, start=start):
+                    rep = sv.index.replay(wpath, start=start)
+                reg.inc("recovery_replayed_records_total",
+                        int(rep.get("n_records", 0)), tenant=name)
                 report.update(rep)
                 if rep.get("truncated"):
                     # drop the torn/corrupt tail before reattaching:

@@ -37,6 +37,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+
 
 @dataclasses.dataclass(frozen=True)
 class RoutePlan:
@@ -66,7 +68,8 @@ class QueryRouter:
     device arrays -- rebuilding it after a placement change is free.
     """
 
-    def __init__(self, layout: dict):
+    def __init__(self, layout: dict, tenant: str = "default"):
+        self.tenant = tenant
         self.n_dev = int(layout["n_dev"])
         self.per_dev = int(layout["per_dev"])
         self.n_sealed = int(layout["n_sealed"])
@@ -108,6 +111,11 @@ class QueryRouter:
                 batch[d] += 1
             self._load += batch
             per_dev_active = batch.tolist()
+            load = self._load.tolist()
+        reg = obs_metrics.registry()
+        for d, v in enumerate(load):
+            reg.set("router_device_load", float(v),
+                    tenant=self.tenant, device=str(d))
         return RoutePlan(active=active, dev_of=dev_of,
                          per_device_active=per_dev_active)
 

@@ -61,6 +61,7 @@ import numpy as np
 from ..core import distributed, index as lidx
 from ..core.index import IndexConfig, LSHIndexState
 from ..kernels import dispatch, ops
+from ..obs import trace as obs_trace
 from ..sharding import placement as seg_placement
 from . import faults, wal as walmod
 from .router import QueryRouter
@@ -113,6 +114,34 @@ def _segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
 
 
 @functools.lru_cache(maxsize=64)
+def _staged_family_fns(cfg: IndexConfig, n_probes: int):
+    """Hash + probe stages as standalone programs (deep-traced queries).
+
+    All segments share one family, so the staged engine runs these ONCE
+    per query batch -- hoisted out of the per-segment loop the fused
+    program repeats them in -- and the stage functions are the very ones
+    the fused ``query_index`` body calls, so staged results stay bitwise
+    equal (asserted in tests/test_obs.py)."""
+    hash_fn = jax.jit(
+        lambda alpha, b, q: lidx.hash_stage(alpha, b, cfg, q))
+    probe_fn = jax.jit(
+        lambda mix, h, pj: lidx.probe_stage(mix, cfg, h, pj, n_probes))
+    return hash_fn, probe_fn
+
+
+@functools.lru_cache(maxsize=64)
+def _staged_segment_fns(cfg: IndexConfig, k: int, backend: Optional[str]):
+    """Gather + rerank stages per segment (deep-traced queries)."""
+    gather_fn = jax.jit(
+        lambda table, live, buckets: lidx.gather_stage(
+            table, buckets, cfg, live.shape[0], live_mask=live))
+    rerank_fn = jax.jit(
+        lambda db, gids, q, cands: lidx.rerank_stage(
+            db, gids, cfg, q, cands, k, backend=backend))
+    return gather_fn, rerank_fn
+
+
+@functools.lru_cache(maxsize=64)
 def _segment_insert_fn(cfg: IndexConfig, chunk: int):
     """One compiled incremental-insert program per (cfg, chunk shape)."""
 
@@ -134,10 +163,11 @@ class SegmentedIndex:
     def __init__(self, cfg: IndexConfig, *, segment_capacity: int = 1024,
                  insert_chunk: int = 256, key: Optional[jax.Array] = None,
                  backend: Optional[str] = None, seed: int = 0,
-                 on_fanout=None):
+                 on_fanout=None, tenant: str = "default"):
         if insert_chunk > segment_capacity:
             insert_chunk = segment_capacity
         self.cfg = cfg
+        self.tenant = tenant              # label on spans/metrics only
         # load/imbalance telemetry hook: called after every cross-segment
         # merge with (seg_wins, dev_wins, seg_candidates) -- see
         # ServingStats.record_fanout, whose signature this matches.  None
@@ -218,11 +248,13 @@ class SegmentedIndex:
         with self._lock:
             if self.delta.n_items == 0:
                 return
-            self._log(walmod.encode_seal())
-            # mid-seal crash point: the SEAL record is durable-framed but
-            # the segment mutation below has not happened yet
-            faults.fire("seal")
-            self._seal()
+            with obs_trace.tracer().span("seal", tenant=self.tenant,
+                                         rows=self.delta.n_items):
+                self._log(walmod.encode_seal())
+                # mid-seal crash point: the SEAL record is durable-framed
+                # but the segment mutation below has not happened yet
+                faults.fire("seal")
+                self._seal()
 
     def _seal(self) -> None:
         """Apply a seal (callers hold the lock; never logs)."""
@@ -377,7 +409,8 @@ class SegmentedIndex:
             self._delta_synced = self._version
             # fresh ledger per placement: the instance assignment the
             # router balances over just changed
-            self._router = (QueryRouter(self._placement.layout())
+            self._router = (QueryRouter(self._placement.layout(),
+                                        tenant=self.tenant)
                             if any(f > 1 for f in self._placement.replication)
                             else None)
         elif self._delta_synced != self._version:
@@ -546,7 +579,9 @@ class SegmentedIndex:
         """Rebuild live items into freshly-packed segments (tombstones and
         bucket-overflow shadows are dropped; gids are preserved).  Returns
         the number of segments after compaction."""
-        with self._lock:
+        with self._lock, obs_trace.tracer().span(
+                "compact", tenant=self.tenant, n_live=self.n_live,
+                segments_before=len(self.segments)):
             self._log(walmod.encode_compact())
             emb, gid = self.live_items()
             self.segments = []
@@ -576,8 +611,20 @@ class SegmentedIndex:
         top-k shards with ``ops.merge_topk``.  After ``shard(mesh)`` the
         fan-out runs SPMD instead (one collective program over the mesh)
         with bit-identical results.
+
+        Tracing: inside a sampled trace with deep tracing on
+        (``REPRO_TRACE_DEEP``), the query runs the *staged* engine instead
+        -- hash/probe once from the shared family, then per-segment
+        gather/rerank and the merge/fan-in as separately-jitted programs,
+        each under its own span with a device sync so stage wall-clock is
+        real.  Results are bit-identical to the fused path (same stage
+        functions, same op order -- asserted in tests); unsampled queries
+        never touch it, which is what makes invariant 8 structural.
         """
         q = jnp.asarray(queries, jnp.float32)
+        tr = obs_trace.tracer()
+        if tr.deep and tr.sampled():
+            return self._query_staged(q, k, n_probes, tr)
         with self._lock:
             self.query_shapes.add((int(q.shape[0]), k, n_probes))
             if self._mesh is not None:
@@ -616,6 +663,94 @@ class SegmentedIndex:
             g_all = jnp.concatenate([g for g, _ in shards], axis=1)
             d_all = jnp.concatenate([d for _, d in shards], axis=1)
             g, d = _merged(d_all, g_all, k)
+        if self._on_fanout is not None:
+            self._fanout_telemetry(
+                np.asarray(g), seg_ids,
+                [np.asarray(sg) for sg, _ in shards])
+        return g, d
+
+    def _query_staged(self, q: Array, k: int, n_probes: int,
+                      tr) -> Tuple[Array, Array]:
+        """Deep-traced query: the fused pipeline split at stage boundaries.
+
+        Same lock discipline, same telemetry, same results as
+        :meth:`query` -- only the program granularity differs (and hash +
+        probe run once instead of once per segment, since every segment
+        shares ``self.family``).  Each stage ends with a
+        ``block_until_ready`` so its span measures device time, not
+        dispatch time."""
+        alpha, b, mix = self.family
+        hash_fn, probe_fn = _staged_family_fns(self.cfg, n_probes)
+        with tr.span("hash", tenant=self.tenant, rows=int(q.shape[0]),
+                     backend=dispatch.hash_backend()):
+            h, pj = hash_fn(alpha, b, q)
+            jax.block_until_ready((h, pj))
+        with tr.span("probe", tenant=self.tenant, n_probes=n_probes):
+            buckets = probe_fn(mix, h, pj)
+            jax.block_until_ready(buckets)
+        plan = None
+        with self._lock:
+            self.query_shapes.add((int(q.shape[0]), k, n_probes))
+            if self._mesh is not None:
+                pl = self._current_placement()
+                plan = self._router.route() if self._router else None
+                active = jnp.ones((pl.n_dev * pl.per_dev,), jnp.bool_) \
+                    if plan is None else jnp.asarray(plan.active, jnp.bool_)
+                parts = distributed.staged_sharded_parts(
+                    self.cfg, k, self.backend, pl.mesh, pl.axis, pl.per_dev)
+                with tr.span("gather", tenant=self.tenant,
+                             segments=pl.n_sealed, devices=pl.n_dev):
+                    sc, dc = parts.gather(pl.sealed_state.table,
+                                          pl.sealed_live,
+                                          pl.delta_state.table,
+                                          pl.delta_live, buckets)
+                    jax.block_until_ready((sc, dc))
+                with tr.span("rerank", tenant=self.tenant,
+                             backend=self.backend):
+                    pg, pd = parts.rerank(pl.sealed_state.db, pl.sealed_gids,
+                                          active, sc, pl.delta_state.db,
+                                          pl.delta_gids, dc, q)
+                    jax.block_until_ready((pg, pd))
+                with tr.span("merge", tenant=self.tenant):
+                    g_loc, d_loc = parts.merge(pg, pd)
+                    jax.block_until_ready((g_loc, d_loc))
+                with tr.span("fanin", tenant=self.tenant, devices=pl.n_dev):
+                    g, d = parts.fanin(g_loc, d_loc)
+                    jax.block_until_ready((g, d))
+                seg_ids = None
+            else:
+                g = None
+                seg_ids = [i for i, s in enumerate(self.segments)
+                           if s.n_live > 0]
+                gather_fn, rerank_fn = _staged_segment_fns(self.cfg, k,
+                                                           self.backend)
+                with tr.span("gather", tenant=self.tenant,
+                             segments=len(seg_ids)):
+                    cands = [gather_fn(self.segments[i].state.table,
+                                       self.segments[i].live, buckets)
+                             for i in seg_ids]
+                    jax.block_until_ready(cands)
+                with tr.span("rerank", tenant=self.tenant,
+                             backend=self.backend):
+                    shards = [rerank_fn(self.segments[i].state.db,
+                                        self.segments[i].gids, q, c)
+                              for i, c in zip(seg_ids, cands)]
+                    jax.block_until_ready(shards)
+        if g is not None:
+            if self._on_fanout is not None:
+                self._fanout_telemetry(np.asarray(g), plan=plan)
+            return g, d
+        if not shards:
+            return (jnp.full((q.shape[0], k), -1, jnp.int32),
+                    jnp.full((q.shape[0], k), jnp.inf, jnp.float32))
+        with tr.span("merge", tenant=self.tenant, shards=len(shards)):
+            if len(shards) == 1:
+                g, d = _merged(shards[0][1], shards[0][0], k)
+            else:
+                g_all = jnp.concatenate([g for g, _ in shards], axis=1)
+                d_all = jnp.concatenate([d for _, d in shards], axis=1)
+                g, d = _merged(d_all, g_all, k)
+            jax.block_until_ready((g, d))
         if self._on_fanout is not None:
             self._fanout_telemetry(
                 np.asarray(g), seg_ids,

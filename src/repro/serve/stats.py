@@ -3,11 +3,19 @@ fan-out load balance.
 
 Host-side, lock-guarded, allocation-light: a bounded deque of (t, n) events
 for the rate windows and a bounded latency reservoir for percentiles.  The
-recall proxy periodically replays a small probe set through both the
-segmented index and an exact brute-force scan over the live items -- the
-serving-time analogue of the benchmark-time ``recall_at_k`` -- so operators
-can see quality drift as segments churn (e.g. bucket overflow after many
-compact-free inserts).
+recall proxy replays a small probe set through both the segmented index and
+an exact brute-force scan over the live items -- the serving-time analogue
+of the benchmark-time ``recall_at_k``.  The serve loop runs it on a
+configurable interval (``launch/serve --recall-interval/--recall-probe-size``)
+and feeds the result to :meth:`ServingStats.record_recall`, which publishes
+the ``serve_recall_proxy`` gauge -- so operators can see quality drift as
+segments churn (e.g. bucket overflow after many compact-free inserts).
+
+Every record_* call also publishes into the unified
+:mod:`repro.obs.metrics` registry under this servable's ``tenant`` label;
+:meth:`ServingStats.snapshot` remains the read-through in-process view
+(same keys as before, plus ``padding_efficiency`` and ``recall_proxy``),
+while the registry is what ``obs/export.py`` ships out of process.
 
 Fan-out telemetry (``record_fanout`` / ``shard_balance``): per-shard
 candidate counts and merge-win rates, fed by ``SegmentedIndex.query`` after
@@ -32,6 +40,7 @@ from typing import Callable, Optional, Sequence
 import numpy as np
 
 from ..core import index as lidx
+from ..obs import metrics as obs_metrics
 
 
 def _accumulate(acc: np.ndarray, new: Sequence[int]) -> np.ndarray:
@@ -48,9 +57,13 @@ class ServingStats:
     """Sliding-window rates + latency reservoir for one servable."""
 
     def __init__(self, *, window_s: float = 10.0, reservoir: int = 4096,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 tenant: str = "default",
+                 metrics: Optional[obs_metrics.MetricsRegistry] = None):
         self.window = window_s
         self.clock = clock
+        self.tenant = tenant
+        self.metrics = obs_metrics.registry() if metrics is None else metrics
         self._lock = threading.Lock()
         self._queries: deque = deque()       # (t, n_queries)
         self._inserts: deque = deque()
@@ -59,6 +72,9 @@ class ServingStats:
         self._lat_n = 0                       # total recorded (ring index)
         self.totals = {"queries": 0, "inserts": 0, "deletes": 0, "batches": 0,
                        "rejected_inserts": 0}
+        self._rows_real = 0                   # real rows inside batches
+        self._rows_pad = 0                    # palette-fill rows (pad only)
+        self._recall: Optional[float] = None  # last periodic probe result
         # fan-out load balance (see module docstring): positional counters
         self._seg_wins = np.zeros((0,), np.int64)
         self._seg_cands = np.zeros((0,), np.int64)
@@ -79,12 +95,27 @@ class ServingStats:
             if latency_s is not None:
                 self._lat[self._lat_n % self._lat.shape[0]] = latency_s
                 self._lat_n += 1
+        self.metrics.inc("serve_queries_total", n, tenant=self.tenant)
+        if latency_s is not None:
+            self.metrics.observe("serve_query_latency_s", latency_s,
+                                 tenant=self.tenant)
 
     def record_batch(self, rows_real: int, rows_padded: int,
                      latency_s: float) -> None:
+        """One dispatched micro-batch: ``rows_real`` request rows inside a
+        ``rows_padded``-row palette chunk (so ``rows_padded - rows_real``
+        rows were pure fill)."""
         self.record_query(rows_real, latency_s)
+        pad = max(int(rows_padded) - int(rows_real), 0)
         with self._lock:
             self.totals["batches"] += 1
+            self._rows_real += rows_real
+            self._rows_pad += pad
+        self.metrics.inc("serve_batches_total", tenant=self.tenant)
+        self.metrics.inc("serve_batch_rows_real_total", rows_real,
+                         tenant=self.tenant)
+        self.metrics.inc("serve_batch_rows_padded_total", pad,
+                         tenant=self.tenant)
 
     def record_insert(self, n: int) -> None:
         now = self.clock()
@@ -92,6 +123,7 @@ class ServingStats:
             self._inserts.append((now, n))
             self._trim(self._inserts, now)
             self.totals["inserts"] += n
+        self.metrics.inc("serve_inserts_total", n, tenant=self.tenant)
 
     def record_rejected(self, n: int) -> None:
         """Count ``n`` rows refused by insert validation (NaN/Inf or shape
@@ -99,6 +131,8 @@ class ServingStats:
         drop."""
         with self._lock:
             self.totals["rejected_inserts"] += n
+        self.metrics.inc("serve_rejected_inserts_total", n,
+                         tenant=self.tenant)
 
     def record_delete(self, n: int) -> None:
         now = self.clock()
@@ -106,6 +140,14 @@ class ServingStats:
             self._deletes.append((now, n))
             self._trim(self._deletes, now)
             self.totals["deletes"] += n
+        self.metrics.inc("serve_deletes_total", n, tenant=self.tenant)
+
+    def record_recall(self, recall: float) -> None:
+        """Latest periodic ``recall_proxy`` probe result -> gauge + the
+        ``recall_proxy`` key of :meth:`snapshot`."""
+        with self._lock:
+            self._recall = float(recall)
+        self.metrics.set("serve_recall_proxy", recall, tenant=self.tenant)
 
     def record_fanout(self, seg_wins: Sequence[int],
                       dev_wins: Optional[Sequence[int]] = None,
@@ -126,6 +168,18 @@ class ServingStats:
             if dev_load is not None:
                 self._dev_load = _accumulate(self._dev_load, dev_load)
             self._fanout_n += 1
+        for i, w in enumerate(seg_wins):
+            if w:
+                self.metrics.inc("serve_segment_wins_total", w,
+                                 tenant=self.tenant, segment=i)
+        for d, w in enumerate(dev_wins or ()):
+            if w:
+                self.metrics.inc("serve_device_wins_total", w,
+                                 tenant=self.tenant, device=d)
+        for d, n in enumerate(dev_load or ()):
+            if n:
+                self.metrics.inc("serve_device_load_total", n,
+                                 tenant=self.tenant, device=d)
 
     def reset_fanout(self) -> None:
         """Zero the positional fan-out counters (wins/candidates/loads).
@@ -203,12 +257,21 @@ class ServingStats:
                 "p95_ms": float(np.percentile(lat, 95)),
                 "p99_ms": float(np.percentile(lat, 99))}
 
+    def padding_efficiency(self) -> float:
+        """Fraction of dispatched batch rows that were real requests
+        (1.0 = every chunk exactly full; no batches yet reads as 1.0)."""
+        with self._lock:
+            real, pad = self._rows_real, self._rows_pad
+        return real / (real + pad) if (real + pad) else 1.0
+
     def snapshot(self) -> dict:
         return {"qps": round(self.qps(), 2),
                 "insert_rate": round(self.insert_rate(), 2),
                 **{k: round(v, 3) for k, v in
                    self.latency_percentiles().items()},
                 "totals": dict(self.totals),
+                "padding_efficiency": round(self.padding_efficiency(), 4),
+                "recall_proxy": self._recall,
                 "shard_balance": self.shard_balance()}
 
 

@@ -54,6 +54,8 @@ from typing import Any, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace as obs_trace
 from . import faults
 
 _ENV_FSYNC_EVERY = "REPRO_WAL_FSYNC_EVERY"
@@ -176,10 +178,15 @@ class WriteAheadLog:
             ``REPRO_WAL_FSYNC_EVERY``.
     """
 
-    def __init__(self, path: str, fsync_every: Optional[int] = None):
+    def __init__(self, path: str, fsync_every: Optional[int] = None,
+                 tenant: Optional[str] = None):
         self.path = path
         self.fsync_every = (default_fsync_every() if fsync_every is None
                             else max(0, int(fsync_every)))
+        # metric/span label; the registry names logs "<tenant>.wal", so the
+        # basename is the right default and no caller needs to change
+        self.tenant = tenant if tenant is not None else \
+            os.path.splitext(os.path.basename(path))[0]
         d = os.path.dirname(path)
         if d:
             os.makedirs(d, exist_ok=True)
@@ -196,27 +203,45 @@ class WriteAheadLog:
         a ``kill`` at ``wal.append`` leaves a header whose payload never
         arrived -- exactly the torn frame replay must survive.
         """
-        self._f.write(_HEADER.pack(len(payload), zlib.crc32(payload)))
-        self._f.flush()
-        faults.fire("wal.append")
-        self._f.write(payload)
-        self._f.flush()
-        faults.fire("wal.appended")
+        tr = obs_trace.tracer()
+        t0 = tr.clock()
+        with tr.span("wal.append", tenant=self.tenant,
+                     bytes=_HEADER.size + len(payload)):
+            self._f.write(_HEADER.pack(len(payload), zlib.crc32(payload)))
+            self._f.flush()
+            faults.fire("wal.append")
+            self._f.write(payload)
+            self._f.flush()
+            faults.fire("wal.appended")
         self.offset += _HEADER.size + len(payload)
         self.appends += 1
         self._pending += 1
+        reg = obs_metrics.registry()
+        reg.inc("wal_appends_total", tenant=self.tenant)
+        reg.inc("wal_bytes_total", _HEADER.size + len(payload),
+                tenant=self.tenant)
+        reg.observe("wal_append_latency_s", tr.clock() - t0,
+                    tenant=self.tenant)
         if self.fsync_every and self._pending >= self.fsync_every:
             self.sync()
         return self.offset
 
     def sync(self) -> None:
         """Group-commit point: everything appended so far becomes durable."""
-        self._f.flush()
-        faults.fire("wal.fsync")
-        os.fsync(self._f.fileno())
-        faults.fire("wal.fsynced")
+        tr = obs_trace.tracer()
+        t0 = tr.clock()
+        with tr.span("wal.fsync", tenant=self.tenant,
+                     pending=self._pending):
+            self._f.flush()
+            faults.fire("wal.fsync")
+            os.fsync(self._f.fileno())
+            faults.fire("wal.fsynced")
         self._pending = 0
         self.syncs += 1
+        reg = obs_metrics.registry()
+        reg.inc("wal_fsyncs_total", tenant=self.tenant)
+        reg.observe("wal_fsync_latency_s", tr.clock() - t0,
+                    tenant=self.tenant)
 
     def close(self) -> None:
         if not self._f.closed:

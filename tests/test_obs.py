@@ -1,0 +1,501 @@
+"""Observability layer: metrics registry, tracer, exporter, stats clocks.
+
+Three groups:
+
+* in-process unit tests for the unified registry (catalog enforcement),
+  the tracer (deterministic sampling, ring bound, nesting/attach), the
+  exporter JSONL/Prometheus round trip, and ``ServingStats`` time
+  semantics under an injected clock (exact window boundaries, reservoir
+  ring wraparound, single-event rates, padding efficiency);
+* invariant-8 checks: sampling 0 is bit-identical to an untraced run,
+  and the deep-traced **staged** engine returns bit-identical results to
+  the fused path (unsharded here; the sharded variant runs in a
+  subprocess below and in tests/test_crash_recovery.py's harness);
+* subprocess acceptance tests on an 8-device host mesh: one sampled query
+  yields a single trace covering admission -> embed -> hash -> probe ->
+  gather -> rerank -> merge -> fanin with stage spans summing to >= 90%
+  of the batch span, and a kill -9 crash + recover() yields
+  ``recover.restore`` / ``recover.replay`` spans plus recovery metrics.
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core.index import IndexConfig
+from repro.obs import export as obs_export
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import CATALOG, MetricsRegistry
+from repro.obs.trace import Tracer
+from repro.serve.batcher import MicroBatcher
+from repro.serve.segments import SegmentedIndex
+from repro.serve.stats import ServingStats
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _env(n_devices=1):
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count"
+                        f"={n_devices}")
+    return env
+
+
+def _run(code: str, n_devices=1, timeout=560):
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=_env(n_devices))
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_counter_gauge_histogram():
+    reg = MetricsRegistry()
+    reg.inc("serve_queries_total", 3, tenant="t")
+    reg.inc("serve_queries_total", 2, tenant="t")
+    reg.set("serve_recall_proxy", 0.75, tenant="t")
+    reg.observe("serve_query_latency_s", 0.005, tenant="t")
+    reg.observe("serve_query_latency_s", 2.0, tenant="t")
+    assert reg.value("serve_queries_total", tenant="t") == 5
+    assert reg.value("serve_recall_proxy", tenant="t") == 0.75
+    h = reg.value("serve_query_latency_s", tenant="t")
+    assert h["count"] == 2 and abs(h["sum"] - 2.005) < 1e-9
+    # cumulative buckets end at +Inf == count
+    assert h["buckets"][-1] == ["+Inf", 2]
+    # collect() is export-shaped: name/type/labels per entry
+    entries = {e["name"]: e for e in reg.collect()}
+    assert entries["serve_queries_total"]["labels"] == {"tenant": "t"}
+    assert entries["serve_query_latency_s"]["type"] == "histogram"
+
+
+def test_registry_rejects_schema_drift():
+    reg = MetricsRegistry()
+    with pytest.raises(KeyError):
+        reg.inc("not_a_documented_metric", tenant="t")
+    with pytest.raises(ValueError):
+        reg.inc("serve_queries_total", shard="0")      # wrong label key
+    with pytest.raises(ValueError):
+        reg.inc("serve_queries_total")                 # missing tenant
+    with pytest.raises(TypeError):
+        reg.set("serve_queries_total", 1.0, tenant="t")  # counter, not gauge
+
+
+def test_registry_summary_filters_by_label():
+    reg = MetricsRegistry()
+    reg.inc("serve_queries_total", 7, tenant="a")
+    reg.inc("serve_queries_total", 9, tenant="b")
+    reg.inc("serve_segment_wins_total", 4, tenant="a", segment="2")
+    s = reg.summary(tenant="a")
+    assert s["serve_queries_total"] == 7
+    assert s["serve_segment_wins_total{segment=2}"] == 4
+    assert not any("9" == str(v) for v in s.values())
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+
+
+def test_sampling_is_deterministic_in_trace_id():
+    a = Tracer(sample_rate=0.5, seed=1234)
+    b = Tracer(sample_rate=0.5, seed=1234)
+    da = [a.start_trace().sampled for _ in range(200)]
+    db = [b.start_trace().sampled for _ in range(200)]
+    assert da == db                       # same seed -> same decisions
+    frac = sum(da) / len(da)
+    assert 0.3 < frac < 0.7               # rate is actually honoured
+    c = Tracer(sample_rate=0.0)
+    assert c.start_trace() is None        # rate 0: no context at all
+
+
+def test_span_ring_is_bounded():
+    tr = Tracer(sample_rate=1.0, buffer=16)
+    for i in range(50):
+        with tr.span("hash", tenant="t", i=i):
+            pass
+    spans = tr.spans()
+    assert len(spans) == 16
+    assert [s["attrs"]["i"] for s in spans] == list(range(34, 50))
+    assert tr.n_spans == 50               # drops are countable
+    assert tr.drain() and tr.spans() == []
+
+
+def test_span_nesting_and_attach():
+    tr = Tracer(sample_rate=1.0)
+    with tr.span("request", tenant="t") as root:
+        ctx = tr.current()
+        assert ctx is not None and ctx.sampled and tr.sampled()
+        with tr.span("hash", tenant="t") as child:
+            assert child.parent_id == root.span_id
+        tr.record("admission", 1.0, 2.0, tenant="t")
+    assert tr.current() is None           # root span restored the thread
+    by_name = {s["name"]: s for s in tr.spans()}
+    assert by_name["hash"]["parent_id"] == by_name["request"]["span_id"]
+    assert by_name["admission"]["parent_id"] == by_name["request"]["span_id"]
+    assert by_name["request"]["parent_id"] is None
+    assert len({s["trace_id"] for s in tr.spans()}) == 1  # one trace
+
+
+def test_unsampled_context_suppresses_descendants():
+    tr = Tracer(sample_rate=0.5, seed=0)
+    # find an unsampled decision, then check span() under it is a no-op
+    for _ in range(100):
+        ctx = tr.start_trace()
+        if not ctx.sampled:
+            break
+    assert not ctx.sampled
+    with tr.attach(ctx):
+        assert tr.span("hash", tenant="t") is obs_trace._NOOP
+    assert tr.spans() == []
+
+
+def test_stage_spans_feed_latency_histogram():
+    reg = MetricsRegistry()
+    tr = Tracer(sample_rate=1.0, metrics=reg)
+    with tr.span("gather", tenant="t"):
+        pass
+    with tr.span("not_a_stage", tenant="t"):
+        pass
+    h = reg.value("serve_stage_latency_s", tenant="t", stage="gather")
+    assert h["count"] == 1
+    assert reg.value("serve_stage_latency_s", tenant="t",
+                     stage="not_a_stage") is None
+
+
+# ---------------------------------------------------------------------------
+# ServingStats time semantics (injected clock)
+# ---------------------------------------------------------------------------
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _stats(clock, **kw):
+    return ServingStats(clock=clock, tenant="t",
+                        metrics=MetricsRegistry(), **kw)
+
+
+def test_window_trim_at_exact_boundary():
+    clock = _Clock()
+    st = _stats(clock, window_s=10.0)
+    st.record_query(4)                       # event at t=0
+    clock.t = 10.0                           # exactly window edge
+    # trim drops strictly-older events: t=0 is NOT < 10 - 10, so it stays
+    assert st.qps() == pytest.approx(4 / 10.0)
+    clock.t = 10.0 + 1e-6                    # one tick past the edge
+    assert st.qps() == 0.0
+
+
+def test_latency_reservoir_wraps_as_a_ring():
+    clock = _Clock()
+    st = _stats(clock, reservoir=8)
+    for i in range(1, 21):                   # 20 > 8: ring wraps twice
+        st.record_query(1, latency_s=float(i))
+    assert st._lat_n == 20
+    p = st.latency_percentiles()
+    # only the last 8 observations (13..20 s) survive the wraparound
+    assert p["p50_ms"] == pytest.approx(
+        float(np.percentile(np.arange(13, 21) * 1e3, 50)))
+    assert p["p99_ms"] <= 20_000.0 and p["p50_ms"] >= 13_000.0
+
+
+def test_rate_with_single_event():
+    clock = _Clock()
+    st = _stats(clock)
+    clock.t = 5.0
+    st.record_query(6)
+    # now == the only event's timestamp: span clamps to 1e-9, rate is
+    # finite (never a ZeroDivisionError)
+    assert np.isfinite(st.qps()) and st.qps() > 0
+    clock.t = 8.0
+    assert st.qps() == pytest.approx(6 / 3.0)
+    st2 = _stats(clock)
+    assert st2.qps() == 0.0                  # no events at all
+
+
+def test_padding_efficiency_tracks_fill_rows():
+    clock = _Clock()
+    st = _stats(clock)
+    assert st.padding_efficiency() == 1.0    # no batches yet
+    st.record_batch(30, 32, 0.01)
+    st.record_batch(16, 32, 0.01)
+    assert st.padding_efficiency() == pytest.approx(46 / 64)
+    snap = st.snapshot()
+    assert snap["padding_efficiency"] == pytest.approx(0.7188, abs=1e-4)
+    assert snap["recall_proxy"] is None
+    st.record_recall(0.9)
+    assert st.snapshot()["recall_proxy"] == 0.9
+    # the registry saw pad-fill rows only, not the chunk totals
+    assert st.metrics.value("serve_batch_rows_real_total",
+                            tenant="t") == 46
+    assert st.metrics.value("serve_batch_rows_padded_total",
+                            tenant="t") == 18
+
+
+def test_queue_wait_histogram_from_batcher():
+    clock = _Clock()
+    reg = MetricsRegistry()
+    calls = []
+
+    def qfn(q, k, npb):
+        calls.append(q.shape)
+        return (np.zeros((q.shape[0], k), np.int32),
+                np.zeros((q.shape[0], k), np.float32))
+
+    b = MicroBatcher(qfn, chunk_sizes=(8,), max_delay_ms=5.0, clock=clock,
+                     tenant="t", metrics=reg)
+    b.submit(np.zeros((3, 4), np.float32), k=2)
+    clock.t = 0.25                           # request waited 250 ms
+    b.flush_all()
+    h = reg.value("serve_queue_wait_s", tenant="t")
+    assert h["count"] == 1
+    assert h["sum"] == pytest.approx(0.25)
+    assert calls == [(8, 4)]
+
+
+# ---------------------------------------------------------------------------
+# invariant 8: tracing is invisible
+# ---------------------------------------------------------------------------
+
+
+def _small_index(seed=0):
+    cfg = IndexConfig(n_dims=16, n_tables=4, n_hashes=4, log2_buckets=8,
+                      bucket_capacity=32, r=4.0)
+    idx = SegmentedIndex(cfg, segment_capacity=64, insert_chunk=32,
+                         seed=seed)
+    rng = np.random.default_rng(seed)
+    g = idx.insert(rng.normal(size=(150, 16)).astype(np.float32))
+    idx.delete(g[::7])
+    return idx, rng
+
+
+def test_rate0_bit_identical_and_span_free():
+    idx, rng = _small_index()
+    q = rng.normal(size=(8, 16)).astype(np.float32)
+    base_g, base_d = map(np.asarray, idx.query(q, 5, n_probes=3))
+    tr = obs_trace.tracer()
+    tr.drain()
+    before = tr.n_spans
+    try:
+        obs_trace.configure(sample_rate=0.0, deep=True)
+        g, d = map(np.asarray, idx.query(q, 5, n_probes=3))
+    finally:
+        obs_trace.configure(sample_rate=0.0, deep=False)
+    np.testing.assert_array_equal(base_g, g)
+    np.testing.assert_array_equal(base_d, d)
+    assert tr.n_spans == before              # not one span was recorded
+
+
+def test_deep_staged_query_bit_identical_to_fused():
+    idx, rng = _small_index(seed=3)
+    q = rng.normal(size=(8, 16)).astype(np.float32)
+    base_g, base_d = map(np.asarray, idx.query(q, 5, n_probes=3))
+    tr = obs_trace.tracer()
+    tr.drain()
+    try:
+        obs_trace.configure(sample_rate=1.0, deep=True)
+        # the staged engine only runs inside a sampled trace (the batcher's
+        # batch span provides one in production)
+        with tr.span("request", tenant="t"):
+            g, d = map(np.asarray, idx.query(q, 5, n_probes=3))
+    finally:
+        obs_trace.configure(sample_rate=0.0, deep=False)
+        names = {s["name"] for s in tr.drain()}
+    np.testing.assert_array_equal(base_g, g)
+    np.testing.assert_array_equal(base_d, d)
+    # the staged engine actually ran, stage by stage
+    assert {"hash", "probe", "gather", "rerank", "merge"} <= names
+
+
+# ---------------------------------------------------------------------------
+# exporter round trip
+# ---------------------------------------------------------------------------
+
+
+def test_exporter_jsonl_and_prometheus(tmp_path):
+    reg = MetricsRegistry()
+    tr = Tracer(sample_rate=1.0, metrics=reg)
+    reg.inc("serve_queries_total", 12, tenant="t")
+    reg.observe("wal_fsync_latency_s", 0.002, tenant="t")
+    with tr.span("hash", tenant="t"):
+        pass
+    exp = obs_export.Exporter(str(tmp_path / "metrics.jsonl"),
+                              registry=reg, tracer=tr,
+                              prom_path=str(tmp_path / "metrics.prom"))
+    n = exp.flush()
+    assert n >= 4                 # 2 metric series (one is a stage
+    #                               histogram from the span) + 1 span
+    lines = [json.loads(x) for x in
+             (tmp_path / "metrics.jsonl").read_text().splitlines()]
+    metrics = [o for o in lines if o["kind"] == "metric"]
+    spans = [o for o in lines if o["kind"] == "span"]
+    assert len({o["ts"] for o in metrics}) == 1   # one shared snapshot ts
+    for o in metrics:                             # schema-is-code contract
+        spec = CATALOG[o["name"]]
+        assert o["type"] == spec.type
+        assert sorted(o["labels"]) == sorted(spec.labels)
+    assert spans and spans[0]["name"] == "hash"
+    assert spans[0]["t1"] >= spans[0]["t0"]
+    # drained: a second flush re-snapshots metrics but not old spans
+    exp.flush()
+    again = [json.loads(x) for x in
+             (tmp_path / "metrics.jsonl").read_text().splitlines()]
+    assert sum(o["kind"] == "span" for o in again) == 1
+    prom = (tmp_path / "metrics.prom").read_text()
+    assert 'serve_queries_total{tenant="t"} 12' in prom
+    assert "# TYPE wal_fsync_latency_s histogram" in prom
+    assert 'wal_fsync_latency_s_count{tenant="t"} 1' in prom
+    exp.close()
+
+
+def test_export_checker_tool_rejects_drift(tmp_path):
+    """The CI drift gate really fails on an undocumented metric name."""
+    good = {"kind": "metric", "ts": 1.0, "name": "serve_queries_total",
+            "type": "counter", "labels": {"tenant": "t"}, "value": 5}
+    bad = dict(good, name="serve_undocumented_total")
+    p = tmp_path / "metrics.jsonl"
+    p.write_text(json.dumps(good) + "\n" + json.dumps(bad) + "\n")
+    proc = subprocess.run(
+        [sys.executable, os.path.join(ROOT, "tools",
+                                      "check_metrics_export.py"),
+         str(tmp_path), "--no-spans"],
+        capture_output=True, text=True, timeout=120)
+    assert proc.returncode == 1
+    assert "undocumented metric" in proc.stderr
+
+
+# ---------------------------------------------------------------------------
+# acceptance: one sampled query on the 8-device sharded path
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_deep_trace_covers_every_stage():
+    code = """
+        import numpy as np
+        from repro.launch.mesh import make_serve_mesh
+        from repro.obs import trace as obs_trace
+        from repro.serve import ServableRegistry, ServableSpec
+
+        mesh = make_serve_mesh(8)
+        reg = ServableRegistry(mesh=mesh)
+        sv = reg.register(ServableSpec(
+            name="t8", n_dims=16, r=2.0, log2_buckets=8, bucket_capacity=64,
+            segment_capacity=64, insert_chunk=32, chunk_sizes=(128,),
+            max_delay_ms=1.0, shard_axis="serve"))
+        rng = np.random.default_rng(0)
+        for _ in range(6):                       # several sealed segments
+            sv.insert(rng.normal(size=(64, 16)).astype(np.float32))
+
+        fv = rng.normal(size=(128, len(sv.nodes())))
+        # untraced baseline over the SAME queries (fused collective)
+        q_base = np.asarray(sv.embed(fv))
+        base_g, base_d = map(np.asarray, sv.index.query(q_base, 10,
+                                                        n_probes=3))
+
+        tr = obs_trace.configure(sample_rate=1.0, deep=True)
+        tr.drain()
+        with tr.span("request", tenant="t8"):    # one trace for everything
+            q = np.asarray(sv.embed(fv))
+            fut = sv.submit_query(q, 10, n_probes=3)
+            sv.batcher.flush_all()
+            g, d = fut.result()
+        obs_trace.configure(sample_rate=0.0, deep=False)
+
+        np.testing.assert_array_equal(base_g, np.asarray(g))
+        np.testing.assert_array_equal(base_d, np.asarray(d))
+
+        spans = tr.drain()
+        assert len({s["trace_id"] for s in spans}) == 1, "one trace"
+        by = {}
+        for s in spans:
+            by.setdefault(s["name"], []).append(s)
+        for name in ("request", "admission", "embed", "batch", "hash",
+                     "probe", "gather", "rerank", "merge", "fanin"):
+            assert name in by, f"missing span {name}: {sorted(by)}"
+        root = by["request"][0]
+        sid = {s["span_id"]: s for ss in by.values() for s in ss}
+        # every span is a descendant of the request root
+        for s in spans:
+            p = s
+            while p["parent_id"] is not None:
+                p = sid[p["parent_id"]]
+            assert p is root
+        batch = by["batch"][0]
+        stages = [s for n in ("hash", "probe", "gather", "rerank",
+                              "merge", "fanin") for s in by[n]]
+        stage_s = sum(s["t1"] - s["t0"] for s in stages)
+        batch_s = batch["t1"] - batch["t0"]
+        frac = stage_s / batch_s
+        assert frac >= 0.90, f"stage spans cover {frac:.1%} of batch"
+        print(f"OK frac={frac:.3f}")
+    """
+    proc = _run(code, n_devices=8)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout
+
+
+def test_kill9_recovery_emits_recovery_spans(tmp_path):
+    wal = str(tmp_path / "wal")
+    snap = str(tmp_path / "snap")
+    crash = f"""
+        import numpy as np
+        from repro.serve import ServableRegistry, ServableSpec, faults
+        reg = ServableRegistry(wal_dir={wal!r}, fsync_every=2)
+        sv = reg.register(ServableSpec(
+            name="t", n_dims=16, r=2.0, log2_buckets=8, bucket_capacity=64,
+            segment_capacity=64, insert_chunk=32, chunk_sizes=(8, 32)))
+        rng = np.random.default_rng(0)
+        for _ in range(3):
+            sv.insert(rng.normal(size=(40, 16)).astype(np.float32))
+        reg.snapshot({snap!r}, step=1)
+        faults.install(faults.FaultPlan(("wal.append", 3, "kill")))
+        for _ in range(8):
+            sv.insert(rng.normal(size=(40, 16)).astype(np.float32))
+        raise SystemExit("unreachable: the fault plan must kill us")
+    """
+    proc = _run(crash)
+    assert proc.returncode == -signal.SIGKILL, (proc.returncode,
+                                                proc.stderr)
+    recover = f"""
+        import numpy as np
+        from repro.obs import metrics as obs_metrics
+        from repro.obs import trace as obs_trace
+        from repro.serve import ServableRegistry
+        tr = obs_trace.configure(sample_rate=1.0)
+        tr.drain()
+        reg = ServableRegistry(wal_dir={wal!r})
+        reports = reg.recover(ckpt_root={snap!r}, wal_dir={wal!r})
+        assert reports["t"]["restored_step"] == 1, reports
+        assert reports["t"]["n_records"] > 0, reports
+        names = [s["name"] for s in tr.drain()]
+        assert "recover.restore" in names, names
+        assert "recover.replay" in names, names
+        assert "ckpt.restore" in names, names
+        m = obs_metrics.registry()
+        assert m.value("recovery_restores_total", tenant="t") == 1
+        assert m.value("recovery_replayed_records_total", tenant="t") > 0
+        assert m.value("ckpt_restores_total", tenant="t") == 1
+        g, d = reg.get("t").index.query(
+            np.asarray(np.random.default_rng(1).normal(size=(4, 16)),
+                       np.float32), 5, n_probes=3)
+        assert np.asarray(g).shape == (4, 5)
+        print("OK")
+    """
+    proc = _run(recover)
+    assert proc.returncode == 0, proc.stderr
+    assert "OK" in proc.stdout

@@ -23,7 +23,11 @@ What is gated, per benchmark section:
 * every ``recovery_s*`` metric (crash-recovery wall-clock from
   ``bench_ingest_durability``) is gated like ``wall_s`` but with a tighter
   ``RECOVERY_SLACK`` -- recovery time is a product property (how long a
-  crashed serving process stays dark), not just harness overhead.
+  crashed serving process stays dark), not just harness overhead;
+* ``trace_overhead_frac`` (query-throughput cost of sampling every trace,
+  from ``bench_serve``) is gated **absolutely** at ``TRACE_OVERHEAD_MAX``
+  -- the observability contract (docs/architecture.md, invariant 8) is
+  "tracing at full sampling costs < 5%", not "no slower than last time".
 
 Metrics outside those families (throughputs, imbalance numbers, raw
 timings) are never gated and are omitted from the delta table -- keeping
@@ -51,6 +55,7 @@ RECALL_TOL = 0.02      # absolute recall drop absorbed as jitter
 WALL_RATIO = 4.0       # current wall_s may be up to 4x baseline ...
 WALL_SLACK = 20.0      # ... plus 20s flat (compile-cache cold starts)
 RECOVERY_SLACK = 5.0   # recovery_s_* gets the 4x ratio but only 5s flat
+TRACE_OVERHEAD_MAX = 0.05   # sampled tracing may cost at most 5% QPS
 
 GATED_NOTE = {"ok": "", "FAIL": "  <-- gate", "NEW": "  (not in baseline)"}
 
@@ -92,7 +97,8 @@ def compare(current: dict, baseline: dict):
             if key in ("git_sha", "us_total"):
                 continue
             gated = (("recall" in key) or ("parity" in key)
-                     or key == "wall_s" or key.startswith("recovery_s"))
+                     or key == "wall_s" or key.startswith("recovery_s")
+                     or key == "trace_overhead_frac")
             if cv is None:
                 # a *gated* metric vanishing is itself a regression: a
                 # renamed parity flag must not silently stop being checked
@@ -115,6 +121,13 @@ def compare(current: dict, baseline: dict):
                     status = "FAIL"
                     failures.append(f"{name}/{key}: parity was true in "
                                     f"baseline, now {cv!r}")
+            elif key == "trace_overhead_frac":
+                if cv > TRACE_OVERHEAD_MAX:
+                    status = "FAIL"
+                    failures.append(
+                        f"{name}/{key}: full-sampling tracing costs "
+                        f"{cv:.1%} of query throughput (absolute limit "
+                        f"{TRACE_OVERHEAD_MAX:.0%})")
             elif key == "wall_s" or key.startswith("recovery_s"):
                 slack = WALL_SLACK if key == "wall_s" else RECOVERY_SLACK
                 limit = bv * WALL_RATIO + slack
