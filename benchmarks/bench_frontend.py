@@ -1,0 +1,298 @@
+"""Closed-loop load generator for the network serving front-end.
+
+Measures the paper's serving stack end to end **through a real server
+process** (``launch/serve --listen``) -- sockets, admission control, the
+wall-clock micro-batcher -- instead of in-process calls:
+
+1. **Latency/goodput vs offered concurrency** -- N closed-loop client
+   streams (one connection each, next request only after the previous
+   answer) sweep N over ``CONCURRENCY``; per level we report p50/p99
+   request latency and goodput (answered requests/s).  Cross-connection
+   coalescing is the whole point of the front-end batcher, so goodput
+   should grow sublinearly in latency as N rises.
+2. **query_parity** -- every answer in the sweep is compared bitwise to a
+   direct in-process registry built from the same ``default_specs`` and
+   insert order (invariant 9: the network layer is invisible).  Gated by
+   ``tools/check_bench_regression.py`` like every parity flag.
+3. **Overload backpressure** -- a second server with tiny quotas takes a
+   deliberate storm; ``reject_rate`` says how much was shed and
+   ``overload_ok`` (gated) says every shed request got a structured,
+   retryable rejection rather than a dropped connection.
+4. **Graceful drain** -- SIGTERM lands mid-traffic; ``drain_ok`` (gated)
+   requires exit code 0 and the server's own drain ledger to show
+   ``settled == admitted`` (no accepted request lost).
+
+REPRO_BENCH_SMOKE=1 shrinks the sweep for CI.  Run standalone with
+``python -m benchmarks.bench_frontend [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import signal
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+
+from repro.launch.serve import default_specs
+from repro.serve import ServableRegistry
+from repro.serve.client import FrontendClient, wait_ready
+
+from .bench_query_engine import smoke_mode
+from .common import write_csv
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HOST = "127.0.0.1"
+N_DIMS = 32
+SEG_CAP = 1024
+TENANT = "l2-basis"
+K = 10
+N_PROBES = 2
+
+
+def _env():
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=1"
+    return env
+
+
+class _Server:
+    """A ``launch/serve --listen`` subprocess (same harness as
+    ``tests/test_frontend.py``, duplicated to keep benchmarks importable
+    without the test tree)."""
+
+    def __init__(self, *extra, timeout_s=180):
+        self.proc = subprocess.Popen(
+            [sys.executable, "-m", "repro.launch.serve",
+             "--listen", f"{HOST}:0", "--n-dims", str(N_DIMS),
+             "--segment-capacity", str(SEG_CAP), *extra],
+            stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True, env=_env())
+        self.lines = []
+        self._reader = threading.Thread(target=self._read, daemon=True)
+        self._reader.start()
+        deadline = time.monotonic() + timeout_s
+        self.port = None
+        while time.monotonic() < deadline and self.port is None:
+            for ln in list(self.lines):
+                m = re.search(r"listening on [\d.]+:(\d+)", ln)
+                if m:
+                    self.port = int(m.group(1))
+                    break
+            if self.proc.poll() is not None:
+                raise RuntimeError("server died during startup:\n"
+                                   + self.proc.stderr.read())
+            time.sleep(0.05)
+        if self.port is None:
+            raise TimeoutError(f"no listening line in {timeout_s}s")
+        wait_ready(HOST, self.port, timeout_s=timeout_s)
+
+    def _read(self):
+        for line in self.proc.stdout:
+            self.lines.append(line.rstrip("\n"))
+
+    def client(self):
+        return FrontendClient(HOST, self.port, timeout_s=120.0)
+
+    def stop(self):
+        if self.proc.poll() is None:
+            self.proc.send_signal(signal.SIGTERM)
+        rc = self.proc.wait(timeout=120)
+        self._reader.join(timeout=5)
+        return rc
+
+    def kill(self):
+        if self.proc.poll() is None:
+            self.proc.kill()
+            self.proc.wait(timeout=30)
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs, np.float64), q))
+
+
+def run(seed: int = 0, out_csv: str = "experiments/frontend_load.csv"
+        ) -> dict:
+    smoke = smoke_mode()
+    concurrency = (1, 4) if smoke else (1, 4, 16)
+    reqs_per_stream = 20 if smoke else 120
+    n_corpus = 512 if smoke else 4096
+    rng = np.random.default_rng(seed)
+    corpus = rng.normal(size=(n_corpus, N_DIMS)).astype(np.float32)
+
+    results, rows = {}, []
+    srv = _Server("--max-delay-ms", "2")
+    try:
+        with srv.client() as c:
+            for i in range(0, n_corpus, 256):
+                c.insert(TENANT, corpus[i:i + 256])
+            c.query_arrays(TENANT, corpus[:8], K,
+                           n_probes=N_PROBES)          # warm the jit
+
+        # the parity oracle: same specs, same rows, same order
+        reg = ServableRegistry()
+        for spec in default_specs(n_dims=N_DIMS, segment_capacity=SEG_CAP):
+            reg.register(spec)
+        for i in range(0, n_corpus, 256):
+            reg.get(TENANT).insert(corpus[i:i + 256])
+
+        parity = True
+        for n_streams in concurrency:
+            lat_ms, answered, bad = [], [0], [False]
+            lock = threading.Lock()
+
+            def stream(sid, n_streams=n_streams):
+                srng = np.random.default_rng(1000 + sid)
+                mine = []
+                with srv.client() as c:
+                    for _ in range(reqs_per_stream):
+                        q = corpus[srng.integers(0, n_corpus, size=4)] \
+                            + srng.normal(scale=0.05, size=(4, N_DIMS)
+                                          ).astype(np.float32)
+                        t0 = time.perf_counter()
+                        ids, dists = c.query_arrays(TENANT, q, K,
+                                                    n_probes=N_PROBES)
+                        mine.append((time.perf_counter() - t0) * 1e3)
+                        wi, wd = reg.get(TENANT).index.query(
+                            q, K, n_probes=N_PROBES)
+                        if not (np.array_equal(np.asarray(wi), ids)
+                                and np.array_equal(
+                                    np.asarray(wd, np.float32), dists)):
+                            bad[0] = True
+                with lock:
+                    lat_ms.extend(mine)
+                    answered[0] += len(mine)
+
+            threads = [threading.Thread(target=stream, args=(s,))
+                       for s in range(n_streams)]
+            t0 = time.perf_counter()
+            for th in threads:
+                th.start()
+            for th in threads:
+                th.join()
+            dt = time.perf_counter() - t0
+            parity &= not bad[0]
+            p50, p99 = _percentile(lat_ms, 50), _percentile(lat_ms, 99)
+            goodput = answered[0] / dt
+            results[f"p50_ms_c{n_streams}"] = round(p50, 3)
+            results[f"p99_ms_c{n_streams}"] = round(p99, 3)
+            results[f"goodput_rps_c{n_streams}"] = round(goodput, 1)
+            rows.append(("sweep", n_streams, answered[0], round(p50, 3),
+                         round(p99, 3), round(goodput, 1), ""))
+        results["query_parity"] = parity
+        results["n_requests"] = sum(reqs_per_stream * c
+                                    for c in concurrency)
+
+        # -- graceful drain under live traffic ------------------------------
+        stop = threading.Event()
+        drain_errors = []
+
+        def drainer(sid):
+            srng = np.random.default_rng(2000 + sid)
+            try:
+                with srv.client() as c:
+                    while True:
+                        q = corpus[srng.integers(0, n_corpus, size=4)]
+                        r = c.query(TENANT, q, K, n_probes=N_PROBES)
+                        if not r.get("ok"):
+                            if r["code"] != "shutting_down":
+                                drain_errors.append(r)
+                            return
+            except Exception as e:                     # noqa: BLE001
+                drain_errors.append(repr(e))
+
+        dthreads = [threading.Thread(target=drainer, args=(s,))
+                    for s in range(3)]
+        for th in dthreads:
+            th.start()
+        time.sleep(0.5)
+        srv.proc.send_signal(signal.SIGTERM)
+        for th in dthreads:
+            th.join(timeout=60)
+        rc = srv.stop()
+        m = None
+        for ln in srv.lines:
+            m = re.search(r"admitted=(\d+) settled=(\d+) rejected=(\d+) "
+                          r"inflight=(\d+)", ln) or m
+        drain_ok = (rc == 0 and not drain_errors and m is not None
+                    and m.group(1) == m.group(2) and m.group(4) == "0")
+        results["drain_ok"] = bool(drain_ok)
+        rows.append(("drain", 3, int(m.group(1)) if m else -1, "", "",
+                     "", rc))
+    finally:
+        srv.kill()
+
+    # -- overload backpressure on a tiny-quota server ------------------------
+    srv2 = _Server("--max-inflight", "2", "--queue-depth", "2",
+                   "--max-delay-ms", "20")
+    try:
+        with srv2.client() as c:
+            c.insert(TENANT, corpus[:256])
+            c.query_arrays(TENANT, corpus[:8], K, n_probes=N_PROBES)
+        oks, rejects = [0], []
+        lock = threading.Lock()
+
+        def blast(sid):
+            srng = np.random.default_rng(3000 + sid)
+            with srv2.client() as c:
+                for _ in range(reqs_per_stream // 2):
+                    q = corpus[srng.integers(0, 256, size=8)]
+                    r = c.query(TENANT, q, K, n_probes=N_PROBES)
+                    with lock:
+                        if r.get("ok"):
+                            oks[0] += 1
+                        else:
+                            rejects.append(r)
+
+        bthreads = [threading.Thread(target=blast, args=(s,))
+                    for s in range(8)]
+        for th in bthreads:
+            th.start()
+        for th in bthreads:
+            th.join()
+        total = oks[0] + len(rejects)
+        overload_ok = (len(rejects) > 0
+                       and all(r.get("code") in ("overloaded", "queue_full")
+                               for r in rejects)
+                       and all(r.get("retry_after_ms", 0) > 0
+                               for r in rejects))
+        results["reject_rate"] = round(len(rejects) / total, 3)
+        results["overload_ok"] = bool(overload_ok)
+        rows.append(("overload", 8, total, "", "",
+                     round(len(rejects) / total, 3), ""))
+    finally:
+        srv2.kill()
+
+    write_csv(out_csv,
+              "phase,streams,n_requests,p50_ms,p99_ms,goodput_or_reject,"
+              "exit_code", rows)
+    # the gates, asserted here too so a standalone run fails loudly
+    assert parity, "wire answers diverged from the direct index"
+    assert results["drain_ok"], "graceful drain lost accepted requests"
+    assert results["overload_ok"], "overload produced non-structured rejects"
+    return results
+
+
+if __name__ == "__main__":
+    if "--smoke" in sys.argv:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    t0 = time.perf_counter()
+    res = run()
+    wall = time.perf_counter() - t0
+    print(res)
+    if "--json" in sys.argv:
+        # standalone gate-able results file (CI runs this on both matrix
+        # legs, then `check_bench_regression.py --only frontend` on it);
+        # wall_s stamped here because benchmarks.run normally adds it
+        import json
+
+        res = {**res, "wall_s": round(wall, 3),
+               "us_total": round(wall * 1e6)}
+        path = sys.argv[sys.argv.index("--json") + 1]
+        with open(path, "w") as f:
+            json.dump({"frontend": res}, f, indent=2, sort_keys=True)

@@ -1,6 +1,14 @@
 """Streaming serve launcher: the multi-tenant LSH front end, live.
 
     python -m repro.launch.serve --steps 60 --insert-batch 64 --query-batch 8
+    python -m repro.launch.serve --listen 127.0.0.1:0 --max-inflight 64
+
+Two modes share one registry setup (register / restore / recover, mesh,
+WAL, telemetry): the scripted demo below, and ``--listen HOST:PORT`` which
+hands the registry to the network front-end (``repro.serve.frontend``) and
+serves real concurrent traffic -- per-tenant admission control
+(``--max-inflight``, ``--queue-depth``), wall-clock micro-batch deadlines
+(``--max-delay-ms``), and graceful drain on SIGTERM (``--drain-timeout``).
 
 Drives the repro.serve stack end to end with synthetic traffic:
 
@@ -51,6 +59,28 @@ import argparse
 import os
 
 
+def default_specs(n_dims=64, segment_capacity=1024, shard_axis=None,
+                  replicate="none", max_delay_ms=2.0):
+    """The launcher's three-tenant deployment, importable by tests and the
+    front-end load generator so the live server and a direct in-process
+    registry are built from *the same specs* (the wire-parity tests depend
+    on that).  Covers the paper's family: l2-basis (p=2, Eq. 3), l1-qmc
+    (p=1, Eq. 6), w2-quantile (W^2 over distributions, Remark 1)."""
+    from ..serve import ServableSpec
+
+    common = dict(n_dims=n_dims, segment_capacity=segment_capacity,
+                  chunk_sizes=(8, 32, 128), max_delay_ms=max_delay_ms,
+                  shard_axis=shard_axis, replication=replicate)
+    return (
+        ServableSpec(name="l2-basis", p=2.0, r=4.0, embedder="basis",
+                     **common),
+        ServableSpec(name="l1-qmc", p=1.0, r=8.0, embedder="qmc",
+                     **common),
+        ServableSpec(name="w2-quantile", p=2.0, r=0.5,
+                     embedder="wasserstein", **common),
+    )
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=60)
@@ -99,6 +129,24 @@ def main():
                          "many steps (0 = only the final probe)")
     ap.add_argument("--recall-probe-size", type=int, default=16,
                     help="queries per periodic recall probe")
+    ap.add_argument("--listen", default=None, metavar="HOST:PORT",
+                    help="serve live traffic instead of the scripted "
+                         "demo: bind the async front-end here (port 0 "
+                         "picks a free port; the bound address is printed "
+                         "as '[frontend] listening on H:P') and run until "
+                         "SIGTERM, then drain gracefully")
+    ap.add_argument("--max-inflight", type=int, default=64,
+                    help="per-tenant admitted-but-unanswered request "
+                         "quota (front-end admission control)")
+    ap.add_argument("--queue-depth", type=int, default=256,
+                    help="per-tenant batcher queue-depth cap sampled at "
+                         "admission (requests beyond it are rejected "
+                         "with queue_full + retry_after_ms)")
+    ap.add_argument("--max-delay-ms", type=float, default=2.0,
+                    help="micro-batcher flush deadline per tenant")
+    ap.add_argument("--drain-timeout", type=float, default=10.0,
+                    help="graceful-drain backstop on SIGTERM/unload "
+                         "(seconds)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -113,7 +161,7 @@ def main():
     import numpy as np
 
     from ..obs import Exporter, configure as obs_configure
-    from ..serve import ServableRegistry, ServableSpec, recall_proxy
+    from ..serve import ServableRegistry, recall_proxy, run_server
     from ..serve.stats import occupancy_report
     from .mesh import make_serve_mesh
 
@@ -156,25 +204,29 @@ def main():
                 registry.get(name).index.shard(mesh, shard_axis)
         print(f"[serve] restored tenants {names} from {args.restore}")
     else:
-        for spec in (
-            ServableSpec(name="l2-basis", n_dims=args.n_dims, p=2.0, r=4.0,
-                         embedder="basis",
-                         segment_capacity=args.segment_capacity,
-                         chunk_sizes=(8, 32, 128), max_delay_ms=2.0,
-                         shard_axis=shard_axis, replication=args.replicate),
-            ServableSpec(name="l1-qmc", n_dims=args.n_dims, p=1.0, r=8.0,
-                         embedder="qmc",
-                         segment_capacity=args.segment_capacity,
-                         chunk_sizes=(8, 32, 128), max_delay_ms=2.0,
-                         shard_axis=shard_axis, replication=args.replicate),
-            ServableSpec(name="w2-quantile", n_dims=args.n_dims, p=2.0,
-                         r=0.5, embedder="wasserstein",
-                         segment_capacity=args.segment_capacity,
-                         chunk_sizes=(8, 32, 128), max_delay_ms=2.0,
-                         shard_axis=shard_axis, replication=args.replicate),
-        ):
+        for spec in default_specs(n_dims=args.n_dims,
+                                  segment_capacity=args.segment_capacity,
+                                  shard_axis=shard_axis,
+                                  replicate=args.replicate,
+                                  max_delay_ms=args.max_delay_ms):
             registry.register(spec)
         print(f"[serve] registered tenants {registry.names()}")
+
+    if args.listen:
+        # traffic-driven mode: hand the populated registry to the async
+        # front-end and serve until SIGTERM, then drain gracefully
+        host, _, port_s = args.listen.rpartition(":")
+        host = host or "127.0.0.1"
+        run_server(registry, host, int(port_s or 0),
+                   max_inflight=args.max_inflight,
+                   queue_depth=args.queue_depth,
+                   drain_timeout_s=args.drain_timeout,
+                   exporter=exporter)
+        if exporter is not None:
+            exporter.close()
+            print(f"[serve] telemetry -> {args.metrics_dir}")
+        print("[serve] OK")
+        return
 
     def sample_fvals(sv, n):
         """Per-tenant synthetic inputs for ``Servable.embed``.

@@ -144,6 +144,34 @@ CATALOG: Dict[str, MetricSpec] = _catalog(
                ("tenant",)),
     MetricSpec("faults_fired_total", "counter",
                "Injected faults triggered (raise-action only)", ("site",)),
+    # -- serving front-end (serve/frontend.py) ---------------------------
+    # Situational (required=False): these series only exist when a network
+    # front-end is live; the standard telemetry smoke is library-driven.
+    MetricSpec("frontend_requests_total", "counter",
+               "Wire requests received per tenant and op",
+               ("tenant", "op")),
+    MetricSpec("frontend_rejects_total", "counter",
+               "Admission rejections (explicit backpressure) per tenant "
+               "and reason", ("tenant", "reason")),
+    MetricSpec("frontend_inflight", "gauge",
+               "Admitted-but-unanswered requests per tenant",
+               ("tenant",)),
+    MetricSpec("frontend_queue_depth", "gauge",
+               "Tenant batcher queue depth sampled at admission",
+               ("tenant",)),
+    MetricSpec("frontend_request_latency_s", "histogram",
+               "Admission-to-response wire request latency", ("tenant",)),
+    MetricSpec("frontend_deadline_expired_total", "counter",
+               "Admitted requests whose deadline passed before the answer",
+               ("tenant",)),
+    MetricSpec("frontend_drained_requests_total", "counter",
+               "Accepted requests answered while draining toward "
+               "unload/shutdown", ("tenant",)),
+    MetricSpec("frontend_connections_total", "counter",
+               "Client connections accepted"),
+    MetricSpec("tenant_lifecycle_transitions_total", "counter",
+               "Servable lifecycle transitions (loading/ready/draining/"
+               "unloaded/updated)", ("tenant", "state")),
 )
 
 

@@ -57,11 +57,12 @@ _ENV_DEEP = "REPRO_TRACE_DEEP"
 #: Span names that feed the ``serve_stage_latency_s{tenant,stage}``
 #: histogram (the stage taxonomy -- see docs/architecture.md).
 STAGE_SPANS = frozenset({
-    "admission", "embed", "batch",
+    "request", "admission", "embed", "batch",
     "hash", "probe", "gather", "rerank", "merge", "fanin",
     "query.segments", "query.collective",
     "wal.append", "wal.fsync", "seal", "compact",
     "ckpt.save", "ckpt.restore", "recover.restore", "recover.replay",
+    "tenant.load", "tenant.unload", "tenant.update",
 })
 
 

@@ -26,6 +26,15 @@ Layering (each module usable alone):
   faults   -- FaultPlan / InjectedFault: deterministic fault injection at
               named crash points (wal.append, wal.fsync, ckpt.rename,
               seal, snapshot) for the crash-recovery test harness
+  protocol -- newline-delimited JSON wire framing + structured
+              backpressure codes for the network front-end
+  frontend -- Frontend / RequestGate / run_server: the asyncio server
+              process -- per-tenant admission control (in-flight quota,
+              queue-depth cap, deadlines), servable lifecycle
+              (load/unload/update with drain), health/stats endpoints;
+              ``launch/serve --listen`` runs it
+  client   -- FrontendClient / wait_ready: blocking client library used
+              by the live-traffic tests and the load generator
 
 ``python -m repro.launch.serve`` drives the whole stack;
 ``benchmarks/bench_serve.py`` and ``benchmarks/bench_ingest_durability.py``
@@ -33,7 +42,9 @@ measure it.
 """
 
 from .batcher import MicroBatcher
+from .client import FrontendClient, FrontendError, wait_ready
 from .faults import FaultPlan, FaultSpec, InjectedFault
+from .frontend import Frontend, RequestGate, run_server
 from .registry import Servable, ServableRegistry, ServableSpec
 from .router import QueryRouter, RoutePlan, auto_factors
 from .segments import Segment, SegmentedIndex
@@ -43,9 +54,13 @@ from .wal import WalRecord, WriteAheadLog, read_wal
 __all__ = [
     "FaultPlan",
     "FaultSpec",
+    "Frontend",
+    "FrontendClient",
+    "FrontendError",
     "InjectedFault",
     "MicroBatcher",
     "QueryRouter",
+    "RequestGate",
     "RoutePlan",
     "Segment",
     "SegmentedIndex",
@@ -59,4 +74,6 @@ __all__ = [
     "occupancy_report",
     "read_wal",
     "recall_proxy",
+    "run_server",
+    "wait_ready",
 ]

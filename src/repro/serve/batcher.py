@@ -25,6 +25,18 @@ and returns a Future; ``pump`` (called by the loop thread, or manually in
 tests with an injected clock) decides flushes.  ``flush_all`` drains
 everything regardless of deadlines.
 
+Two clock modes share the one code path:
+
+* **injected clock** (tests, benches): construct with ``clock=sim`` and
+  call ``pump(now)`` manually -- fully deterministic, no threads;
+* **wall clock** (the serving front-end): ``start()`` runs a pump thread
+  that sleeps *exactly until the earliest pending deadline* (condition
+  wait, woken early by ``submit``), so flush timing tracks real deadlines
+  instead of a fixed polling tick.  The flush decision logic is the same
+  ``pump`` either way -- the wall-clock mode adds scheduling, never
+  different batching, so the injected-clock path stays bit-identical
+  (guarded by ``tests/test_frontend_admission.py``).
+
 Observability: ``submit`` is where a request's *trace* begins -- it captures
 the ambient trace context (or mints one at the sampling rate) into the
 pending entry, and ``_dispatch`` re-attaches the first sampled request's
@@ -240,21 +252,40 @@ class MicroBatcher:
             self._thread = None
         self.flush_all()
 
+    def _wait_s(self) -> Optional[float]:
+        """Seconds until the earliest flush obligation (callers hold the
+        lock): None = queue empty (park until a submit), 0.0 = flush now
+        (a signature filled a max chunk or its oldest deadline passed)."""
+        max_chunk = self.chunk_sizes[-1]
+        now = self.clock()
+        best: Optional[float] = None
+        for reqs in self._q.values():
+            if not reqs:
+                continue
+            if sum(r.queries.shape[0] for r in reqs) >= max_chunk:
+                return 0.0
+            dt = reqs[0].deadline - now
+            best = dt if best is None else min(best, dt)
+        return None if best is None else max(best, 0.0)
+
     def _loop(self) -> None:
-        tick = max(self.max_delay / 4, 1e-4)
         while True:
             with self._wake:
                 if self._stop:
                     return
-                if not any(self._q.values()):
+                wait = self._wait_s()
+                if wait is None:
                     self._wake.wait(timeout=0.05)
+                elif wait > 0.0:
+                    self._wake.wait(timeout=wait)
+                if self._stop:
+                    return
             try:
                 self.pump()
             except Exception:
                 # _dispatch already routed the error to the affected
                 # futures; the pump thread must survive to serve the rest
                 pass
-            time.sleep(tick)
 
     # -- introspection ------------------------------------------------------
 

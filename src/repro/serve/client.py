@@ -1,0 +1,189 @@
+"""Blocking client library for the serving front-end.
+
+One :class:`FrontendClient` wraps one TCP connection speaking
+:mod:`repro.serve.protocol` in closed-loop, request/response order.  The
+server batches *across* connections, so a load generator opens one client
+per concurrent stream (``benchmarks/bench_frontend.py`` does exactly
+that) -- a single client never sees its own requests coalesced.
+
+Error handling is two-layered on purpose:
+
+* :meth:`request` returns the raw response dict, rejections included --
+  load generators and tests inspect ``ok`` / ``code`` / ``retry_after_ms``
+  themselves to *count* backpressure instead of crashing on it;
+* the typed convenience wrappers (:meth:`query_arrays`, :meth:`insert`,
+  ...) raise :class:`FrontendError` on any non-ok response -- application
+  code that considers a reject exceptional gets an exception carrying the
+  structured code.
+
+Thread-safe per instance (one lock around the write/read pair); arrays
+convert to/from JSON lists losslessly for float32 payloads, preserving
+the wire-parity contract (invariant 9).
+"""
+
+from __future__ import annotations
+
+import itertools
+import socket
+import threading
+import time
+from typing import Optional, Tuple
+
+import numpy as np
+
+from . import protocol
+
+
+class FrontendError(RuntimeError):
+    """A non-ok response, carrying the protocol's structured fields."""
+
+    def __init__(self, resp: dict):
+        super().__init__(f"[{resp.get('code')}] {resp.get('error')}")
+        self.code = resp.get("code")
+        self.retry_after_ms = resp.get("retry_after_ms")
+        self.response = resp
+
+
+class FrontendClient:
+    """One connection to a front-end server.
+
+    Args:
+        host / port: where the server printed
+            ``[frontend] listening on H:P``.
+        timeout_s: socket timeout for connect and each response read.
+    """
+
+    def __init__(self, host: str, port: int, timeout_s: float = 30.0):
+        self._sock = socket.create_connection((host, port),
+                                              timeout=timeout_s)
+        self._f = self._sock.makefile("rwb")
+        self._ids = itertools.count(1)
+        self._lock = threading.Lock()
+
+    # -- transport ----------------------------------------------------------
+
+    def request(self, op: str, **fields) -> dict:
+        """Send one request, read its response (raw dict, rejects and
+        all).  Raises ConnectionError if the server hung up mid-request --
+        which graceful drain guarantees never happens to an *accepted*
+        request."""
+        req_id = next(self._ids)
+        msg = {"id": req_id, "op": op, **fields}
+        with self._lock:
+            self._f.write(protocol.encode(msg))
+            self._f.flush()
+            line = self._f.readline()
+        if not line:
+            raise ConnectionError(
+                f"server closed the connection awaiting response {req_id}")
+        resp = protocol.decode_line(line)
+        if resp.get("id") not in (req_id, None):
+            raise ConnectionError(
+                f"response id {resp.get('id')} for request {req_id}")
+        return resp
+
+    def _checked(self, op: str, **fields) -> dict:
+        resp = self.request(op, **fields)
+        if not resp.get("ok"):
+            raise FrontendError(resp)
+        return resp
+
+    def close(self) -> None:
+        try:
+            self._f.close()
+        finally:
+            self._sock.close()
+
+    def __enter__(self) -> "FrontendClient":
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- data plane ---------------------------------------------------------
+
+    def query(self, tenant: str, queries, k: int, n_probes: int = 1,
+              timeout_ms: Optional[float] = None) -> dict:
+        """Raw query response (inspect ``ok``/``code`` yourself)."""
+        fields = {"tenant": tenant,
+                  "queries": np.asarray(queries,
+                                        np.float32).tolist(),
+                  "k": int(k), "n_probes": int(n_probes)}
+        if timeout_ms is not None:
+            fields["timeout_ms"] = float(timeout_ms)
+        return self.request("query", **fields)
+
+    def query_arrays(self, tenant: str, queries, k: int,
+                     n_probes: int = 1,
+                     timeout_ms: Optional[float] = None
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Query -> (gids (nq, k) int32, dists (nq, k) float32); raises
+        FrontendError on rejection.  The returned arrays are bit-identical
+        to a direct ``SegmentedIndex.query`` against the same state."""
+        resp = self.query(tenant, queries, k, n_probes=n_probes,
+                          timeout_ms=timeout_ms)
+        if not resp.get("ok"):
+            raise FrontendError(resp)
+        return (np.asarray(resp["gids"], np.int32),
+                np.asarray(resp["dists"], np.float32))
+
+    def insert(self, tenant: str, embeddings, gids=None) -> np.ndarray:
+        fields = {"tenant": tenant,
+                  "embeddings": np.asarray(embeddings,
+                                           np.float32).tolist()}
+        if gids is not None:
+            fields["gids"] = np.asarray(gids, np.int32).tolist()
+        resp = self._checked("insert", **fields)
+        return np.asarray(resp["gids"], np.int32)
+
+    def delete(self, tenant: str, gids) -> int:
+        resp = self._checked("delete", tenant=tenant,
+                             gids=np.asarray(gids, np.int32).tolist())
+        return int(resp["n_deleted"])
+
+    def embed(self, tenant: str, fvals) -> np.ndarray:
+        resp = self._checked("embed", tenant=tenant,
+                             fvals=np.asarray(fvals,
+                                              np.float64).tolist())
+        return np.asarray(resp["embeddings"], np.float32)
+
+    def compact(self, tenant: str) -> int:
+        return int(self._checked("compact", tenant=tenant)["n_live"])
+
+    # -- control plane ------------------------------------------------------
+
+    def load(self, spec: dict) -> dict:
+        return self._checked("load", spec=spec)
+
+    def unload(self, tenant: str) -> dict:
+        return self._checked("unload", tenant=tenant)
+
+    def update(self, spec: dict) -> dict:
+        return self._checked("update", spec=spec)
+
+    def health(self) -> dict:
+        return self._checked("health")
+
+    def stats(self, tenant: Optional[str] = None) -> dict:
+        if tenant is None:
+            return self._checked("stats")
+        return self._checked("stats", tenant=tenant)
+
+
+def wait_ready(host: str, port: int, timeout_s: float = 30.0,
+               interval_s: float = 0.1) -> None:
+    """Poll until the server accepts connections and answers ``health``
+    (used after parsing the listening line, before traffic starts)."""
+    deadline = time.monotonic() + timeout_s
+    last: Optional[Exception] = None
+    while time.monotonic() < deadline:
+        try:
+            with FrontendClient(host, port, timeout_s=5.0) as c:
+                c.health()
+            return
+        except (OSError, FrontendError, ValueError) as e:
+            last = e
+            time.sleep(interval_s)
+    raise TimeoutError(
+        f"front-end at {host}:{port} not ready in {timeout_s}s: {last}")

@@ -131,7 +131,8 @@ def _spec_from_manifest(raw: Dict[str, Any]) -> ServableSpec:
     """
     known = {f.name for f in dataclasses.fields(ServableSpec)}
     kw = {k: v for k, v in raw.items() if k in known}
-    kw["chunk_sizes"] = tuple(kw["chunk_sizes"])
+    if "chunk_sizes" in kw:
+        kw["chunk_sizes"] = tuple(kw["chunk_sizes"])
     return ServableSpec(**kw)
 
 
@@ -339,6 +340,24 @@ class ServableRegistry:
         except KeyError:
             raise KeyError(f"no servable {name!r}; have {self.names()}")
 
+    def log_lifecycle(self, name: str, state: str) -> None:
+        """Append a LIFECYCLE audit record to the tenant's WAL and count
+        the transition (``tenant_lifecycle_transitions_total``).
+
+        No-op on the index at replay time; the one state recovery *acts*
+        on is a trailing "unloaded", which marks the tenant as cleanly
+        detached (``recover`` skips it instead of resurrecting it).
+        Fsync'd immediately -- lifecycle transitions are rare and an
+        unloaded tenant must not come back because its record was still
+        in the group-commit window when the process died."""
+        obs_metrics.registry().inc("tenant_lifecycle_transitions_total",
+                                   tenant=name, state=state)
+        sv = self._servables.get(name)
+        wal = sv.index.wal if sv is not None else None
+        if wal is not None:
+            wal.append(walmod.encode_lifecycle(state))
+            wal.sync()
+
     def unregister(self, name: str) -> None:
         with self._lock:
             sv = self._servables.pop(name, None)
@@ -511,6 +530,15 @@ class ServableRegistry:
         reports: Dict[str, dict] = {}
         for name in sorted(names):
             report: dict = {"restored_step": None, "corrupt_steps": []}
+            wpath0 = (os.path.join(wal_dir, f"{name}.wal")
+                      if wal_dir else None)
+            if wpath0 is not None and os.path.exists(wpath0) and \
+                    walmod.read_last_lifecycle(wpath0) == "unloaded":
+                # the log ends in a clean unload: the tenant was detached
+                # on purpose, not lost in the crash -- keep the WAL as an
+                # audit trail but do not resurrect the endpoint
+                reports[name] = dict(report, skipped="unloaded")
+                continue
             sv = None
             offset = 0
             tdir = (os.path.join(ckpt_root, name)

@@ -324,7 +324,8 @@ class SegmentedIndex:
                         self.compact()
                     elif rec.op == walmod.OP_SET_REPLICATION:
                         self.set_replication(rec.value)
-                    elif rec.op == walmod.OP_REGISTER:
+                    elif rec.op in (walmod.OP_REGISTER,
+                                    walmod.OP_LIFECYCLE):
                         pass               # registry-level; nothing to apply
                     report["applied"] += 1
             finally:

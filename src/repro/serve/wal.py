@@ -20,6 +20,8 @@ Record framing (little-endian)::
     op 3 SEAL             body = empty
     op 4 COMPACT          body = empty
     op 5 SET_REPLICATION  body = JSON policy (null | int | [int, ...])
+    op 6 LIFECYCLE        body = JSON {"state": "loading" | "ready" |
+                                 "draining" | "unloaded" | "updated"}
 
 ``crc32`` covers the payload, so replay (:func:`read_wal`) detects both a
 **truncated tail** (the crash landed mid-append: fewer bytes on disk than
@@ -67,10 +69,16 @@ OP_DELETE = 2
 OP_SEAL = 3
 OP_COMPACT = 4
 OP_SET_REPLICATION = 5
+OP_LIFECYCLE = 6
 
 OP_NAMES = {OP_REGISTER: "register", OP_INSERT: "insert",
             OP_DELETE: "delete", OP_SEAL: "seal", OP_COMPACT: "compact",
-            OP_SET_REPLICATION: "set_replication"}
+            OP_SET_REPLICATION: "set_replication",
+            OP_LIFECYCLE: "lifecycle"}
+
+#: Servable lifecycle states a LIFECYCLE record may carry (the audit trail
+#: of the front-end's load/unload/update flow -- see serve/frontend.py).
+LIFECYCLE_STATES = ("loading", "ready", "draining", "unloaded", "updated")
 
 
 @dataclasses.dataclass
@@ -121,6 +129,21 @@ def encode_set_replication(policy) -> bytes:
     return bytes([OP_SET_REPLICATION]) + json.dumps(policy).encode()
 
 
+def encode_lifecycle(state: str) -> bytes:
+    """Servable lifecycle transition (load/unload/update audit trail).
+
+    Replay treats lifecycle records as no-ops on the index -- they exist so
+    recovery can tell a *cleanly unloaded* tenant (last state "unloaded")
+    from a crashed one, and so the WAL is a complete audit of the tenant's
+    serving history, not just its data mutations.
+    """
+    if state not in LIFECYCLE_STATES:
+        raise ValueError(
+            f"lifecycle state must be one of {LIFECYCLE_STATES}, "
+            f"got {state!r}")
+    return bytes([OP_LIFECYCLE]) + json.dumps({"state": state}).encode()
+
+
 def decode_payload(payload: bytes) -> WalRecord:
     """Decode one payload; raises ValueError on a malformed body (treated
     by :func:`read_wal` like a crc failure: the frame is bad)."""
@@ -152,7 +175,7 @@ def decode_payload(payload: bytes) -> WalRecord:
         if body:
             raise ValueError(f"{OP_NAMES[op]} body must be empty")
         return WalRecord(op)
-    if op in (OP_REGISTER, OP_SET_REPLICATION):
+    if op in (OP_REGISTER, OP_SET_REPLICATION, OP_LIFECYCLE):
         return WalRecord(op, value=json.loads(body.decode()))
     raise ValueError(f"unknown op {op}")
 
@@ -311,6 +334,23 @@ def read_wal(path: str, start: int = 0
             report["n_records"] += 1
             report["end_offset"] = off
     return records, report
+
+
+def read_last_lifecycle(path: str) -> Optional[str]:
+    """The last LIFECYCLE record's state (None if the log has none, or
+    does not exist).
+
+    ``ServableRegistry.recover`` consults this to skip tenants whose log
+    ends in a clean "unloaded" -- an unloaded tenant's WAL is kept as an
+    audit trail, but recovery must not resurrect the endpoint."""
+    if not os.path.exists(path):
+        return None
+    records, _ = read_wal(path)
+    state = None
+    for rec in records:
+        if rec.op == OP_LIFECYCLE:
+            state = rec.value.get("state")
+    return state
 
 
 def read_spec(path: str) -> Optional[dict]:

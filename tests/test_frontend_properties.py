@@ -1,0 +1,148 @@
+"""Property tests for the front-end's admission invariants.
+
+Hypothesis drives random interleavings of admit / settle / drain /
+lifecycle events against a :class:`RequestGate` (and a gate + sim-clock
+:class:`MicroBatcher` pair) and checks, after **every** step:
+
+* ``inflight == admitted - settled`` per tenant, and never negative;
+* ``inflight <= max_inflight`` -- the quota is a hard ceiling;
+* every attempt is accounted: ``admitted + rejected == attempts``;
+* **accepted => answered-or-drained**: every Admission token's future
+  resolves (correctly shaped) by the end of the run;
+* **rejected => never enqueued**: the batcher's request count only moves
+  on admission, so a Rejection leaves no queue entry behind;
+* once the process drains, nothing is admitted ever again.
+
+Runs under CI's cpu-1dev property-test leg (hypothesis comes from the
+``test`` extra); skips cleanly where hypothesis is absent.
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _hypothesis_support import given, settings, st  # noqa: E402
+
+from repro.obs import metrics as obs_metrics  # noqa: E402
+from repro.serve import MicroBatcher  # noqa: E402
+from repro.serve.frontend import READY, Admission, Rejection, \
+    RequestGate  # noqa: E402
+
+N_DIMS = 4
+TENANTS = ("a", "b")
+
+# one gate event: (kind, tenant_index, magnitude)
+_EVENTS = st.lists(
+    st.tuples(
+        st.sampled_from(["admit", "settle", "process_drain", "advance"]),
+        st.integers(0, len(TENANTS) - 1),
+        st.integers(0, 30)),
+    min_size=1, max_size=60)
+
+
+class _ListClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@settings(max_examples=60, deadline=None)
+@given(events=_EVENTS, max_inflight=st.integers(1, 4))
+def test_gate_ledger_invariants(events, max_inflight):
+    clk = _ListClock()
+    g = RequestGate(max_inflight=max_inflight, queue_depth=8, clock=clk,
+                    metrics=obs_metrics.MetricsRegistry())
+    for t in TENANTS:
+        g.set_state(t, READY)
+    open_toks = {t: [] for t in TENANTS}
+    attempts = {t: 0 for t in TENANTS}
+    drained = False
+
+    def check():
+        for t in TENANTS:
+            inflight = g.inflight(t)
+            assert inflight == g.admitted[t] - g.settled[t]
+            assert 0 <= inflight <= max_inflight
+            assert g.admitted[t] + g.rejected[t] == attempts[t]
+
+    for kind, ti, mag in events:
+        t = TENANTS[ti]
+        if kind == "admit":
+            attempts[t] += 1
+            out = g.admit(t, rows=1 + mag % 4,
+                          timeout_ms=None if mag % 3 else 50.0)
+            if isinstance(out, Admission):
+                assert not drained, "admitted after process drain"
+                open_toks[t].append(out)
+            else:
+                assert isinstance(out, Rejection)
+                assert out.code in ("overloaded", "shutting_down")
+        elif kind == "settle" and open_toks[t]:
+            g.settle(open_toks[t].pop(mag % len(open_toks[t])))
+        elif kind == "process_drain":
+            g.begin_drain()
+            drained = True
+        elif kind == "advance":
+            clk.t += mag / 1e3
+        check()
+
+    for t in TENANTS:
+        for tok in open_toks[t]:
+            assert g.settle(tok, drained=drained) in (
+                "ok", "deadline_expired")
+        assert g.inflight(t) == 0
+        assert g.admitted[t] == g.settled[t]
+
+
+@settings(max_examples=40, deadline=None)
+@given(steps=st.lists(
+    st.tuples(st.integers(1, 6),       # rows in the request
+              st.booleans()),          # pump (advance past deadline) after?
+    min_size=1, max_size=25))
+def test_accepted_answered_rejected_never_enqueued(steps):
+    clk = _ListClock()
+    g = RequestGate(max_inflight=3, queue_depth=4, clock=clk,
+                    metrics=obs_metrics.MetricsRegistry())
+    g.set_state("t", READY)
+
+    def qfn(buf, k, n_probes):
+        ids = np.tile(np.arange(k, dtype=np.int32), (buf.shape[0], 1))
+        return ids, ids.astype(np.float32)
+
+    b = MicroBatcher(qfn, chunk_sizes=(4, 8), max_delay_ms=5.0, clock=clk,
+                     metrics=obs_metrics.MetricsRegistry())
+    accepted = []                        # (token, future, rows)
+    n_submitted = 0
+    rng = np.random.default_rng(0)
+
+    for rows, pump in steps:
+        out = g.admit("t", rows=rows, queue_depth=b.pending())
+        if isinstance(out, Admission):
+            fut = b.submit(rng.normal(size=(rows, N_DIMS)).astype(
+                np.float32), 2)
+            n_submitted += 1
+            accepted.append((out, fut, rows))
+        # rejected => never enqueued: the batcher only ever saw admissions
+        assert b.n_requests == n_submitted
+        if pump:
+            clk.t += 0.006
+            b.pump()
+            for tok, fut, _ in accepted:
+                if fut.done() and not tok.settled:
+                    g.settle(tok)
+        assert g.inflight("t") == len(
+            [1 for tok, _f, _r in accepted if not tok.settled])
+
+    b.flush_all()
+    for tok, fut, rows in accepted:      # accepted => answered-or-drained
+        ids, dists = fut.result(timeout=5)
+        assert ids.shape == (rows, 2) and dists.shape == (rows, 2)
+        if not tok.settled:
+            g.settle(tok, drained=True)
+    assert g.inflight("t") == 0
+    assert g.totals()["admitted"] == g.totals()["settled"] == len(accepted)
+    assert set(c for c, _k, _p in b.shape_counts) <= {4, 8}

@@ -15,6 +15,11 @@ What is gated, per benchmark section:
   BLAS);
 * every ``*parity*`` flag that was true in the baseline must stay true
   (bit-identity gates are never allowed to rot into "almost");
+* every ``*_ok`` flag that was true in the baseline must stay true --
+  the front-end load generator's contract checks (``drain_ok``: SIGTERM
+  loses no accepted request; ``overload_ok``: shed load always gets a
+  structured, retryable rejection) are behavioural invariants, gated the
+  same way as parity;
 * ``wall_s`` must stay within ``WALL_RATIO``x the baseline plus
   ``WALL_SLACK`` seconds -- deliberately generous, because CI runners and
   laptops differ far more than real regressions do; this catches
@@ -97,6 +102,7 @@ def compare(current: dict, baseline: dict):
             if key in ("git_sha", "us_total"):
                 continue
             gated = (("recall" in key) or ("parity" in key)
+                     or key.endswith("_ok")
                      or key == "wall_s" or key.startswith("recovery_s")
                      or key == "trace_overhead_frac")
             if cv is None:
@@ -116,10 +122,10 @@ def compare(current: dict, baseline: dict):
                     failures.append(
                         f"{name}/{key}: recall dropped {bv:.4f} -> "
                         f"{cv:.4f} (tolerance {RECALL_TOL})")
-            elif "parity" in key and bv is True:
+            elif ("parity" in key or key.endswith("_ok")) and bv is True:
                 if cv is not True:
                     status = "FAIL"
-                    failures.append(f"{name}/{key}: parity was true in "
+                    failures.append(f"{name}/{key}: was true in "
                                     f"baseline, now {cv!r}")
             elif key == "trace_overhead_frac":
                 if cv > TRACE_OVERHEAD_MAX:
@@ -150,12 +156,26 @@ def main(argv=None) -> int:
     ap.add_argument("--current", default="BENCH_results.smoke.json")
     ap.add_argument("--baseline",
                     default="benchmarks/baselines/smoke_baseline.json")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="SECTION",
+                    help="gate only the named benchmark section(s) -- for "
+                         "partial results files written by a standalone "
+                         "benchmark (e.g. bench_frontend --json on the "
+                         "multi-device CI leg)")
     args = ap.parse_args(argv)
 
     with open(args.baseline) as f:
         baseline = json.load(f)
     with open(args.current) as f:
         current = json.load(f)
+    if args.only:
+        missing = [s for s in args.only if s not in baseline]
+        if missing:
+            print(f"--only section(s) not in baseline: {missing}",
+                  file=sys.stderr)
+            return 1
+        baseline = {k: v for k, v in baseline.items() if k in args.only}
+        current = {k: v for k, v in current.items() if k in args.only}
 
     rows, failures = compare(current, baseline)
     widths = [max(len(str(r[i])) for r in rows + [("benchmark", "metric",
