@@ -40,7 +40,8 @@ import numpy as np
 
 from repro.launch.serve import default_specs
 from repro.serve import ServableRegistry
-from repro.serve.client import FrontendClient, wait_ready
+from repro.serve.client import (FrontendClient, RetryPolicy,
+                                wait_ready)
 
 from .bench_query_engine import smoke_mode
 from .common import write_csv
@@ -142,21 +143,36 @@ def run(seed: int = 0, out_csv: str = "experiments/frontend_load.csv"
             reg.get(TENANT).insert(corpus[i:i + 256])
 
         parity = True
+        total_retries = [0]
         for n_streams in concurrency:
             lat_ms, answered, bad = [], [0], [False]
+            retries = [0]
             lock = threading.Lock()
 
             def stream(sid, n_streams=n_streams):
                 srng = np.random.default_rng(1000 + sid)
                 mine = []
+                my_retries = 0
+                # backpressure-aware load generation: a transient reject at
+                # high concurrency is retried on the server's own
+                # retry_after_ms schedule instead of crashing the stream --
+                # latency then includes the backoff, which is what a
+                # well-behaved client actually experiences
+                policy = RetryPolicy(max_attempts=6, base_ms=5.0)
                 with srv.client() as c:
                     for _ in range(reqs_per_stream):
                         q = corpus[srng.integers(0, n_corpus, size=4)] \
                             + srng.normal(scale=0.05, size=(4, N_DIMS)
                                           ).astype(np.float32)
                         t0 = time.perf_counter()
-                        ids, dists = c.query_arrays(TENANT, q, K,
-                                                    n_probes=N_PROBES)
+                        r, n_retr = c.query_with_retries(
+                            TENANT, q, K, n_probes=N_PROBES, policy=policy)
+                        my_retries += n_retr
+                        if not r.get("ok"):
+                            bad[0] = True
+                            continue
+                        ids = np.asarray(r["gids"], np.int32)
+                        dists = np.asarray(r["dists"], np.float32)
                         mine.append((time.perf_counter() - t0) * 1e3)
                         wi, wd = reg.get(TENANT).index.query(
                             q, K, n_probes=N_PROBES)
@@ -167,6 +183,7 @@ def run(seed: int = 0, out_csv: str = "experiments/frontend_load.csv"
                 with lock:
                     lat_ms.extend(mine)
                     answered[0] += len(mine)
+                    retries[0] += my_retries
 
             threads = [threading.Thread(target=stream, args=(s,))
                        for s in range(n_streams)]
@@ -177,6 +194,7 @@ def run(seed: int = 0, out_csv: str = "experiments/frontend_load.csv"
                 th.join()
             dt = time.perf_counter() - t0
             parity &= not bad[0]
+            total_retries[0] += retries[0]
             p50, p99 = _percentile(lat_ms, 50), _percentile(lat_ms, 99)
             goodput = answered[0] / dt
             results[f"p50_ms_c{n_streams}"] = round(p50, 3)
@@ -185,6 +203,7 @@ def run(seed: int = 0, out_csv: str = "experiments/frontend_load.csv"
             rows.append(("sweep", n_streams, answered[0], round(p50, 3),
                          round(p99, 3), round(goodput, 1), ""))
         results["query_parity"] = parity
+        results["sweep_retries"] = total_retries[0]
         results["n_requests"] = sum(reqs_per_stream * c
                                     for c in concurrency)
 

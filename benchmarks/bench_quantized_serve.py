@@ -1,0 +1,175 @@
+"""Quantized storage-tier benchmark: precision x db-size on the
+wasserstein tenant.
+
+The tentpole measurement for the precision tier (docs/architecture.md,
+invariant 10): how many sealed-store bytes per item each tier pays and what
+retrieval quality it keeps, judged against the closed-form ``gaussian_w2``
+oracle exactly like bench_wasserstein_serve -- so a recall drop here is
+end-to-end truth (clip loss + LSH + quantization + survivor rerank), not
+the quantizer's own geometry.
+
+Reported into BENCH_results.json (gated by tools/check_bench_regression.py):
+
+* **{bf16,int8}_recall_at10** -- top-10 any-hit recall vs the exact W2
+  oracle per tier ("recall" keys regress at RECALL_TOL=0.02);
+* **fp32_recall_at10 / fp32_parity_ok** -- the fp32 tier must return
+  results bit-identical to a tenant that never heard of precision tiers
+  (the opt-in half of invariant 10, asserted hard);
+* **int8_bytes_per_item / int8_bytes_ratio** -- sealed-store bytes per
+  live item and the int8/fp32 ratio (gated <= 0.30: the >= 3x capacity
+  win the tier exists for, asserted hard here too);
+* **bytes_per_item_at_fixed_recall** -- cheapest tier whose recall stays
+  within 0.02 of fp32 (the capacity-planning number);
+* **us_query_{fp32,int8}** -- end-to-end query latency per tier.
+
+REPRO_BENCH_SMOKE=1 shrinks the db sweep for CI.  Run standalone with
+``python -m benchmarks.bench_quantized_serve [--smoke]``.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels import quantize
+from repro.serve import ServableRegistry, ServableSpec
+
+from .bench_query_engine import smoke_mode
+from .common import time_us, write_csv
+
+N_DIMS = 64
+K = 10
+N_PROBES = 8
+R = 0.5
+PRECISIONS = ("fp32", "bf16", "int8")
+RECALL_DROP_TOL = 0.02
+
+
+def _gaussian_set(rng, n):
+    mu = rng.uniform(-1.0, 1.0, size=n)
+    sig = rng.uniform(0.1, 1.0, size=n)
+    return mu.astype(np.float32), sig.astype(np.float32)
+
+
+def _spec(name: str, n_db: int, precision: str = "fp32") -> ServableSpec:
+    # small segments relative to n_db so several segments actually SEAL --
+    # the tier only touches sealed storage, an all-delta index measures
+    # nothing
+    return ServableSpec(name=name, n_dims=N_DIMS, p=2.0, r=R,
+                        embedder="wasserstein", n_tables=16, n_hashes=4,
+                        log2_buckets=10, bucket_capacity=64,
+                        segment_capacity=max(128, n_db // 4),
+                        insert_chunk=128, chunk_sizes=(16, 64),
+                        precision=precision)
+
+
+def _sealed_bytes_per_item(sv) -> float:
+    sealed = [s for s in sv.index.segments if s.sealed and s.n_live > 0]
+    items = sum(s.n_live for s in sealed)
+    return (sum(int(s.state.db.nbytes) for s in sealed) / items
+            if items else float("nan"))
+
+
+def _bench_one(n_db: int, n_q: int, iters: int, seed: int):
+    rng = np.random.default_rng(seed)
+    mu, sig = _gaussian_set(rng, n_db)
+    qmu, qsig = _gaussian_set(rng, n_q)
+
+    from repro.core import wasserstein
+    w2 = np.asarray(wasserstein.gaussian_w2(
+        qmu[:, None], qsig[:, None], mu[None, :], sig[None, :]))
+    exact = np.argsort(w2, axis=1)[:, :K]
+
+    # the pre-tier control: a tenant whose spec never mentions precision
+    reg = ServableRegistry()
+    plain = reg.register(_spec(f"w2-plain-{n_db}", n_db))
+    db_emb = np.asarray(plain.embedder.embed_gaussian(mu, sig))
+    q_emb = np.asarray(plain.embedder.embed_gaussian(qmu, qsig))
+    plain.insert(db_emb)
+    g_plain, d_plain = (np.asarray(a) for a in
+                        plain.index.query(q_emb, K, n_probes=N_PROBES))
+
+    per_tier = {}
+    for prec in PRECISIONS:
+        sv = reg.register(_spec(f"w2-{prec}-{n_db}", n_db, precision=prec))
+        sv.insert(db_emb)
+        g, d = (np.asarray(a) for a in
+                sv.index.query(q_emb, K, n_probes=N_PROBES))
+        hit = (g[:, :, None] == exact[:, None, :]).any(axis=1)
+        per_tier[prec] = {
+            "recall": float(hit.mean()),
+            "bytes_per_item": _sealed_bytes_per_item(sv),
+            "us_query": time_us(
+                lambda sv=sv: sv.index.query(q_emb, K, n_probes=N_PROBES),
+                iters=iters),
+            "gids": g, "dists": d, "sv": sv,
+        }
+
+    parity = (np.array_equal(per_tier["fp32"]["gids"], g_plain)
+              and np.array_equal(per_tier["fp32"]["dists"], d_plain))
+    return per_tier, parity
+
+
+def run(seed: int = 0, out_csv: str = "experiments/quantized_serve.csv"
+        ) -> dict:
+    smoke = smoke_mode()
+    db_sweep = (512,) if smoke else (2048, 4096)
+    n_q = 16 if smoke else 64
+    iters = 5 if smoke else 20
+
+    rows, results = [], {}
+    for n_db in db_sweep:
+        per_tier, parity = _bench_one(n_db, n_q, iters, seed)
+        for prec in PRECISIONS:
+            t = per_tier[prec]
+            rows.append((n_db, prec, round(t["recall"], 4),
+                         round(t["bytes_per_item"], 2),
+                         round(t["us_query"])))
+        # fp32 is bit-exact opt-in (invariant 10): not a tolerance, an
+        # equality -- the tier must be invisible until asked for
+        assert parity, (
+            f"fp32 precision tier diverged from the plain tenant at "
+            f"n_db={n_db}")
+
+    write_csv(out_csv, "n_db,precision,recall_at_10,bytes_per_item,us_query",
+              rows)
+
+    # trajectory keys from the largest db (the capacity-relevant point)
+    per_tier, parity = per_tier, parity
+    fp32 = per_tier["fp32"]
+    ratio = per_tier["int8"]["bytes_per_item"] / fp32["bytes_per_item"]
+    drops = {p: fp32["recall"] - per_tier[p]["recall"] for p in PRECISIONS}
+    fixed = [per_tier[p]["bytes_per_item"] for p in PRECISIONS
+             if drops[p] <= RECALL_DROP_TOL]
+    results.update({
+        "n_db": db_sweep[-1],
+        "fp32_parity_ok": bool(parity),
+        "fp32_recall_at10": round(fp32["recall"], 4),
+        "bf16_recall_at10": round(per_tier["bf16"]["recall"], 4),
+        "int8_recall_at10": round(per_tier["int8"]["recall"], 4),
+        "fp32_bytes_per_item": round(fp32["bytes_per_item"], 2),
+        "int8_bytes_per_item": round(per_tier["int8"]["bytes_per_item"], 2),
+        "int8_bytes_ratio": round(ratio, 4),
+        "bytes_per_item_at_fixed_recall": round(min(fixed), 2) if fixed
+        else None,
+        "us_query_fp32": round(fp32["us_query"]),
+        "us_query_int8": round(per_tier["int8"]["us_query"]),
+        # theoretical floor (codes only, no tables/gids) for orientation
+        "int8_code_bytes_per_item": quantize.np_bytes_per_live_item(
+            "int8", N_DIMS),
+    })
+    # acceptance bars: >= 3x sealed-store reduction at <= 0.02 recall drop
+    assert ratio <= 0.30, \
+        f"int8 sealed bytes ratio {ratio} > 0.30 (want >= 3x reduction)"
+    assert drops["int8"] <= RECALL_DROP_TOL, \
+        f"int8 recall drop {drops['int8']} > {RECALL_DROP_TOL} vs fp32"
+    return results
+
+
+if __name__ == "__main__":
+    import sys
+
+    if "--smoke" in sys.argv:
+        import os
+
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
+    print(run())

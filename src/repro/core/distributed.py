@@ -137,7 +137,7 @@ def query_distributed(state_dm, cfg: IndexConfig, queries: Array, k: int,
 @functools.lru_cache(maxsize=64)
 def _sharded_segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
                               backend: Optional[str], mesh: Mesh, axis: str,
-                              per_dev: int):
+                              per_dev: int, quantized: bool = False):
     """One compiled collective program per (cfg, k, n_probes, backend, mesh,
     per-device segment count) -- the sharded analogue of the serve layer's
     ``_segment_query_fn``.  Each device runs the *same* per-segment
@@ -155,23 +155,38 @@ def _sharded_segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
     gid (``ops.merge_topk_unique``) so that when several replicas of one
     segment *do* answer (all-active mode, or no router), their bit-identical
     rows collapse to one.  Either way the merged top-k equals the
-    unreplicated path's (invariant 6)."""
+    unreplicated path's (invariant 6).
 
-    def one_segment(state: LSHIndexState, gids: Array, live: Array, q: Array):
+    ``quantized=True`` is the precision tier's collective: sealed segments
+    score through the dequant-free code-space tail
+    (``query_index_gids_quantized``, fed per-instance scales sharded like
+    the sealed stack) while the replicated fp32 delta keeps the exact tail,
+    and ``k`` is the serve layer's survivor width m rather than the user's
+    k -- the merged (nq, m) survivors are rescored exactly on the host
+    (``serve.segments``).  ``quantized=False`` builds byte-for-byte the
+    pre-tier program, which is what keeps fp32 sharded serving bit-exact."""
+
+    def one_segment(state: LSHIndexState, gids: Array, live: Array, q: Array,
+                    scale: Optional[Array] = None):
         # same program body as the unsharded fan-out -- parity by construction
+        if scale is not None:
+            return lsh_index.query_index_gids_quantized(
+                state, cfg, q, k, gids, scale, n_probes=n_probes,
+                backend=backend, live_mask=live)
         return lsh_index.query_index_gids(state, cfg, q, k, gids,
                                           n_probes=n_probes, backend=backend,
                                           live_mask=live)
 
-    def shard_fn(sealed_state, sealed_gids, sealed_live, active,
-                 delta_state, delta_gids, delta_live, q):
+    def shard_fn(sealed_state, sealed_gids, sealed_live, sealed_scales,
+                 active, delta_state, delta_gids, delta_live, q):
         # sealed_* leaves: this device's (per_dev, ...) block; delta_*
         # replicated.  Static unroll over the local segments -- identical
         # shapes, so it is one fused program, not per_dev compilations.
         parts_g, parts_d = [], []
         for i in range(per_dev):
             seg = jax.tree.map(lambda x: x[i], sealed_state)
-            g, d = one_segment(seg, sealed_gids[i], sealed_live[i], q)
+            g, d = one_segment(seg, sealed_gids[i], sealed_live[i], q,
+                               scale=sealed_scales[i] if quantized else None)
             parts_g.append(jnp.where(active[i], g, -1))
             parts_d.append(jnp.where(active[i], d, jnp.inf))
         g, d = one_segment(delta_state, delta_gids, delta_live, q)
@@ -193,7 +208,7 @@ def _sharded_segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
     state_repl = jax.tree.map(lambda _: P(), _state_structure())
     fn = compat.shard_map(
         shard_fn, mesh=mesh,
-        in_specs=(state_sharded, P(axis), P(axis), P(axis),
+        in_specs=(state_sharded, P(axis), P(axis), P(axis), P(axis),
                   state_repl, P(), P(), P()),
         out_specs=(P(), P()),
         check_vma=False)
@@ -203,7 +218,8 @@ def _sharded_segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
 def query_segments_sharded(placement, cfg: IndexConfig, queries: Array,
                            k: int, n_probes: int = 1,
                            backend: Optional[str] = None,
-                           active: Optional[Array] = None
+                           active: Optional[Array] = None,
+                           quantized: bool = False
                            ) -> Tuple[Array, Array]:
     """Collective cross-segment k-NN over a ``SegmentPlacement``.
 
@@ -222,6 +238,10 @@ def query_segments_sharded(placement, cfg: IndexConfig, queries: Array,
             replica selection.  None = every instance answers (replicas are
             deduped by gid at the fan-in, so this is always correct, just
             unrouted).
+        quantized: run the precision tier's collective -- sealed instances
+            score dequant-free against their int8/bf16 codes using
+            ``placement.sealed_scales``; pass the survivor width m as
+            ``k`` and rescore the result exactly (the serve layer does).
 
     Returns:
         (gids (nq, k) int32, dists (nq, k) f32), replicated; -1/inf padded.
@@ -232,13 +252,16 @@ def query_segments_sharded(placement, cfg: IndexConfig, queries: Array,
     """
     fn = _sharded_segment_query_fn(cfg, k, n_probes, backend,
                                    placement.mesh, placement.axis,
-                                   placement.per_dev)
+                                   placement.per_dev, quantized)
     if active is None:
         active = jnp.ones((placement.n_dev * placement.per_dev,), jnp.bool_)
     else:
         active = jnp.asarray(active, jnp.bool_)
+    scales = placement.sealed_scales
+    if scales is None:
+        scales = jnp.ones((placement.n_dev * placement.per_dev,), jnp.float32)
     return fn(placement.sealed_state, placement.sealed_gids,
-              placement.sealed_live, active, placement.delta_state,
+              placement.sealed_live, scales, active, placement.delta_state,
               placement.delta_gids, placement.delta_live,
               jnp.asarray(queries, jnp.float32))
 

@@ -388,6 +388,51 @@ def query_index_gids(state: LSHIndexState, cfg: IndexConfig, queries: Array,
     return g, dist
 
 
+def query_index_quantized(state: LSHIndexState, cfg: IndexConfig,
+                          queries: Array, k: int, scale: Array,
+                          n_probes: int = 1,
+                          valid_items: Optional[int] = None,
+                          backend: Optional[str] = None,
+                          live_mask: Optional[Array] = None
+                          ) -> Tuple[Array, Array]:
+    """:func:`query_index` over a quantized segment (int8/bf16 ``state.db``).
+
+    The candidate pipeline (hash -> probe -> gather -> dedup) is byte-for-
+    byte the fp32 one -- hashing reads only the family leaves, which stay
+    fp32 at every tier -- and only the scoring tail switches to the
+    dequant-free code-space path (``ops.quantized_query_topk``).  Returned
+    distances are in the fp32 metric (scaled once), approximate within
+    O(scale); serve callers rescore survivors exactly
+    (``kernels.quantize.rerank_survivors``).
+    """
+    q = queries.astype(jnp.float32)
+    cands = _candidate_ids(state, cfg, q, n_probes)
+    if live_mask is not None:
+        safe = jnp.clip(cands, 0, live_mask.shape[0] - 1)
+        cands = jnp.where((cands >= 0) & live_mask[safe], cands, -1)
+    dist, ids = ops.quantized_query_topk(q, state.db, scale, cands, k,
+                                         p=cfg.p, valid_items=valid_items,
+                                         backend=backend)
+    return ids, dist
+
+
+def query_index_gids_quantized(state: LSHIndexState, cfg: IndexConfig,
+                               queries: Array, k: int, gids: Array,
+                               scale: Array, n_probes: int = 1,
+                               backend: Optional[str] = None,
+                               live_mask: Optional[Array] = None
+                               ) -> Tuple[Array, Array]:
+    """:func:`query_index_quantized` + local-slot -> global-id translation
+    -- the quantized analogue of :func:`query_index_gids`, and like it the
+    ONE shared per-segment program body: the unsharded fan-out and the SPMD
+    collective both call this for quantized sealed segments."""
+    ids, dist = query_index_quantized(state, cfg, queries, k, scale,
+                                      n_probes=n_probes, backend=backend,
+                                      live_mask=live_mask)
+    g = jnp.where(ids >= 0, gids[jnp.clip(ids, 0, gids.shape[0] - 1)], -1)
+    return g, dist
+
+
 def rerank_stage(db: Array, gids: Array, cfg: IndexConfig, q: Array,
                  cands: Array, k: int, backend: Optional[str] = None
                  ) -> Tuple[Array, Array]:

@@ -38,9 +38,13 @@ import jax
 
 KERNEL_MODES = ("compiled", "interpret", "reference")
 QUERY_BACKENDS = ("fused", "reference")
+STORE_DTYPES = ("fp32", "bf16", "int8")
+MERGE_BACKENDS = ("bitonic", "pallas", "sort")
 
 _ENV_KERNEL = "REPRO_KERNEL_BACKEND"
 _ENV_QUERY = "REPRO_QUERY_BACKEND"
+_ENV_STORE = "REPRO_STORE_DTYPE"
+_ENV_MERGE = "REPRO_MERGE_BACKEND"
 
 
 @functools.lru_cache(maxsize=None)
@@ -131,6 +135,45 @@ def embed_backend(override: str | None = None) -> str:
     return "compiled" if _platform() == "tpu" else "reference"
 
 
+def store_dtype(override: str | None = None) -> str:
+    """Resolve the sealed-segment storage precision tier.
+
+    Resolution order: ``$REPRO_STORE_DTYPE`` > explicit ``override`` (the
+    tenant spec's ``precision`` field) > ``"fp32"``.  The env var wins over
+    the spec on purpose -- it is the operator's fleet-wide capacity lever,
+    and the registry resolves it ONCE at tenant registration so the
+    precision that actually served is the one recorded in the WAL REGISTER
+    record and every snapshot (recovery never re-reads the env).
+    ``fp32`` is bit-exact (no quantized representation is ever built);
+    ``bf16``/``int8`` are the bounded-loss tiers (invariant 10).
+    """
+    mode = os.environ.get(_ENV_STORE) or override or "fp32"
+    if mode not in STORE_DTYPES:
+        raise ValueError(
+            f"unknown store dtype {mode!r}; want one of {STORE_DTYPES}")
+    return mode
+
+
+def merge_backend(override: str | None = None) -> str:
+    """Resolve the top-k merge fan-in implementation.
+
+    ``"bitonic"`` (default) runs the fixed-topology compare-exchange
+    network in kernels/merge.py as plain jnp; ``"pallas"`` runs the same
+    network inside one Pallas kernel (compiled on TPU, interpret
+    elsewhere); ``"sort"`` is the legacy ``jax.lax.sort`` path.  All three
+    are bit-identical on NaN-free input (tests/test_merge_bitonic.py), so
+    this knob moves cost, never results.  Resolution: explicit ``override``
+    > ``$REPRO_MERGE_BACKEND`` > ``"bitonic"``.  Serve-layer collectives
+    cache traces keyed on (cfg, k, ...), so like ``hash_backend`` the env
+    choice is effectively process-constant -- set it before first query.
+    """
+    mode = override or os.environ.get(_ENV_MERGE) or "bitonic"
+    if mode not in MERGE_BACKENDS:
+        raise ValueError(
+            f"unknown merge backend {mode!r}; want one of {MERGE_BACKENDS}")
+    return mode
+
+
 def describe() -> dict:
     """Every dispatch decision as it would resolve *right now*, plus the
     env overrides that produced it -- the observability hook the serve
@@ -144,8 +187,12 @@ def describe() -> dict:
         "query_backend": query_backend(),
         "hash_backend": hash_backend(),
         "embed_backend": embed_backend(),
+        "store_dtype": store_dtype(),
+        "merge_backend": merge_backend(),
         "env": {_ENV_KERNEL: os.environ.get(_ENV_KERNEL),
-                _ENV_QUERY: os.environ.get(_ENV_QUERY)},
+                _ENV_QUERY: os.environ.get(_ENV_QUERY),
+                _ENV_STORE: os.environ.get(_ENV_STORE),
+                _ENV_MERGE: os.environ.get(_ENV_MERGE)},
     }
 
 

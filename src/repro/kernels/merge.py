@@ -1,0 +1,154 @@
+"""Bitonic top-k merge network: the serve layer's fan-in without lax.sort.
+
+``ops.merge_topk`` historically lowered to ``jax.lax.sort`` over the whole
+(nq, n_shards*k) pool.  XLA's generic sort is a variable-length comparator
+loop that scales as ``sort(n_dev * k)`` and serialises the collective
+fan-in; a bitonic network is the classical fixed-topology replacement --
+log^2(P) vectorised compare-exchange passes, every pass a dense VPU op with
+no data-dependent control flow, which is exactly the shape TPUs like.
+
+The network sorts (distance, id) **pairs** under the same lexicographic
+total order the lax.sort path used (distance ascending, id ascending on
+ties).  Because that order is total and the sorted output of a key-only
+sort is determined by the input *multiset* alone, the network is
+bit-identical to ``lax.sort((d, id), num_keys=2, is_stable=True)`` on any
+NaN-free input -- including duplicate (distance, id) rows from replicated
+segments, and including the (inf, -1) padding rows both merge wrappers
+feed it.  tests/test_merge_bitonic.py asserts this exhaustively; the
+sharded/replicated serve benches gate it end to end via their parity keys.
+
+Non-power-of-two pools are padded with (+inf, INT32_MAX) sentinel pairs,
+which sort strictly after every representable real row, then sliced off.
+
+Two executions of the SAME staged network:
+
+* :func:`sort_pairs` -- pure jnp, runs everywhere (the default);
+* :func:`sort_pairs_pallas` -- the network inside one Pallas kernel
+  (row-blocked VMEM-resident compare-exchange; ``interpret=True`` is the
+  CPU validation path).  Both call :func:`_network`, so they cannot drift.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+_SENTINEL_ID = jnp.iinfo(jnp.int32).max
+
+
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _compare_exchange(d: Array, i: Array, span: int) -> tuple[Array, Array]:
+    """One bitonic pass: compare-exchange the two halves of every length-
+    ``span`` chunk (each chunk bitonic -> both halves bitonic, all of the
+    low half <= all of the high half under the lexicographic order)."""
+    shape = d.shape
+    p = shape[-1]
+    dr = d.reshape(shape[:-1] + (p // span, 2, span // 2))
+    ir = i.reshape(shape[:-1] + (p // span, 2, span // 2))
+    d0, d1 = dr[..., 0, :], dr[..., 1, :]
+    i0, i1 = ir[..., 0, :], ir[..., 1, :]
+    swap = (d1 < d0) | ((d1 == d0) & (i1 < i0))
+    lo_d, hi_d = jnp.where(swap, d1, d0), jnp.where(swap, d0, d1)
+    lo_i, hi_i = jnp.where(swap, i1, i0), jnp.where(swap, i0, i1)
+    d = jnp.stack([lo_d, hi_d], axis=-2).reshape(shape)
+    i = jnp.stack([lo_i, hi_i], axis=-2).reshape(shape)
+    return d, i
+
+
+def _network(d: Array, i: Array, sorted_run: int = 1) -> tuple[Array, Array]:
+    """The full staged network over a power-of-two last axis.
+
+    Invariant entering each outer stage: every length-``run`` chunk is
+    sorted ascending.  Reversing the odd chunk of each pair makes every
+    length-``2*run`` chunk bitonic; log2(2*run) compare-exchange passes
+    then sort it.  ``sorted_run > 1`` skips the early stages when the
+    caller guarantees pre-sorted blocks (the k-way merge of per-shard
+    top-k lists), turning the O(log^2 P) sort into an O(log P * log k)
+    merge tree.
+    """
+    shape = d.shape
+    p = shape[-1]
+    run = sorted_run
+    while run < p:
+        dr = d.reshape(shape[:-1] + (p // (2 * run), 2, run))
+        ir = i.reshape(shape[:-1] + (p // (2 * run), 2, run))
+        dr = jnp.concatenate([dr[..., :1, :], dr[..., 1:, ::-1]], axis=-2)
+        ir = jnp.concatenate([ir[..., :1, :], ir[..., 1:, ::-1]], axis=-2)
+        d, i = dr.reshape(shape), ir.reshape(shape)
+        span = 2 * run
+        while span >= 2:
+            d, i = _compare_exchange(d, i, span)
+            span //= 2
+        run *= 2
+    return d, i
+
+
+def _pad_pow2(d: Array, i: Array) -> tuple[Array, Array, int]:
+    m = d.shape[-1]
+    p = _next_pow2(m)
+    if p != m:
+        widths = [(0, 0)] * (d.ndim - 1) + [(0, p - m)]
+        d = jnp.pad(d, widths, constant_values=jnp.inf)
+        i = jnp.pad(i, widths, constant_values=_SENTINEL_ID)
+    return d, i, m
+
+
+@functools.partial(jax.jit, static_argnames=("sorted_run",))
+def sort_pairs(d: Array, i: Array, sorted_run: int = 1
+               ) -> tuple[Array, Array]:
+    """Sort (distance, id) pairs ascending-lexicographic via the bitonic
+    network.  Bit-identical to ``lax.sort((d, i), num_keys=2)`` on NaN-free
+    input.  d: (..., M) f32; i: (..., M) int32.  Returns sorted (d, i)."""
+    dp, ip, m = _pad_pow2(d, i.astype(jnp.int32))
+    ds, is_ = _network(dp, ip, sorted_run=sorted_run)
+    return ds[..., :m], is_[..., :m]
+
+
+# -- Pallas variant ----------------------------------------------------------
+
+_ROW_BLOCK = 8  # f32 sublane quantum: one grid step sorts 8 query rows
+
+
+def _bitonic_kernel(d_ref, i_ref, od_ref, oi_ref, *, sorted_run: int):
+    d, i = _network(d_ref[...], i_ref[...], sorted_run=sorted_run)
+    od_ref[...] = d
+    oi_ref[...] = i
+
+
+@functools.partial(jax.jit, static_argnames=("sorted_run", "interpret"))
+def sort_pairs_pallas(d: Array, i: Array, sorted_run: int = 1,
+                      interpret: bool = True) -> tuple[Array, Array]:
+    """:func:`sort_pairs` as one Pallas kernel: each grid step keeps an
+    (8, P) row block VMEM-resident through every compare-exchange pass, so
+    the pool makes exactly one HBM round-trip regardless of pass count."""
+    dp, ip, m = _pad_pow2(d.astype(jnp.float32), i.astype(jnp.int32))
+    nq = dp.shape[0]
+    rpad = -nq % _ROW_BLOCK
+    if rpad:
+        widths = ((0, rpad), (0, 0))
+        dp = jnp.pad(dp, widths, constant_values=jnp.inf)
+        ip = jnp.pad(ip, widths, constant_values=_SENTINEL_ID)
+    p = dp.shape[-1]
+    grid = (dp.shape[0] // _ROW_BLOCK,)
+    spec = pl.BlockSpec((_ROW_BLOCK, p), lambda r: (r, 0))
+    ds, is_ = pl.pallas_call(
+        functools.partial(_bitonic_kernel, sorted_run=sorted_run),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=(jax.ShapeDtypeStruct(dp.shape, jnp.float32),
+                   jax.ShapeDtypeStruct(ip.shape, jnp.int32)),
+        interpret=interpret,
+    )(dp, ip)
+    return ds[:nq, :m], is_[:nq, :m]

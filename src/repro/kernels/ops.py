@@ -26,7 +26,7 @@ import warnings
 import jax
 import jax.numpy as jnp
 
-from . import dispatch, ref
+from . import dispatch, merge as merge_kernel, quantize, ref
 from .dct_mm import dct_mm
 from .fused_query import _KP as _FUSED_TOPK_WIDTH
 from .fused_query import fused_query_topk as _fused_query_kernel_call
@@ -220,16 +220,66 @@ def fused_query_topk(q, db, ids, k: int, p: float = 2.0,
     return _fused_query_impl(q, db, ids, k, p, valid_items, mode)
 
 
+# -- quantized candidate scoring (the precision tier's query tail) -----------
+
+
+@functools.partial(jax.jit, static_argnames=("k", "p", "valid_items", "mode"))
+def _quantized_query_impl(q, codes, scale, ids, k, p, valid_items, mode):
+    if mode == "reference":
+        return quantize.quantized_topk_ref(q, codes, scale, ids, k, p,
+                                           valid_items)
+    return quantize.quantized_query_topk(q, codes, scale, ids, k, p=p,
+                                         valid_items=valid_items,
+                                         interpret=_interp(mode))
+
+
+def quantized_query_topk(q, codes, scale, ids, k: int, p: float = 2.0,
+                         valid_items: int | None = None,
+                         backend: str | None = None):
+    """:func:`fused_query_topk` over a quantized (int8/bf16) database.
+
+    Args as :func:`fused_query_topk`, plus ``codes`` (n_items, N) int8 or
+    bf16 stored rows and ``scale`` the segment's symmetric dequant scale
+    (scalar f32; 1.0 for bf16).  Scoring runs in code space (the query is
+    mapped by ``round(q/scale)`` once) and distances are scaled back to the
+    fp32 metric, so results from quantized and fp32 segments merge into one
+    comparable pool.  Serve callers rescore the merged survivors exactly
+    via ``quantize.rerank_survivors`` -- see docs/architecture.md
+    § "The precision tier".
+    """
+    mode = dispatch.query_backend(backend)
+    if mode != "reference" and k > _FUSED_TOPK_WIDTH:
+        warnings.warn(
+            f"quantized_query_topk: k={k} exceeds the kernel's "
+            f"{_FUSED_TOPK_WIDTH}-lane top-k scratch; falling back to the "
+            "memory-bound reference path", stacklevel=2)
+        mode = "reference"
+    return _quantized_query_impl(q, codes, scale, ids, k, p, valid_items,
+                                 mode)
+
+
 # -- cross-segment top-k merge (the streaming serve layer's fan-in) ----------
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def _merge_topk_impl(dists, ids, k):
+def _sort_pairs(d, ids, mode: str):
+    """Lexicographic (distance, id) sort -- the one primitive both merge
+    wrappers share.  All three modes produce bit-identical output on
+    NaN-free input (the order is total and there is no payload), so the
+    merge *semantics* are mode-independent; only the lowering differs."""
+    if mode == "sort":
+        return jax.lax.sort((d, ids), num_keys=2, is_stable=True)
+    if mode == "pallas":
+        return merge_kernel.sort_pairs_pallas(
+            d, ids, interpret=_interp(dispatch.kernel_mode()))
+    return merge_kernel.sort_pairs(d, ids)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "mode"))
+def _merge_topk_impl(dists, ids, k, mode):
     d = jnp.where(ids < 0, jnp.inf, dists)
     # lexicographic (distance, id) sort: deterministic under distance ties,
     # so a segmented query is bit-reproducible run to run.
-    sd, si = jax.lax.sort((d, ids.astype(jnp.int32)), num_keys=2,
-                          is_stable=True)
+    sd, si = _sort_pairs(d, ids.astype(jnp.int32), mode)
     sd, si = sd[..., :k], si[..., :k]
     return sd, jnp.where(jnp.isinf(sd), -1, si)
 
@@ -245,7 +295,7 @@ def _pad_to_k(dists, ids, k: int):
     return dists, ids
 
 
-def merge_topk(dists, ids, k: int):
+def merge_topk(dists, ids, k: int, mode: str | None = None):
     """Merge per-shard top-k lists into a global top-k.
 
     The fan-in of both the cross-segment query (serve/segments.py) and the
@@ -254,24 +304,26 @@ def merge_topk(dists, ids, k: int):
     Args:
         dists/ids: (nq, M) f32/int32 -- M is the concatenation of every
             shard's k results (-1 id = empty slot).
+        mode: merge implementation (bitonic/pallas/sort); default per
+            ``dispatch.merge_backend``.  Bit-identical across modes.
     Returns:
         (dists (nq, k), ids (nq, k)), ascending by distance, -1/inf padded.
 
     The (distance, id) sort order is *total and stable*, which is what makes
     two-level merges (per-device, then across devices) bit-identical to one
-    flat merge -- the sharding invariant leans on this.  M is tiny
-    (n_shards * k), so a full lexicographic sort beats a tournament tree at
-    every realistic size.
+    flat merge -- the sharding invariant leans on this.  The default
+    bitonic network keeps the fan-in a fixed log^2(M) ladder of dense
+    compare-exchange passes instead of a general ``sort(n_dev * k)``.
     """
     dists, ids = _pad_to_k(dists, ids, k)
-    return _merge_topk_impl(dists, ids, k)
+    return _merge_topk_impl(dists, ids, k, dispatch.merge_backend(mode))
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def _merge_topk_unique_impl(dists, ids, k):
+@functools.partial(jax.jit, static_argnames=("k", "mode"))
+def _merge_topk_unique_impl(dists, ids, k, mode):
     d = jnp.where(ids < 0, jnp.inf, dists)
     ids = ids.astype(jnp.int32)
-    sd, si = jax.lax.sort((d, ids), num_keys=2, is_stable=True)
+    sd, si = _sort_pairs(d, ids, mode)
     # Replicas of one segment return bit-identical (dist, gid) rows, so
     # duplicates are adjacent after the lexicographic sort; keep the first.
     dup = jnp.concatenate([jnp.zeros_like(si[..., :1], dtype=bool),
@@ -280,14 +332,14 @@ def _merge_topk_unique_impl(dists, ids, k):
     sd = jnp.where(dup, jnp.inf, sd)
     si = jnp.where(dup, -1, si)
     # Re-sort to push the masked duplicates past the top-k cut.  With no
-    # duplicates this stable re-sort is the identity, so the result is
+    # duplicates this re-sort is the identity, so the result is
     # bit-identical to plain merge_topk.
-    sd, si = jax.lax.sort((sd, si), num_keys=2, is_stable=True)
+    sd, si = _sort_pairs(sd, si, mode)
     sd, si = sd[..., :k], si[..., :k]
     return sd, jnp.where(jnp.isinf(sd), -1, si)
 
 
-def merge_topk_unique(dists, ids, k: int):
+def merge_topk_unique(dists, ids, k: int, mode: str | None = None):
     """:func:`merge_topk` that additionally dedups by id.
 
     The fan-in of the **replicated** sharded query
@@ -296,8 +348,8 @@ def merge_topk_unique(dists, ids, k: int):
     per answering replica; keeping only the first occurrence makes the
     merged top-k identical to the unreplicated path.  On duplicate-free
     input this is bit-identical to :func:`merge_topk` (the dedup mask is
-    empty and the second stable sort is the identity), which is why the
+    empty and the second sort is the identity), which is why the
     replicated serve path can use it unconditionally.
     """
     dists, ids = _pad_to_k(dists, ids, k)
-    return _merge_topk_unique_impl(dists, ids, k)
+    return _merge_topk_unique_impl(dists, ids, k, dispatch.merge_backend(mode))

@@ -60,7 +60,7 @@ import os
 
 
 def default_specs(n_dims=64, segment_capacity=1024, shard_axis=None,
-                  replicate="none", max_delay_ms=2.0):
+                  replicate="none", max_delay_ms=2.0, precision="fp32"):
     """The launcher's three-tenant deployment, importable by tests and the
     front-end load generator so the live server and a direct in-process
     registry are built from *the same specs* (the wire-parity tests depend
@@ -70,7 +70,8 @@ def default_specs(n_dims=64, segment_capacity=1024, shard_axis=None,
 
     common = dict(n_dims=n_dims, segment_capacity=segment_capacity,
                   chunk_sizes=(8, 32, 128), max_delay_ms=max_delay_ms,
-                  shard_axis=shard_axis, replication=replicate)
+                  shard_axis=shard_axis, replication=replicate,
+                  precision=precision)
     return (
         ServableSpec(name="l2-basis", p=2.0, r=4.0, embedder="basis",
                      **common),
@@ -109,6 +110,12 @@ def main():
                     help="serve SPMD over this many devices (0 = off; on "
                          "CPU this forces the host device count, so it must "
                          "be the first jax-touching flag)")
+    ap.add_argument("--precision", default="fp32",
+                    choices=("fp32", "bf16", "int8"),
+                    help="sealed-segment storage precision tier for every "
+                         "tenant: fp32 is bit-exact, bf16/int8 are "
+                         "bounded-loss with exact survivor rerank "
+                         "(REPRO_STORE_DTYPE overrides at registration)")
     ap.add_argument("--replicate", default="none",
                     help="hot-segment replication policy for sharded "
                          "tenants: none | static:k | auto (auto re-places "
@@ -208,7 +215,8 @@ def main():
                                   segment_capacity=args.segment_capacity,
                                   shard_axis=shard_axis,
                                   replicate=args.replicate,
-                                  max_delay_ms=args.max_delay_ms):
+                                  max_delay_ms=args.max_delay_ms,
+                                  precision=args.precision):
             registry.register(spec)
         print(f"[serve] registered tenants {registry.names()}")
 

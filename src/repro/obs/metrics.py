@@ -113,6 +113,14 @@ CATALOG: Dict[str, MetricSpec] = _catalog(
     MetricSpec("router_device_load", "gauge",
                "QueryRouter cumulative load ledger per device",
                ("tenant", "device")),
+    # Situational: only published once a tenant has sealed segments
+    # (store_bytes) or serves a quantized precision tier (survivor_frac).
+    MetricSpec("store_bytes_per_item", "gauge",
+               "Sealed-segment storage bytes per live item (precision tier)",
+               ("tenant",)),
+    MetricSpec("rerank_survivor_frac", "gauge",
+               "Fraction of survivor-rerank slots holding real candidates",
+               ("tenant",)),
     # -- write path ------------------------------------------------------
     MetricSpec("wal_appends_total", "counter",
                "WAL records appended", ("tenant",), required=True),

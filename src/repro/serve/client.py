@@ -23,15 +23,77 @@ the wire-parity contract (invariant 9).
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 import socket
 import threading
 import time
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import numpy as np
 
 from . import protocol
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Capped-exponential retry schedule for structured backpressure.
+
+    The front-end's rejections carry ``retry_after_ms`` -- the server's own
+    estimate of when capacity frees up.  :func:`request_with_retries` waits
+    ``max(base_ms * 2^attempt, retry_after_ms)`` (clipped to ``cap_ms``)
+    between attempts: the hint is honored as a *floor* (retrying sooner
+    than the server asked just feeds the storm) while the exponential term
+    keeps repeated rejections backing off even when the hint stays flat.
+    Deliberately jitter-free: one policy always produces one schedule, so
+    tests assert exact sleep sequences; fleet-scale jitter belongs in the
+    caller's choice of ``base_ms``, not hidden randomness.
+    """
+
+    max_attempts: int = 5           # total send attempts (first one included)
+    base_ms: float = 10.0
+    cap_ms: float = 1000.0
+    # structured codes worth retrying: transient capacity, not semantics
+    retryable: Tuple[str, ...] = ("overloaded", "queue_full")
+
+    def backoff_ms(self, attempt: int,
+                   retry_after_ms: Optional[float] = None) -> float:
+        """Delay before retry number ``attempt`` (0-based), honoring the
+        server hint as a floor and ``cap_ms`` as the ceiling."""
+        sched = self.base_ms * (2.0 ** attempt)
+        if retry_after_ms:
+            sched = max(sched, float(retry_after_ms))
+        return min(sched, self.cap_ms)
+
+
+def request_with_retries(send: Callable[[], dict],
+                         policy: RetryPolicy = RetryPolicy(),
+                         sleep: Callable[[float], None] = time.sleep
+                         ) -> Tuple[dict, int]:
+    """Run ``send()`` until it returns ok / a non-retryable rejection / the
+    attempt budget runs out.
+
+    Args:
+        send: zero-arg callable issuing one raw request (e.g.
+            ``lambda: client.query(tenant, q, k)``).
+        policy: the backoff schedule; rejections whose ``code`` is not in
+            ``policy.retryable`` are returned immediately.
+        sleep: injectable for tests (receives seconds).
+
+    Returns:
+        ``(response, n_retries)`` -- the final response (the caller still
+        inspects ``ok``; the last attempt may itself be a rejection) and
+        how many retries were spent on it.
+    """
+    resp = send()
+    retries = 0
+    while (not resp.get("ok")
+           and resp.get("code") in policy.retryable
+           and retries < policy.max_attempts - 1):
+        sleep(policy.backoff_ms(retries, resp.get("retry_after_ms")) / 1e3)
+        resp = send()
+        retries += 1
+    return resp, retries
 
 
 class FrontendError(RuntimeError):
@@ -113,6 +175,19 @@ class FrontendClient:
         if timeout_ms is not None:
             fields["timeout_ms"] = float(timeout_ms)
         return self.request("query", **fields)
+
+    def query_with_retries(self, tenant: str, queries, k: int,
+                           n_probes: int = 1,
+                           policy: RetryPolicy = RetryPolicy(),
+                           sleep: Callable[[float], None] = time.sleep
+                           ) -> Tuple[dict, int]:
+        """:meth:`query` through :func:`request_with_retries`: backpressure
+        rejections (``overloaded``/``queue_full``) are retried on the
+        policy's schedule, honoring the server's ``retry_after_ms`` hint.
+        Returns (final raw response, retries spent)."""
+        return request_with_retries(
+            lambda: self.query(tenant, queries, k, n_probes=n_probes),
+            policy=policy, sleep=sleep)
 
     def query_arrays(self, tenant: str, queries, k: int,
                      n_probes: int = 1,

@@ -40,7 +40,7 @@ import numpy as np
 from ..checkpoint import checkpoint as ckpt
 from ..core.index import IndexConfig, LSHIndexState
 from ..embedders import embedder_names, make_embedder
-from ..kernels import dispatch
+from ..kernels import dispatch, quantize
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from . import faults, wal as walmod
@@ -90,11 +90,25 @@ class ServableSpec:
     #                 merge-win skew at every compact() (the telemetry ->
     #                 placement loop; see serve/router.auto_factors).
     replication: str = "none"
+    # Sealed-segment storage precision tier: "fp32" (bit-exact, the
+    # default) | "bf16" | "int8" (bounded-loss, survivor-reranked --
+    # invariant 10).  register() resolves it ONCE through
+    # ``dispatch.store_dtype`` (where $REPRO_STORE_DTYPE wins), so the WAL
+    # REGISTER record and every snapshot carry the tier that actually
+    # served; recovery never re-reads the env.
+    precision: str = "fp32"
+    # survivor-rerank pool width m (0 = the default 4*k; see
+    # ``kernels.quantize.survivor_width``) -- quantized tiers only
+    survivor_k: int = 0
 
     def __post_init__(self):
         if self.embedder not in embedder_names():
             raise ValueError(
                 f"embedder must be one of {embedder_names()}")
+        if self.precision not in dispatch.STORE_DTYPES:
+            raise ValueError(
+                f"precision must be one of {dispatch.STORE_DTYPES}, "
+                f"got {self.precision!r}")
         self.replication_policy()    # fail fast on a malformed policy
 
     def replication_policy(self):
@@ -160,7 +174,9 @@ class Servable:
                                     key=jax.random.PRNGKey(spec.seed),
                                     backend=backend,
                                     on_fanout=self.stats.record_fanout,
-                                    tenant=spec.name)
+                                    tenant=spec.name,
+                                    precision=spec.precision,
+                                    survivor_k=spec.survivor_k)
         if spec.shard_axis is not None and mesh is not None \
                 and spec.shard_axis in mesh.axis_names:
             self.index.shard(mesh, spec.shard_axis)
@@ -312,6 +328,13 @@ class ServableRegistry:
                 if self._wal_dir else None)
 
     def register(self, spec: ServableSpec) -> Servable:
+        # resolve the precision tier exactly once, here: the env override
+        # ($REPRO_STORE_DTYPE) is applied at registration and the RESOLVED
+        # value is what rides the WAL REGISTER record and every snapshot,
+        # so recovery rebuilds the tier that actually served
+        resolved = dispatch.store_dtype(spec.precision)
+        if resolved != spec.precision:
+            spec = dataclasses.replace(spec, precision=resolved)
         with self._lock:
             sv = self._register(spec)
             wpath = self._wal_path(spec.name)
@@ -392,14 +415,23 @@ class ServableRegistry:
             # host-side counters describe the same instant (a concurrent
             # insert must not land between them)
             with idx._lock:
+                # quantized sealed segments additionally persist their
+                # dequant scale and the fp32 survivor pool -- the pool IS
+                # canonical exact state under a lossy tier, so a restored
+                # tenant reranks/compacts byte-for-byte like the original
                 tree = {"segments": [
-                    {"state": seg.state, "gids": seg.gids, "live": seg.live}
+                    dict({"state": seg.state, "gids": seg.gids,
+                          "live": seg.live},
+                         **({"scale": seg.scale, "pool": seg.pool}
+                            if seg.scale is not None else {}))
                     for seg in idx.segments]}
                 extra = {
                     "spec": dataclasses.asdict(sv.spec),
                     "next_gid": idx._next_gid,
                     "segments": [{"n_items": s.n_items, "n_live": s.n_live,
-                                  "sealed": s.sealed} for s in idx.segments],
+                                  "sealed": s.sealed,
+                                  "quantized": s.scale is not None}
+                                 for s in idx.segments],
                     # observability only: restore re-derives placement from
                     # spec.shard_axis + the restoring registry's mesh (which
                     # may be a different size -- elastic re-mesh)
@@ -440,22 +472,36 @@ class ServableRegistry:
         cap = spec.segment_capacity
         lk = spec.n_tables * spec.n_hashes
         seg_meta = extra["segments"]
-        seg_struct = {
-            "state": LSHIndexState(
-                alpha=jax.ShapeDtypeStruct((spec.n_dims, lk), jnp.float32),
-                b=jax.ShapeDtypeStruct((lk,), jnp.float32),
-                mix=jax.ShapeDtypeStruct((spec.n_tables, spec.n_hashes),
-                                         jnp.uint32),
-                table=jax.ShapeDtypeStruct(
-                    (spec.n_tables, cfg.n_buckets, spec.bucket_capacity),
-                    jnp.int32),
-                counts=jax.ShapeDtypeStruct(
-                    (spec.n_tables, cfg.n_buckets), jnp.int32),
-                db=jax.ShapeDtypeStruct((cap, spec.n_dims), jnp.float32)),
-            "gids": jax.ShapeDtypeStruct((cap,), jnp.int32),
-            "live": jax.ShapeDtypeStruct((cap,), jnp.bool_),
-        }
-        target = {"segments": [seg_struct for _ in seg_meta]}
+
+        def seg_struct(quantized: bool) -> dict:
+            # sealed segments on a lossy tier store codes (int8/bf16) plus
+            # a scale and the fp32 survivor pool; everything else is fp32
+            db_dt = (quantize.storage_dtype(spec.precision) if quantized
+                     else jnp.float32)
+            struct = {
+                "state": LSHIndexState(
+                    alpha=jax.ShapeDtypeStruct((spec.n_dims, lk),
+                                               jnp.float32),
+                    b=jax.ShapeDtypeStruct((lk,), jnp.float32),
+                    mix=jax.ShapeDtypeStruct((spec.n_tables, spec.n_hashes),
+                                             jnp.uint32),
+                    table=jax.ShapeDtypeStruct(
+                        (spec.n_tables, cfg.n_buckets, spec.bucket_capacity),
+                        jnp.int32),
+                    counts=jax.ShapeDtypeStruct(
+                        (spec.n_tables, cfg.n_buckets), jnp.int32),
+                    db=jax.ShapeDtypeStruct((cap, spec.n_dims), db_dt)),
+                "gids": jax.ShapeDtypeStruct((cap,), jnp.int32),
+                "live": jax.ShapeDtypeStruct((cap,), jnp.bool_),
+            }
+            if quantized:
+                struct["scale"] = jax.ShapeDtypeStruct((), jnp.float32)
+                struct["pool"] = jax.ShapeDtypeStruct((cap, spec.n_dims),
+                                                      jnp.float32)
+            return struct
+
+        target = {"segments": [seg_struct(m.get("quantized", False))
+                               for m in seg_meta]}
         try:
             tree = ckpt.restore(tdir, s, target)
         except ckpt.CheckpointCorruptError:
@@ -470,7 +516,10 @@ class ServableRegistry:
                                                  seg_meta)):
             seg = Segment(state=payload["state"], gids=payload["gids"],
                           live=payload["live"], n_items=meta["n_items"],
-                          n_live=meta["n_live"], sealed=meta["sealed"])
+                          n_live=meta["n_live"], sealed=meta["sealed"],
+                          scale=payload.get("scale"),
+                          pool=(np.asarray(payload["pool"])
+                                if "pool" in payload else None))
             idx.segments.append(seg)
             g = np.asarray(seg.gids)[:seg.n_items]
             for slot, gid in enumerate(g.tolist()):

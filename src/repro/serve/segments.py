@@ -60,7 +60,8 @@ import numpy as np
 
 from ..core import distributed, index as lidx
 from ..core.index import IndexConfig, LSHIndexState
-from ..kernels import dispatch, ops
+from ..kernels import dispatch, ops, quantize
+from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from ..sharding import placement as seg_placement
 from . import faults, wal as walmod
@@ -79,6 +80,10 @@ class Segment:
     n_items: int = 0              # slots used (including tombstoned)
     n_live: int = 0               # live items
     sealed: bool = False
+    # Precision tier (sealed segments under bf16/int8 only; always None on
+    # fp32 tenants and on the mutable delta, which stays fp32 until sealed):
+    scale: Optional[Array] = None     # () f32 symmetric dequant scale
+    pool: Optional[np.ndarray] = None  # (capacity, N) f32 survivor side pool
 
     @property
     def capacity(self) -> int:
@@ -109,6 +114,23 @@ def _segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
         return lidx.query_index_gids(state, cfg, q, k, gids,
                                      n_probes=n_probes, backend=backend,
                                      live_mask=live)
+
+    return jax.jit(f)
+
+
+@functools.lru_cache(maxsize=64)
+def _quantized_segment_query_fn(cfg: IndexConfig, k: int, n_probes: int,
+                                backend: Optional[str]):
+    """Quantized-tier sibling of :func:`_segment_query_fn`: candidates are
+    scored in code space against the segment's int8/bf16 ``db`` with one
+    per-segment dequant ``scale`` -- no fp32 decode of the stored rows."""
+
+    def f(state: LSHIndexState, q: Array, live: Array, gids: Array,
+          scale: Array):
+        return lidx.query_index_gids_quantized(state, cfg, q, k, gids, scale,
+                                               n_probes=n_probes,
+                                               backend=backend,
+                                               live_mask=live)
 
     return jax.jit(f)
 
@@ -163,11 +185,22 @@ class SegmentedIndex:
     def __init__(self, cfg: IndexConfig, *, segment_capacity: int = 1024,
                  insert_chunk: int = 256, key: Optional[jax.Array] = None,
                  backend: Optional[str] = None, seed: int = 0,
-                 on_fanout=None, tenant: str = "default"):
+                 on_fanout=None, tenant: str = "default",
+                 precision: str = "fp32", survivor_k: int = 0):
         if insert_chunk > segment_capacity:
             insert_chunk = segment_capacity
         self.cfg = cfg
         self.tenant = tenant              # label on spans/metrics only
+        # Storage precision tier: taken VERBATIM (validated, never re-
+        # resolved against $REPRO_STORE_DTYPE) so recovery serves the tier
+        # the WAL/snapshot recorded -- dispatch.store_dtype is the caller's
+        # job (the registry runs it once at registration).  survivor_k = 0
+        # means the default 4*k survivor pool (quantize.survivor_width).
+        if precision not in dispatch.STORE_DTYPES:
+            raise ValueError(f"unknown precision {precision!r}; want one "
+                             f"of {dispatch.STORE_DTYPES}")
+        self.precision = precision
+        self.survivor_k = int(survivor_k)
         # load/imbalance telemetry hook: called after every cross-segment
         # merge with (seg_wins, dev_wins, seg_candidates) -- see
         # ServingStats.record_fanout, whose signature this matches.  None
@@ -257,13 +290,51 @@ class SegmentedIndex:
                 self._seal()
 
     def _seal(self) -> None:
-        """Apply a seal (callers hold the lock; never logs)."""
+        """Apply a seal (callers hold the lock; never logs).
+
+        Under a quantized precision tier this is the encode point: the
+        delta's fp32 rows become int8/bf16 codes + one dequant scale, and
+        the exact fp32 rows move to a host-side survivor pool (rerank,
+        ``live_items``, compaction all read through it).  Encoding happens
+        BEFORE the sealed flag flips, so a failed encode leaves the delta
+        mutable and untouched.  fp32 tenants never enter this branch --
+        their sealed state is byte-for-byte what it was before the tier
+        existed (invariant 10).
+        """
         if self.delta.n_items == 0:
             return
+        if self.precision != "fp32":
+            self._quantize_segment(self.delta)
         self.delta.sealed = True
         self._open_segment()
         self._version += 1
         self._sealed_version += 1
+        self._publish_store_metrics()
+
+    def _quantize_segment(self, seg: Segment) -> None:
+        """Encode one about-to-seal segment into the storage tier."""
+        pool = np.asarray(seg.state.db)
+        if not np.isfinite(pool).all():
+            # insert() already rejects NaN/Inf batches; this is the seal-
+            # time defense the quantizer contract requires (a non-finite
+            # row would corrupt the shared scale for the whole segment)
+            raise ValueError(
+                f"segment holds non-finite embeddings; refusing to "
+                f"quantize to {self.precision} at seal")
+        codes, scale = quantize.encode(seg.state.db, self.precision)
+        seg.state = dataclasses.replace(seg.state, db=codes)
+        seg.scale = scale
+        seg.pool = pool
+
+    def _publish_store_metrics(self) -> None:
+        """Sealed-store bytes per live item (the tier's capacity win)."""
+        sealed = [s for s in self.segments[:-1] if s.n_items > 0]
+        items = sum(s.n_live for s in sealed)
+        if not items:
+            return
+        nbytes = sum(int(s.state.db.nbytes) for s in sealed)
+        obs_metrics.registry().set("store_bytes_per_item", nbytes / items,
+                                   tenant=self.tenant)
 
     # -- durability ---------------------------------------------------------
 
@@ -569,7 +640,12 @@ class SegmentedIndex:
                 live = np.asarray(seg.live)[:seg.n_items]
                 if not live.any():
                     continue
-                emb_parts.append(np.asarray(seg.state.db)[:seg.n_items][live])
+                # quantized sealed segments read their exact fp32 rows from
+                # the survivor pool, so live_items (and through it compact
+                # and the recall proxy) never sees quantization error
+                db = (seg.pool if seg.pool is not None
+                      else np.asarray(seg.state.db))
+                emb_parts.append(db[:seg.n_items][live])
                 gid_parts.append(np.asarray(seg.gids)[:seg.n_items][live])
         if not emb_parts:
             return (np.zeros((0, self.cfg.n_dims), np.float32),
@@ -623,6 +699,11 @@ class SegmentedIndex:
         never touch it, which is what makes invariant 8 structural.
         """
         q = jnp.asarray(queries, jnp.float32)
+        if self.precision != "fp32":
+            # quantized tiers run the survivor-rerank engine; the deep-
+            # trace staged engine stays fp32-only by design (its stage
+            # functions are the exact-path ones)
+            return self._query_quantized(q, k, n_probes)
         tr = obs_trace.tracer()
         if tr.deep and tr.sampled():
             return self._query_staged(q, k, n_probes, tr)
@@ -669,6 +750,110 @@ class SegmentedIndex:
                 np.asarray(g), seg_ids,
                 [np.asarray(sg) for sg, _ in shards])
         return g, d
+
+    def _query_quantized(self, q: Array, k: int, n_probes: int
+                         ) -> Tuple[Array, Array]:
+        """Two-stage quantized query: cheap code-space candidate scoring to
+        a survivor pool of ``m >= k``, then an exact fp32 rescore of just
+        those survivors.
+
+        Stage 1 runs the same fan-out shapes as :meth:`query` but asks each
+        segment for the top ``m = survivor_width(k, survivor_k, C)``
+        candidates scored against the int8/bf16 codes (the delta, still
+        fp32, is scored exactly).  Stage 2 gathers the survivors' exact
+        rows from the host-side pools and reranks under the same total
+        (distance, gid) order, so any survivor set containing the true
+        top-k yields exactly the fp32 answer.  Sharded and unsharded paths
+        agree because the rerank is a pure function of the survivor set.
+        """
+        kq = quantize.survivor_width(
+            k, self.survivor_k,
+            self.cfg.n_tables * n_probes * self.cfg.bucket_capacity)
+        with self._lock:
+            self.query_shapes.add((int(q.shape[0]), k, n_probes))
+            if self._mesh is not None:
+                pl = self._current_placement()
+                plan = self._router.route() if self._router else None
+                g, d = distributed.query_segments_sharded(
+                    pl, self.cfg, q, kq, n_probes=n_probes,
+                    backend=self.backend,
+                    active=None if plan is None else plan.active,
+                    quantized=True)
+            else:
+                g = None
+                seg_ids = [i for i, s in enumerate(self.segments)
+                           if s.n_live > 0]
+                exact = _segment_query_fn(self.cfg, kq, n_probes,
+                                          self.backend)
+                qfn = _quantized_segment_query_fn(self.cfg, kq, n_probes,
+                                                  self.backend)
+                shards = []
+                for i in seg_ids:
+                    seg = self.segments[i]
+                    if seg.scale is not None:
+                        shards.append(qfn(seg.state, q, seg.live, seg.gids,
+                                          seg.scale))
+                    else:   # the delta (and any not-yet-sealed segment)
+                        shards.append(exact(seg.state, q, seg.live,
+                                            seg.gids))
+        if g is None:
+            if not shards:
+                return (jnp.full((q.shape[0], k), -1, jnp.int32),
+                        jnp.full((q.shape[0], k), jnp.inf, jnp.float32))
+            if len(shards) == 1:
+                g, _ = _merged(shards[0][1], shards[0][0], kq)
+            else:
+                g_all = jnp.concatenate([sg for sg, _ in shards], axis=1)
+                d_all = jnp.concatenate([sd for _, sd in shards], axis=1)
+                g, _ = _merged(d_all, g_all, kq)
+        # survivor rescore: host-gather the exact rows, rerank on device
+        g_np = np.asarray(g).copy()
+        rows = self._survivor_rows(g_np)
+        g, d = quantize.rerank_survivors(q, jnp.asarray(rows),
+                                         jnp.asarray(g_np), k,
+                                         p=self.cfg.p)
+        if self._on_fanout is not None:
+            self._fanout_telemetry(np.asarray(g))
+        if g_np.size:
+            obs_metrics.registry().set("rerank_survivor_frac",
+                                       float((g_np >= 0).mean()),
+                                       tenant=self.tenant)
+        return g, d
+
+    def _survivor_rows(self, g_np: np.ndarray) -> np.ndarray:
+        """Exact fp32 rows for a (nq, m) survivor-gid matrix.
+
+        Sealed quantized segments serve from their host pools (zero device
+        traffic); fp32 segments (the delta, or every segment on a tenant
+        that mixed seals before a precision change) fetch their device db
+        once per batch.  Gids the locator no longer knows (a concurrent
+        compact between merge and gather) are masked to -1 in-place so the
+        rerank drops them instead of scoring a zero row.
+        """
+        nq, m = g_np.shape
+        rows = np.zeros((nq, m, self.cfg.n_dims), np.float32)
+        with self._lock:
+            host_db: dict = {}
+            for qi in range(nq):
+                for j in range(m):
+                    gid = int(g_np[qi, j])
+                    if gid < 0:
+                        continue
+                    loc = self._locator.get(gid)
+                    if loc is None:
+                        g_np[qi, j] = -1
+                        continue
+                    si, slot = loc
+                    seg = self.segments[si]
+                    if seg.pool is not None:
+                        rows[qi, j] = seg.pool[slot]
+                    else:
+                        db = host_db.get(si)
+                        if db is None:
+                            db = np.asarray(seg.state.db)
+                            host_db[si] = db
+                        rows[qi, j] = db[slot]
+        return rows
 
     def _query_staged(self, q: Array, k: int, n_probes: int,
                       tr) -> Tuple[Array, Array]:

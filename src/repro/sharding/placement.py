@@ -94,6 +94,11 @@ class SegmentPlacement:
     delta_live: Array
     assignment: tuple
     replication: tuple = ()
+    # Per-instance symmetric dequant scales, (n_dev * per_dev,) f32 sharded
+    # alongside the sealed stack.  1.0 for fp32/bf16/padding instances, so
+    # the quantized collective can consume it unconditionally; the fp32
+    # collective simply never reads it.
+    sealed_scales: Any = None
 
     def layout(self) -> dict:
         """JSON-able description of the placement (snapshot manifests,
@@ -200,22 +205,31 @@ def place_segments(segments: Sequence, delta, mesh: Mesh, axis: str,
     n_dev, per_dev, assignment = lay["n_dev"], lay["per_dev"], lay["assignment"]
 
     # Block layout: device d's contiguous stripe is assignment[d] + padding.
-    # Padding reuses the delta's (zeroed) leaf shapes with an all-dead live
-    # mask, so it is queryable but contributes nothing.
-    pad_state = jax.tree.map(jnp.zeros_like, delta.state)
+    # Padding reuses a sealed segment's (zeroed) leaf shapes with an
+    # all-dead live mask, so it is queryable but contributes nothing.  The
+    # zero-template must come from a SEALED segment when any exist: under a
+    # quantized precision tier the sealed ``db`` leaves are int8/bf16 while
+    # the delta stays fp32, and jnp.stack refuses (rightly) to mix them.
+    pad_src = segments[0].state if n_sealed else delta.state
+    pad_state = jax.tree.map(jnp.zeros_like, pad_src)
     pad_gids = jnp.full_like(delta.gids, -1)
     pad_live = jnp.zeros_like(delta.live)
-    states, gids, lives = [], [], []
+    states, gids, lives, scales = [], [], [], []
     for d in range(n_dev):
         block = assignment[d]
         for si in block:
-            states.append(segments[si].state)
-            gids.append(segments[si].gids)
-            lives.append(segments[si].live)
+            seg = segments[si]
+            states.append(seg.state)
+            gids.append(seg.gids)
+            lives.append(seg.live)
+            scale = getattr(seg, "scale", None)
+            scales.append(jnp.float32(1.0) if scale is None
+                          else jnp.asarray(scale, jnp.float32))
         for _ in range(per_dev - len(block)):
             states.append(pad_state)
             gids.append(pad_gids)
             lives.append(pad_live)
+            scales.append(jnp.float32(1.0))
 
     shard = NamedSharding(mesh, P(axis))
     repl = NamedSharding(mesh, P())
@@ -226,6 +240,7 @@ def place_segments(segments: Sequence, delta, mesh: Mesh, axis: str,
         sealed_state=jax.device_put(stacked, shard),
         sealed_gids=jax.device_put(jnp.stack(gids), shard),
         sealed_live=jax.device_put(jnp.stack(lives), shard),
+        sealed_scales=jax.device_put(jnp.stack(scales), shard),
         delta_state=jax.device_put(delta.state, repl),
         delta_gids=jax.device_put(delta.gids, repl),
         delta_live=jax.device_put(delta.live, repl),

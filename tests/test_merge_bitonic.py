@@ -1,0 +1,118 @@
+"""Bitonic merge network vs ``jax.lax.sort``: bit-identity, exhaustively.
+
+The serve stack's entire parity story (invariants 3/6/9) flows through one
+total order -- lexicographic (distance, gid) -- so swapping the fan-in sort
+for the kernels/merge.py bitonic network is only safe if the two are
+*bit-identical* on every NaN-free input the merge wrappers can produce:
+duplicate pairs (replicated segments), (inf, -1) padding rows, non-power-
+of-two pool widths, and pre-sorted runs.  Hypothesis drives the pair
+generator; fixed cases pin the regressions we already know about.
+"""
+
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).parent))
+from _hypothesis_support import given, settings, st  # noqa: E402
+
+from repro.kernels import merge, ops  # noqa: E402
+
+
+def _lax_sorted(d, i):
+    return jax.lax.sort((jnp.asarray(d, jnp.float32),
+                         jnp.asarray(i, jnp.int32)),
+                        num_keys=2, is_stable=True)
+
+
+def _assert_pairs_equal(got, want):
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+@pytest.mark.parametrize("width", [1, 2, 3, 5, 8, 13, 16, 40, 64, 100])
+def test_network_matches_lax_sort_widths(width):
+    rng = np.random.default_rng(width)
+    d = rng.normal(size=(4, width)).astype(np.float32)
+    i = rng.integers(-1, 50, size=(4, width)).astype(np.int32)
+    _assert_pairs_equal(merge.sort_pairs(jnp.asarray(d), jnp.asarray(i)),
+                        _lax_sorted(d, i))
+
+
+def test_duplicates_and_padding_rows():
+    # replicated segments contribute duplicate (distance, gid) pairs and
+    # both merge wrappers right-pad with (inf, -1) -- the exact shapes the
+    # network must keep ordering identically to lax.sort
+    d = np.array([[1.0, 1.0, np.inf, 0.5, 1.0, np.inf, 0.5]], np.float32)
+    i = np.array([[7, 7, -1, 3, 2, -1, 3]], np.int32)
+    _assert_pairs_equal(merge.sort_pairs(jnp.asarray(d), jnp.asarray(i)),
+                        _lax_sorted(d, i))
+
+
+def test_pallas_variant_matches_reference():
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=(5, 24)).astype(np.float32)
+    d[:, 7] = d[:, 3]                       # duplicate distances
+    i = rng.integers(-1, 30, size=(5, 24)).astype(np.int32)
+    _assert_pairs_equal(
+        merge.sort_pairs_pallas(jnp.asarray(d), jnp.asarray(i),
+                                interpret=True),
+        _lax_sorted(d, i))
+
+
+def test_sorted_run_hint_preserves_result():
+    # merge fan-in feeds k-sorted runs; the sorted_run fast path must not
+    # change the answer
+    rng = np.random.default_rng(1)
+    k, shards = 8, 4
+    parts = np.sort(rng.normal(size=(3, shards, k)).astype(np.float32),
+                    axis=-1)
+    d = parts.reshape(3, shards * k)
+    i = rng.integers(0, 99, size=(3, shards * k)).astype(np.int32)
+    _assert_pairs_equal(
+        merge.sort_pairs(jnp.asarray(d), jnp.asarray(i), sorted_run=k),
+        _lax_sorted(d, i))
+
+
+@pytest.mark.parametrize("mode", ["sort", "bitonic", "pallas"])
+def test_merge_topk_mode_parity(mode):
+    rng = np.random.default_rng(2)
+    d = rng.normal(size=(4, 40)).astype(np.float32)
+    g = rng.integers(-1, 60, size=(4, 40)).astype(np.int32)
+    want_d, want_g = ops.merge_topk(jnp.asarray(d), jnp.asarray(g), 10,
+                                    mode="sort")
+    got_d, got_g = ops.merge_topk(jnp.asarray(d), jnp.asarray(g), 10,
+                                  mode=mode)
+    np.testing.assert_array_equal(np.asarray(got_g), np.asarray(want_g))
+    np.testing.assert_array_equal(np.asarray(got_d), np.asarray(want_d))
+    want = ops.merge_topk_unique(jnp.asarray(d), jnp.asarray(g), 10,
+                                 mode="sort")
+    got = ops.merge_topk_unique(jnp.asarray(d), jnp.asarray(g), 10,
+                                mode=mode)
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_network_matches_lax_sort_property(data):
+    width = data.draw(st.integers(1, 48), label="width")
+    nq = data.draw(st.integers(1, 3), label="nq")
+    # finite distances from a coarse grid => plenty of duplicate keys, the
+    # case where only a total ORDER (not stability tricks) keeps the two
+    # implementations identical
+    d = np.asarray(data.draw(
+        st.lists(st.lists(st.sampled_from([0.0, 0.25, 0.5, 1.0, 2.0,
+                                           np.float32(np.inf)]),
+                          min_size=width, max_size=width),
+                 min_size=nq, max_size=nq)), np.float32)
+    i = np.asarray(data.draw(
+        st.lists(st.lists(st.integers(-1, 12), min_size=width,
+                          max_size=width),
+                 min_size=nq, max_size=nq)), np.int32)
+    _assert_pairs_equal(merge.sort_pairs(jnp.asarray(d), jnp.asarray(i)),
+                        _lax_sorted(d, i))

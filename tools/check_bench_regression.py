@@ -32,7 +32,14 @@ What is gated, per benchmark section:
 * ``trace_overhead_frac`` (query-throughput cost of sampling every trace,
   from ``bench_serve``) is gated **absolutely** at ``TRACE_OVERHEAD_MAX``
   -- the observability contract (docs/architecture.md, invariant 8) is
-  "tracing at full sampling costs < 5%", not "no slower than last time".
+  "tracing at full sampling costs < 5%", not "no slower than last time";
+* ``int8_bytes_ratio`` (int8 sealed bytes/item over fp32, from
+  ``bench_quantized_serve``) is gated **absolutely** at
+  ``BYTES_RATIO_MAX`` -- the storage-tier contract (invariant 10) is
+  ">= 3x sealed-store reduction", a product property like the trace
+  bound.  ``int8_recall_at10`` needs no special rule: the standard
+  ``*recall*`` family already caps its drop at ``RECALL_TOL``, which is
+  exactly invariant 10's 0.02 recall budget.
 
 Metrics outside those families (throughputs, imbalance numbers, raw
 timings) are never gated and are omitted from the delta table -- keeping
@@ -61,6 +68,7 @@ WALL_RATIO = 4.0       # current wall_s may be up to 4x baseline ...
 WALL_SLACK = 20.0      # ... plus 20s flat (compile-cache cold starts)
 RECOVERY_SLACK = 5.0   # recovery_s_* gets the 4x ratio but only 5s flat
 TRACE_OVERHEAD_MAX = 0.05   # sampled tracing may cost at most 5% QPS
+BYTES_RATIO_MAX = 0.30      # int8 sealed store must stay <= 0.3x fp32 bytes
 
 GATED_NOTE = {"ok": "", "FAIL": "  <-- gate", "NEW": "  (not in baseline)"}
 
@@ -104,7 +112,8 @@ def compare(current: dict, baseline: dict):
             gated = (("recall" in key) or ("parity" in key)
                      or key.endswith("_ok")
                      or key == "wall_s" or key.startswith("recovery_s")
-                     or key == "trace_overhead_frac")
+                     or key == "trace_overhead_frac"
+                     or key == "int8_bytes_ratio")
             if cv is None:
                 # a *gated* metric vanishing is itself a regression: a
                 # renamed parity flag must not silently stop being checked
@@ -134,6 +143,14 @@ def compare(current: dict, baseline: dict):
                         f"{name}/{key}: full-sampling tracing costs "
                         f"{cv:.1%} of query throughput (absolute limit "
                         f"{TRACE_OVERHEAD_MAX:.0%})")
+            elif key == "int8_bytes_ratio":
+                if cv > BYTES_RATIO_MAX:
+                    status = "FAIL"
+                    failures.append(
+                        f"{name}/{key}: int8 sealed store is {cv:.2f}x "
+                        f"the fp32 bytes/item (absolute limit "
+                        f"{BYTES_RATIO_MAX:.2f} -- the >=3x reduction "
+                        f"contract, invariant 10)")
             elif key == "wall_s" or key.startswith("recovery_s"):
                 slack = WALL_SLACK if key == "wall_s" else RECOVERY_SLACK
                 limit = bv * WALL_RATIO + slack
