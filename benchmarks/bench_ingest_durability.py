@@ -100,7 +100,7 @@ def run(seed: int = 0, out_csv: str = "experiments/ingest_durability.csv"
                 if i % 5 == 4:
                     sv.delete(g[::8])
                 if i % 7 == 6:
-                    sv.index.seal()
+                    sv.index.maintenance.seal()
             qs = (rng.normal(size=(16, N_DIMS)) * 0.9).astype(np.float32)
             want_i, want_d = map(np.asarray,
                                  sv.index.query(qs, K, n_probes=N_PROBES))

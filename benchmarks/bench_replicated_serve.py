@@ -110,7 +110,7 @@ _WORKER = """
     # the telemetry -> placement loop, exactly as ServableSpec "auto" at
     # compact time: sealed-only win prefix (delta is the trailing slot)
     factors = auto_factors(phase_none["wins"][:-1], n_dev)
-    si.set_replication(factors)
+    si.maintenance.set_replication(factors)
     phase_auto = run_phase("auto")
 
     print(json.dumps({{

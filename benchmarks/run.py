@@ -61,10 +61,10 @@ def main(argv=None) -> None:
 
     from . import (bench_cosine, bench_embed_error, bench_frontend,
                    bench_hash_throughput, bench_index,
-                   bench_ingest_durability, bench_l2, bench_query_engine,
-                   bench_quantized_serve, bench_replicated_serve,
-                   bench_serve, bench_sharded_serve, bench_w2,
-                   bench_wasserstein_serve)
+                   bench_ingest_durability, bench_inplace_ingest, bench_l2,
+                   bench_query_engine, bench_quantized_serve,
+                   bench_replicated_serve, bench_serve, bench_sharded_serve,
+                   bench_w2, bench_wasserstein_serve)
 
     sha = _git_sha()
     print("name,us_per_call,derived")
@@ -82,6 +82,7 @@ def main(argv=None) -> None:
         ("wasserstein_serve", bench_wasserstein_serve.run),
         ("quantized_serve", bench_quantized_serve.run),
         ("ingest_durability", bench_ingest_durability.run),
+        ("inplace_ingest", bench_inplace_ingest.run),
         ("frontend", bench_frontend.run),
     ]
     all_results = {}

@@ -28,7 +28,10 @@ This module also hosts the *serve layer's* collective query
 1-D serve axis, delta replicated).  Unlike the build/query pair above -- an
 independent per-device hash family for OR-amplified recall -- the serve
 path shards one *shared-family* index, which is what makes its results
-bit-identical to the single-device path.
+bit-identical to the single-device path.  The collective is keyed on the
+placement's ``per_dev`` (its physical slot stride, headroom included), so
+in-place placement diffs that keep the stride constant reuse the compiled
+program -- padded/freed slots are simply inactive in the mask.
 """
 
 from __future__ import annotations

@@ -8,7 +8,12 @@ WAL, telemetry): the scripted demo below, and ``--listen HOST:PORT`` which
 hands the registry to the network front-end (``repro.serve.frontend``) and
 serves real concurrent traffic -- per-tenant admission control
 (``--max-inflight``, ``--queue-depth``), wall-clock micro-batch deadlines
-(``--max-delay-ms``), and graceful drain on SIGTERM (``--drain-timeout``).
+(``--max-delay-ms``), and graceful drain on SIGTERM (``--drain-timeout``,
+per-tenant overrides via ``--tenant-drain-timeout NAME=SECS``).  The async
+``maintenance`` verb runs on ``--maint-workers`` background threads.  A
+third mode, ``--standby WAL_DIR``, runs a warm standby: it tails a
+primary's WAL directory continuously and promotes on SIGTERM (failover
+with almost nothing left to replay).
 
 Drives the repro.serve stack end to end with synthetic traffic:
 
@@ -154,6 +159,20 @@ def main():
     ap.add_argument("--drain-timeout", type=float, default=10.0,
                     help="graceful-drain backstop on SIGTERM/unload "
                          "(seconds)")
+    ap.add_argument("--tenant-drain-timeout", action="append", default=[],
+                    metavar="NAME=SECS",
+                    help="per-tenant drain budget override (repeatable); "
+                         "tenants not named keep --drain-timeout")
+    ap.add_argument("--maint-workers", type=int, default=None,
+                    help="background maintenance worker threads for the "
+                         "async 'maintenance' verb (default "
+                         "REPRO_MAINT_WORKERS or 1)")
+    ap.add_argument("--standby", default=None, metavar="WAL_DIR",
+                    help="run as a warm standby instead of a primary: "
+                         "tail the given WAL directory continuously, "
+                         "promote on SIGTERM and print the failover "
+                         "report (pairs with a primary using --wal-dir "
+                         "on the same directory)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -181,6 +200,34 @@ def main():
     rng = np.random.default_rng(args.seed)
     mesh = make_serve_mesh(args.shard) if args.shard else None
     shard_axis = "serve" if mesh is not None else None
+
+    if args.standby:
+        # warm-standby mode: no tenants of our own -- tail the primary's
+        # WAL directory, replaying continuously, and promote on SIGTERM
+        import signal
+        import threading
+
+        from ..serve.standby import WalStandby
+
+        sb = WalStandby(args.standby, mesh=mesh,
+                        fsync_every=args.fsync_every)
+        sb.start()
+        print(f"[serve] standby tailing {args.standby}", flush=True)
+        stop = threading.Event()
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            signal.signal(sig, lambda *_: stop.set())
+        stop.wait()
+        reports = sb.promote()
+        for name, rep in sorted(reports.items()):
+            print(f"[serve] promoted {name}: "
+                  f"applied={rep.get('applied', 0)} "
+                  f"offset={rep.get('end_offset', 0)} "
+                  f"truncated={rep.get('truncated', False)}")
+        print(f"[serve] standby promoted: tenants "
+              f"{sb.registry.names()}", flush=True)
+        print("[serve] OK")
+        return
+
     registry = ServableRegistry(mesh=mesh, wal_dir=args.wal_dir,
                                 fsync_every=args.fsync_every)
     if mesh is not None:
@@ -225,10 +272,16 @@ def main():
         # front-end and serve until SIGTERM, then drain gracefully
         host, _, port_s = args.listen.rpartition(":")
         host = host or "127.0.0.1"
+        overrides = {}
+        for item in args.tenant_drain_timeout:
+            name, _, secs = item.partition("=")
+            overrides[name] = float(secs)
         run_server(registry, host, int(port_s or 0),
                    max_inflight=args.max_inflight,
                    queue_depth=args.queue_depth,
                    drain_timeout_s=args.drain_timeout,
+                   tenant_drain_timeouts=overrides or None,
+                   maint_workers=args.maint_workers,
                    exporter=exporter)
         if exporter is not None:
             exporter.close()
@@ -283,9 +336,10 @@ def main():
                 sv.delete(victims)
             occ = occupancy_report(sv.index)
             if occ["tombstone_frac"] > args.compact_at:
-                # Servable.compact, not index.compact: under --replicate
-                # auto this is where shard_balance skew becomes placement
-                sv.compact()
+                # the maintenance handle, not index.compact: under
+                # --replicate auto this is where shard_balance skew
+                # becomes placement
+                sv.maintenance.compact()
                 compactions[name] += 1
         if args.recall_interval and (step + 1) % args.recall_interval == 0:
             # the telemetry loop's quality signal: a small sampled probe of

@@ -180,6 +180,36 @@ CATALOG: Dict[str, MetricSpec] = _catalog(
     MetricSpec("tenant_lifecycle_transitions_total", "counter",
                "Servable lifecycle transitions (loading/ready/draining/"
                "unloaded/updated)", ("tenant", "state")),
+    # -- in-place maintenance (serve/maintenance.py, sharding/placement.py)
+    # Situational: these series only exist once a placement rebuild or a
+    # maintenance job has actually run.
+    MetricSpec("placement_replaced_bytes_total", "counter",
+               "Bytes actually transferred by placement rebuilds "
+               "(incremental diffs move only changed slots)", ("tenant",)),
+    MetricSpec("placement_restack_bytes_total", "counter",
+               "Bytes a full restack would have transferred per placement "
+               "rebuild (the denominator of the re-placement win)",
+               ("tenant",)),
+    MetricSpec("placement_rebuilds_total", "counter",
+               "Placement rebuilds by kind (diff vs full restack)",
+               ("tenant", "kind")),
+    MetricSpec("maintenance_jobs_total", "counter",
+               "Background maintenance jobs by kind and terminal status",
+               ("tenant", "kind", "status")),
+    MetricSpec("maintenance_job_latency_s", "histogram",
+               "Maintenance job run time (dequeue to completion)",
+               ("tenant", "kind")),
+    MetricSpec("maintenance_queue_depth", "gauge",
+               "Maintenance jobs queued or running"),
+    # -- warm standby (serve/standby.py) ---------------------------------
+    MetricSpec("standby_replayed_records_total", "counter",
+               "WAL records the standby replayed while tailing",
+               ("tenant",)),
+    MetricSpec("standby_lag_bytes", "gauge",
+               "Primary-WAL bytes the standby has not replayed yet",
+               ("tenant",)),
+    MetricSpec("standby_promotions_total", "counter",
+               "Standby tenants promoted to primary", ("tenant",)),
 )
 
 

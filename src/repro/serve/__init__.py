@@ -20,12 +20,22 @@ Layering (each module usable alone):
               resolved by name from repro.embedders (basis / qmc /
               wasserstein), so function- and distribution-valued tenants
               share one front end
-  wal      -- WriteAheadLog / read_wal: per-tenant framed + checksummed
-              delta log, the durable half of the write path
-              (``ServableRegistry.recover`` = snapshot + WAL-tail replay)
+  wal      -- WriteAheadLog / WalFollower / read_wal: per-tenant framed +
+              checksummed delta log, the durable half of the write path
+              (``ServableRegistry.recover`` = snapshot + WAL-tail replay;
+              WalFollower = the standby's prefix-tolerant tail cursor)
+  maintenance -- IndexMaintenance / ServableMaintenance / MaintenancePool:
+              the maintenance plane split off the data plane -- structural
+              mutation (seal / compact / set_replication) behind explicit
+              handles, with a background worker pool so compaction never
+              blocks the query path (invariant 11)
+  standby  -- WalStandby: WAL-shipping warm standby -- tails a primary's
+              wal_dir into its own registry and ``promote()``s to primary
+              on failover, bit-identical to the uninterrupted process
   faults   -- FaultPlan / InjectedFault: deterministic fault injection at
               named crash points (wal.append, wal.fsync, ckpt.rename,
-              seal, snapshot) for the crash-recovery test harness
+              seal, snapshot, compact.freeze, compact.swap) for the
+              crash-recovery test harness
   protocol -- newline-delimited JSON wire framing + structured
               backpressure codes for the network front-end
   frontend -- Frontend / RequestGate / run_server: the asyncio server
@@ -45,11 +55,14 @@ from .batcher import MicroBatcher
 from .client import FrontendClient, FrontendError, wait_ready
 from .faults import FaultPlan, FaultSpec, InjectedFault
 from .frontend import Frontend, RequestGate, run_server
+from .maintenance import (IndexMaintenance, MaintenanceJob, MaintenancePool,
+                          ServableMaintenance)
 from .registry import Servable, ServableRegistry, ServableSpec
 from .router import QueryRouter, RoutePlan, auto_factors
 from .segments import Segment, SegmentedIndex
+from .standby import WalStandby
 from .stats import ServingStats, occupancy_report, recall_proxy
-from .wal import WalRecord, WriteAheadLog, read_wal
+from .wal import WalFollower, WalRecord, WriteAheadLog, read_wal
 
 __all__ = [
     "FaultPlan",
@@ -57,7 +70,10 @@ __all__ = [
     "Frontend",
     "FrontendClient",
     "FrontendError",
+    "IndexMaintenance",
     "InjectedFault",
+    "MaintenanceJob",
+    "MaintenancePool",
     "MicroBatcher",
     "QueryRouter",
     "RequestGate",
@@ -65,10 +81,13 @@ __all__ = [
     "Segment",
     "SegmentedIndex",
     "Servable",
+    "ServableMaintenance",
     "ServableRegistry",
     "ServableSpec",
     "ServingStats",
+    "WalFollower",
     "WalRecord",
+    "WalStandby",
     "WriteAheadLog",
     "auto_factors",
     "occupancy_report",

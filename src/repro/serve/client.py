@@ -223,8 +223,47 @@ class FrontendClient:
                                               np.float64).tolist())
         return np.asarray(resp["embeddings"], np.float32)
 
-    def compact(self, tenant: str) -> int:
-        return int(self._checked("compact", tenant=tenant)["n_live"])
+    # -- maintenance plane ---------------------------------------------------
+
+    def maintenance(self, tenant: str, kind: str, **params) -> str:
+        """Submit an async maintenance job; returns its ``job_id``
+        immediately (the job runs on the server's background pool)."""
+        fields = {"tenant": tenant, "kind": kind}
+        if params:
+            fields["params"] = params
+        return str(self._checked("maintenance", **fields)["job_id"])
+
+    def job_status(self, job_id: str) -> dict:
+        """One poll of a submitted job: ``{"status": queued|running|done|
+        failed, "result": ..., "error": ...}``."""
+        return self._checked("job_status", job_id=job_id)
+
+    def wait_job(self, job_id: str, timeout_s: float = 30.0,
+                 interval_s: float = 0.02) -> dict:
+        """Poll until the job reaches a terminal state; returns the final
+        status dict.  Raises FrontendError if the job *failed* (carrying
+        the server-side error) and TimeoutError if it never settled."""
+        deadline = time.monotonic() + timeout_s
+        while True:
+            st = self.job_status(job_id)
+            if st["status"] == "done":
+                return st
+            if st["status"] == "failed":
+                raise FrontendError({"code": "internal",
+                                     "error": st.get("error"), **st})
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"maintenance job {job_id} still {st['status']} "
+                    f"after {timeout_s}s")
+            time.sleep(interval_s)
+
+    def compact(self, tenant: str, timeout_s: float = 30.0) -> int:
+        """Synchronous compaction, kept for convenience: submits an async
+        ``maintenance`` job and polls it to completion (the blocking wire
+        verb is gone -- this costs the same one background job)."""
+        job_id = self.maintenance(tenant, "compact")
+        st = self.wait_job(job_id, timeout_s=timeout_s)
+        return int(st["result"]["n_live"])
 
     # -- control plane ------------------------------------------------------
 

@@ -22,6 +22,12 @@ Sites currently wired (see the module that owns each):
 ``seal``                  mid-seal: the SEAL record is in the WAL but the
                           segment mutation has not been applied
 ``snapshot``              per tenant, before its checkpoint is written
+``compact.freeze``        mid-compaction freeze: the COMPACT record is in
+                          the WAL but the delta has not been force-sealed
+                          and the shadow build has not started
+``compact.swap``          after the lock-free shadow build, before the
+                          atomic swap is applied (queries still see the
+                          pre-compaction placement)
 ========================  ====================================================
 
 No plan installed -> :func:`fire` is a near-free no-op, so production code

@@ -28,9 +28,16 @@ Three cooperating pieces:
     The asyncio server.  One connection = one closed-loop request stream
     (responses in request order; cross-request batching comes from many
     connections feeding one batcher).  The data plane (``query`` /
-    ``insert`` / ``delete`` / ``embed`` / ``compact``) is admission-gated;
-    the control plane (``load`` / ``unload`` / ``update`` / ``health`` /
-    ``stats``) is not.  Queries go through ``MicroBatcher.submit`` under
+    ``insert`` / ``delete`` / ``embed``) is admission-gated; the control
+    plane (``load`` / ``unload`` / ``update`` / ``health`` / ``stats``)
+    is not.  Structural maintenance is **asynchronous**: the
+    ``maintenance`` verb queues a job on the server's
+    :class:`~repro.serve.maintenance.MaintenancePool` (admission-gated at
+    submission) and answers immediately with a ``job_id``; ``job_status``
+    polls it.  A compaction therefore never occupies a connection's
+    request slot or a batcher thread -- the workers run it against the
+    shadow index while queries keep flowing (invariant 11).
+    Queries go through ``MicroBatcher.submit`` under
     the request's trace context and the handler awaits the Future without
     blocking the loop (``asyncio.wrap_future``); blocking ops run in the
     default executor.  Every network request gets **one trace**: a
@@ -45,7 +52,10 @@ Three cooperating pieces:
     accepting connections, reject new requests (``shutting_down``), flush
     the batchers until every admitted request is answered, let clients
     hang up, then exit 0.  No accepted request is ever dropped
-    (guarded by ``tests/test_frontend.py``).
+    (guarded by ``tests/test_frontend.py``).  Drain budgets are
+    **per-tenant**: ``tenant_drain_timeouts`` overrides the process-wide
+    ``drain_timeout_s`` for named tenants, so one slow tenant gets its
+    longer budget without every other tenant's shutdown inheriting it.
 
 Tenant lifecycle follows the servable discipline and is durably audited:
 every transition is WAL-logged (``ServableRegistry.log_lifecycle``) and
@@ -75,6 +85,7 @@ import numpy as np
 from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from . import protocol
+from .maintenance import MaintenancePool
 from .registry import ServableRegistry, _spec_from_manifest
 
 LOADING = "loading"
@@ -284,12 +295,19 @@ class Frontend:
             (per tenant, uniform across tenants).
         drain_timeout_s: backstop for graceful drain -- how long shutdown
             and unload wait for in-flight requests before forcing.
+        tenant_drain_timeouts: per-tenant overrides of ``drain_timeout_s``
+            (``{"tenant": seconds}``); tenants not named keep the
+            process-wide default.
+        maint_workers: background maintenance worker count (None reads
+            ``$REPRO_MAINT_WORKERS``, default 1).
     """
 
     def __init__(self, registry: ServableRegistry, *,
                  max_inflight: int = 64, queue_depth: int = 256,
                  retry_after_ms: float = 25.0,
                  drain_timeout_s: float = 10.0,
+                 tenant_drain_timeouts: Optional[Dict[str, float]] = None,
+                 maint_workers: Optional[int] = None,
                  metrics: Optional[obs_metrics.MetricsRegistry] = None):
         self.registry = registry
         self.metrics = obs_metrics.registry() if metrics is None else metrics
@@ -298,12 +316,21 @@ class Frontend:
                                 metrics=self.metrics,
                                 retry_after_ms=retry_after_ms)
         self.drain_timeout_s = float(drain_timeout_s)
+        self.tenant_drain_timeouts = {
+            str(k): float(v)
+            for k, v in (tenant_drain_timeouts or {}).items()}
+        self.maintenance = MaintenancePool(registry, workers=maint_workers)
         self._server: Optional[asyncio.AbstractServer] = None
         self._conns: set = set()
         self._lifecycle_lock = threading.Lock()
         self._t_start = time.monotonic()
         for name in registry.names():
             self.gate.set_state(name, READY)
+
+    def drain_timeout_for(self, name: str) -> float:
+        """The drain budget for one tenant: its override, else the
+        process-wide default."""
+        return self.tenant_drain_timeouts.get(name, self.drain_timeout_s)
 
     # -- server lifecycle ---------------------------------------------------
 
@@ -330,22 +357,38 @@ class Frontend:
         and the gate flips to ``shutting_down`` *before* any batcher
         stops, so every admitted Future still resolves and every handler
         task still writes its response; connections are only force-closed
-        after the backstop."""
+        after the backstop.  Drain budgets are per tenant: a tenant with
+        its own entry in ``tenant_drain_timeouts`` is waited on up to that
+        budget, everyone else up to ``drain_timeout_s`` -- one slow tenant
+        stretches only its own deadline."""
         self.gate.begin_drain()
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
         loop = asyncio.get_running_loop()
-        deadline = loop.time() + self.drain_timeout_s
-        while self.gate.total_inflight() > 0 and loop.time() < deadline:
+        t0 = loop.time()
+
+        def _still_draining() -> bool:
+            # a tenant still counts while it has in-flight work AND its
+            # own budget has not lapsed
+            return any(self.gate.inflight(n) > 0
+                       and loop.time() - t0 < self.drain_timeout_for(n)
+                       for n in self.registry.names())
+
+        while _still_draining():
             await loop.run_in_executor(None, self._flush_all)
             await asyncio.sleep(0.005)
         # admitted work is answered; now let clients read their last
         # responses and hang up (they close on the first drain reject)
-        while self._conns and loop.time() < deadline:
+        conns_deadline = t0 + max([self.drain_timeout_s,
+                                   *self.tenant_drain_timeouts.values()])
+        while self._conns and loop.time() < conns_deadline:
             await asyncio.sleep(0.01)
         for writer in list(self._conns):
             writer.close()
+        # the pool drains its queue (jobs already submitted complete and
+        # stay pollable until exit) before the batchers stop
+        await loop.run_in_executor(None, self.maintenance.stop)
         await loop.run_in_executor(None, self._stop_batchers)
 
     def _flush_all(self) -> None:
@@ -501,11 +544,42 @@ class Frontend:
                     sv.embed(np.asarray(msg["fvals"], np.float64)),
                     np.float64).tolist()))
 
-    async def _op_compact(self, req_id, msg: dict) -> dict:
-        return await self._gated_blocking(
-            req_id, msg, rows_of=None,
-            call=lambda sv, msg: protocol.ok(
-                req_id, n_live=sv.compact()))
+    # -- maintenance plane ---------------------------------------------------
+
+    async def _op_maintenance(self, req_id, msg: dict) -> dict:
+        """Submit a background maintenance job (async redesign of the old
+        blocking ``compact`` verb): admission-gated at submission so a
+        draining tenant/process refuses new structural work, but the job
+        itself runs on the MaintenancePool -- the response carries a
+        ``job_id`` immediately and never occupies a request slot."""
+        tenant = msg["tenant"]
+        tok = self.gate.admit(tenant, rows=1, queue_depth=0,
+                              timeout_ms=msg.get("timeout_ms"))
+        if isinstance(tok, Rejection):
+            return tok.response(req_id)
+        if self._servable(tenant) is None:   # raced an unload past the gate
+            self.gate.settle(tok)
+            return protocol.error(req_id, "unknown_tenant",
+                                  f"no tenant {tenant!r} is served here")
+        try:
+            job_id = self.maintenance.submit(
+                tenant, msg["kind"], **(msg.get("params") or {}))
+        except (ValueError, RuntimeError) as e:
+            self.gate.settle(tok)
+            return protocol.error(req_id, "bad_request", str(e))
+        self.gate.settle(tok)
+        st = self.maintenance.status(job_id)
+        return protocol.ok(req_id, job_id=job_id,
+                           state=st["status"] if st else "queued")
+
+    async def _op_job_status(self, req_id, msg: dict) -> dict:
+        # ungated: a poll must work even while the process drains (that is
+        # how a client learns its submitted job finished)
+        st = self.maintenance.status(msg["job_id"])
+        if st is None:
+            return protocol.error(req_id, "unknown_job",
+                                  f"no maintenance job {msg['job_id']!r}")
+        return protocol.ok(req_id, **st)
 
     async def _gated_blocking(self, req_id, msg: dict, rows_of, call) -> dict:
         """Shared shape of the blocking data-plane ops: admit, run in the
@@ -609,7 +683,7 @@ class Frontend:
         """Answer everything admitted for one tenant (True if fully
         drained inside the backstop).  Runs on an executor thread, so the
         event loop keeps settling handler tasks while we wait."""
-        deadline = time.monotonic() + self.drain_timeout_s
+        deadline = time.monotonic() + self.drain_timeout_for(name)
         sv.batcher.flush_all()
         while self.gate.inflight(name) > 0 and time.monotonic() < deadline:
             sv.batcher.flush_all()
@@ -657,7 +731,7 @@ class Frontend:
                 policy = spec.replication_policy()
                 if "replication" in changed and isinstance(policy, int) \
                         and sv.index.shard_layout() is not None:
-                    sv.index.set_replication(policy)
+                    sv.maintenance.set_replication(policy)
                 self.registry.log_lifecycle(name, "updated")
                 sv.batcher.start()
             self.gate.set_state(name, READY)
@@ -701,7 +775,9 @@ class Frontend:
 def run_server(registry: ServableRegistry, host: str = "127.0.0.1",
                port: int = 0, *, max_inflight: int = 64,
                queue_depth: int = 256, retry_after_ms: float = 25.0,
-               drain_timeout_s: float = 10.0, exporter=None,
+               drain_timeout_s: float = 10.0,
+               tenant_drain_timeouts: Optional[Dict[str, float]] = None,
+               maint_workers: Optional[int] = None, exporter=None,
                flush_interval_s: float = 0.5) -> Dict[str, int]:
     """Serve ``registry`` until SIGTERM/SIGINT, then drain gracefully.
 
@@ -717,7 +793,9 @@ def run_server(registry: ServableRegistry, host: str = "127.0.0.1",
         fe = Frontend(registry, max_inflight=max_inflight,
                       queue_depth=queue_depth,
                       retry_after_ms=retry_after_ms,
-                      drain_timeout_s=drain_timeout_s)
+                      drain_timeout_s=drain_timeout_s,
+                      tenant_drain_timeouts=tenant_drain_timeouts,
+                      maint_workers=maint_workers)
         h, p = await fe.start(host, port)
         print(f"[frontend] listening on {h}:{p}", flush=True)
         stop = asyncio.Event()

@@ -1,0 +1,313 @@
+"""The maintenance plane: seal / compact / re-placement off the query path.
+
+``SegmentedIndex`` used to expose one mixed surface -- ``insert`` and
+``seal``, ``query`` and ``compact`` -- so every caller (tests, benches, the
+wire ``compact`` verb) ran structural maintenance inline on whatever thread
+asked for it, blocking queries behind a full rebuild.  This module is the
+redesigned surface:
+
+* :class:`IndexMaintenance` -- the per-index handle (``index.maintenance``).
+  Owns ``seal()``, ``compact()``, ``set_replication()``; a per-index mutex
+  serialises maintenance operations against *each other* (the data plane is
+  protected by the index's own lock), so a background compaction can never
+  interleave with an explicit seal.  The direct ``SegmentedIndex`` methods
+  survive as ``DeprecationWarning`` shims over this handle.
+* :class:`ServableMaintenance` -- the per-tenant handle
+  (``servable.maintenance``): the index handle plus the serve-layer
+  consequences that used to live on ``Servable.compact`` (the ``auto``
+  replication re-placement from fan-out telemetry) and an eager
+  ``refresh_placement()`` after every operation, so the device transfer
+  (the placement *diff* -- ``sharding.placement``) is paid on the
+  maintenance thread, never by the next query.
+* :class:`MaintenancePool` -- the background workers.  The sole production
+  caller of the handles: jobs (``seal`` / ``compact`` /
+  ``set_replication``) are queued per tenant, run on daemon workers
+  (``REPRO_MAINT_WORKERS``, default 1), and polled by job id -- the wire
+  ``maintenance`` verb maps 1:1 onto :meth:`MaintenancePool.submit` /
+  :meth:`MaintenancePool.status`.
+
+Durability composes unchanged: the worker thread calls the same
+``_maint_*`` entry points replay uses, so maintenance WAL records are
+logged by the worker at the freeze point, in apply order, and replaying
+them is idempotent (tests/test_maintenance.py kills workers mid-job to
+prove it).
+
+Queries are never blocked: compaction's heavy phase runs lock-free against
+a shadow index, and the swap is a pointer flip under the index lock
+(docs/architecture.md, invariant 11 -- "maintenance is invisible").
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import os
+import queue
+import threading
+import time
+from typing import Any, Dict, Optional
+
+from ..obs import metrics as obs_metrics
+from .router import auto_factors
+
+#: job kinds the pool (and the wire ``maintenance`` verb) accepts
+KINDS = ("seal", "compact", "set_replication")
+
+
+class IndexMaintenance:
+    """Maintenance handle for one :class:`SegmentedIndex`.
+
+    Every method forwards to the index's internal ``_maint_*`` entry point
+    under this handle's mutex -- one maintenance operation per index at a
+    time, so a queued seal can never race the freeze/build/swap phases of
+    a background compaction.
+    """
+
+    def __init__(self, index):
+        self._index = index
+        self._mutex = threading.Lock()
+
+    def seal(self) -> None:
+        """Seal the current delta (explicit, WAL-logged seal)."""
+        with self._mutex:
+            self._index._maint_seal()
+
+    def compact(self) -> int:
+        """Freeze -> shadow-build (lock-free) -> atomic swap.  Returns the
+        number of segments after compaction."""
+        with self._mutex:
+            return self._index._maint_compact()
+
+    def set_replication(self, replication) -> None:
+        """Set the sealed-segment replication policy (WAL-logged)."""
+        with self._mutex:
+            self._index._maint_set_replication(replication)
+
+
+class ServableMaintenance:
+    """Maintenance handle for one :class:`Servable` (tenant).
+
+    Wraps the index handle with the serve-layer policy that used to run
+    inline in ``Servable.compact``: under ``replication="auto"`` the
+    compaction is the re-placement point (factors derived from the fan-out
+    win skew accumulated since the last epoch), and every operation ends
+    with an eager placement refresh so the device diff is paid here, off
+    the query path.
+    """
+
+    def __init__(self, servable):
+        self._sv = servable
+
+    @property
+    def index(self) -> IndexMaintenance:
+        return self._sv.index.maintenance
+
+    def seal(self) -> int:
+        self.index.seal()
+        self._sv.index.refresh_placement()
+        return len(self._sv.index.segments)
+
+    def compact(self) -> int:
+        """Compact the tenant's index; under ``replication="auto"`` also
+        re-derive placement factors from ``shard_balance`` telemetry
+        (positional caveat: wins attach to segment positions, and gid-order
+        re-packing roughly preserves them -- recent traffic shape, not an
+        exact ledger)."""
+        sv = self._sv
+        factors = None
+        lay = sv.index.shard_layout()
+        if sv.spec.replication_policy() == "auto" and lay is not None:
+            wins = sv.stats.shard_balance()["per_segment_wins"]
+            # the trailing positional slot is the delta at record time;
+            # sealed-segment wins are everything before it
+            factors = auto_factors(wins[:-1], lay["n_dev"])
+        n = self.index.compact()
+        if factors is not None:
+            self.index.set_replication(factors)
+            # each epoch's decision reads the traffic since the previous
+            # one -- an all-time ledger would keep replicating segments
+            # that went cold and react ever more slowly as it grows
+            sv.stats.reset_fanout()
+        sv.index.refresh_placement()
+        return n
+
+    def set_replication(self, replication) -> None:
+        self.index.set_replication(replication)
+        self._sv.index.refresh_placement()
+
+
+@dataclasses.dataclass
+class MaintenanceJob:
+    """One queued maintenance operation, pollable by id."""
+
+    job_id: str
+    tenant: str
+    kind: str
+    params: Dict[str, Any]
+    status: str = "queued"        # queued | running | done | failed
+    result: Optional[Dict[str, Any]] = None
+    error: Optional[str] = None
+    submitted_s: float = 0.0
+    finished_s: float = 0.0
+
+    def to_dict(self) -> dict:
+        out = {"job_id": self.job_id, "tenant": self.tenant,
+               "kind": self.kind, "status": self.status}
+        if self.result is not None:
+            out["result"] = self.result
+        if self.error is not None:
+            out["error"] = self.error
+        return out
+
+
+class MaintenancePool:
+    """Background maintenance workers over a :class:`ServableRegistry`.
+
+    FIFO job queue drained by ``workers`` daemon threads (default from
+    ``$REPRO_MAINT_WORKERS``, else 1).  A per-tenant lock keeps at most one
+    job per tenant in flight even with several workers, so WAL order per
+    tenant is the submit order; different tenants' jobs run concurrently.
+
+    Args:
+        registry: resolves tenant names to servables at *run* time (a job
+            submitted for a tenant that unloads before it runs fails with
+            a structured error, it does not crash a worker).
+        workers: thread count override (None reads the env knob).
+    """
+
+    def __init__(self, registry, workers: Optional[int] = None):
+        self._registry = registry
+        if workers is None:
+            workers = int(os.environ.get("REPRO_MAINT_WORKERS", "1"))
+        self.workers = max(1, int(workers))
+        self._queue: "queue.Queue" = queue.Queue()
+        self._jobs: Dict[str, MaintenanceJob] = {}
+        self._ids = itertools.count(1)
+        self._lock = threading.Lock()
+        self._tenant_locks: Dict[str, threading.Lock] = {}
+        self._stop = threading.Event()
+        self._threads = [
+            threading.Thread(target=self._worker, daemon=True,
+                             name=f"maint-{i}")
+            for i in range(self.workers)]
+        for t in self._threads:
+            t.start()
+
+    # -- submission / polling -----------------------------------------------
+
+    def submit(self, tenant: str, kind: str, **params) -> str:
+        """Queue one job; returns its id immediately (poll via
+        :meth:`status`).  Raises ValueError on an unknown kind -- the wire
+        layer maps that to a structured ``bad_request``."""
+        if kind not in KINDS:
+            raise ValueError(f"unknown maintenance kind {kind!r}; want one "
+                             f"of {KINDS}")
+        if self._stop.is_set():
+            raise RuntimeError("maintenance pool is stopped")
+        with self._lock:
+            job = MaintenanceJob(job_id=f"mj-{next(self._ids)}",
+                                 tenant=str(tenant), kind=kind,
+                                 params=dict(params),
+                                 submitted_s=time.monotonic())
+            self._jobs[job.job_id] = job
+        self._queue.put(job.job_id)
+        self._set_depth()
+        return job.job_id
+
+    def status(self, job_id: str) -> Optional[dict]:
+        """The job's current state dict, or None for an unknown id."""
+        with self._lock:
+            job = self._jobs.get(job_id)
+            return None if job is None else job.to_dict()
+
+    def wait(self, job_id: str, timeout_s: float = 30.0,
+             interval_s: float = 0.005) -> dict:
+        """Block until the job reaches a terminal state (tests and the
+        sync ``client.compact`` convenience path)."""
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            st = self.status(job_id)
+            if st is None:
+                raise KeyError(f"unknown maintenance job {job_id!r}")
+            if st["status"] in ("done", "failed"):
+                return st
+            time.sleep(interval_s)
+        raise TimeoutError(f"maintenance job {job_id} still "
+                           f"{self.status(job_id)['status']} after "
+                           f"{timeout_s}s")
+
+    def drain(self, timeout_s: float = 30.0) -> None:
+        """Wait until every submitted job is terminal (shutdown path)."""
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            with self._lock:
+                busy = any(j.status in ("queued", "running")
+                           for j in self._jobs.values())
+            if not busy:
+                return
+            time.sleep(0.005)
+
+    def stop(self, timeout_s: float = 30.0) -> None:
+        """Drain queued/running jobs, then stop the workers.  Idempotent."""
+        if self._stop.is_set():
+            return
+        self.drain(timeout_s)
+        self._stop.set()
+        for _ in self._threads:
+            self._queue.put(None)           # one wakeup per worker
+        for t in self._threads:
+            t.join(timeout=5.0)
+
+    # -- workers ------------------------------------------------------------
+
+    def _tenant_lock(self, tenant: str) -> threading.Lock:
+        with self._lock:
+            return self._tenant_locks.setdefault(tenant, threading.Lock())
+
+    def _set_depth(self) -> None:
+        with self._lock:
+            depth = sum(1 for j in self._jobs.values()
+                        if j.status in ("queued", "running"))
+        obs_metrics.registry().set("maintenance_queue_depth", depth)
+
+    def _worker(self) -> None:
+        while True:
+            job_id = self._queue.get()
+            if job_id is None:              # stop() sentinel
+                return
+            with self._lock:
+                job = self._jobs[job_id]
+                job.status = "running"
+            t0 = time.monotonic()
+            try:
+                with self._tenant_lock(job.tenant):
+                    job.result = self._run(job)
+                job.status = "done"
+            except Exception as e:           # noqa: BLE001 -- job isolation:
+                # a failed job must not kill the worker thread
+                job.error = f"{type(e).__name__}: {e}"
+                job.status = "failed"
+            job.finished_s = time.monotonic()
+            reg = obs_metrics.registry()
+            reg.inc("maintenance_jobs_total", tenant=job.tenant,
+                    kind=job.kind, status=job.status)
+            reg.observe("maintenance_job_latency_s",
+                        time.monotonic() - t0,
+                        tenant=job.tenant, kind=job.kind)
+            self._set_depth()
+
+    def _run(self, job: MaintenanceJob) -> dict:
+        maint = self._registry.get(job.tenant).maintenance
+        if job.kind == "seal":
+            return {"n_segments": int(maint.seal())}
+        if job.kind == "compact":
+            n = maint.compact()
+            return {"n_segments": int(n),
+                    "n_live": int(self._registry.get(job.tenant)
+                                  .index.n_live)}
+        # set_replication
+        replication = job.params.get("replication")
+        if replication is not None and not isinstance(replication, int):
+            replication = tuple(int(f) for f in replication)
+        maint.set_replication(replication)
+        return {"replication": job.params.get("replication")}

@@ -21,17 +21,25 @@ docs/architecture.md: the network layer is invisible).
 Ops (see :class:`~repro.serve.frontend.Frontend` for semantics):
 
 =============  ==========================================================
-``query``      tenant, queries (nq, N), k, n_probes?, timeout_ms?
-``insert``     tenant, embeddings (m, N), gids?
-``delete``     tenant, gids
-``embed``      tenant, fvals -> embeddings (server-side embedder)
-``compact``    tenant
-``load``       spec (ServableSpec dict) -- register + ready a new tenant
-``unload``     tenant -- drain in-flight, then detach
-``update``     spec -- in-place update of drainable knobs (same name)
-``health``     -> lifecycle states, inflight, queue depths, uptime
-``stats``      tenant? -> ServingStats snapshot + obs metrics summary
-=============  ==========================================================
+``query``       tenant, queries (nq, N), k, n_probes?, timeout_ms?
+``insert``      tenant, embeddings (m, N), gids?
+``delete``      tenant, gids
+``embed``       tenant, fvals -> embeddings (server-side embedder)
+``maintenance`` tenant, kind (:data:`MAINTENANCE_KINDS`), params? --
+                async: queues a background job, returns ``job_id``
+``job_status``  job_id -> status (queued|running|done|failed) + result
+``load``        spec (ServableSpec dict) -- register + ready a new tenant
+``unload``      tenant -- drain in-flight, then detach
+``update``      spec -- in-place update of drainable knobs (same name)
+``health``      -> lifecycle states, inflight, queue depths, uptime
+``stats``       tenant? -> ServingStats snapshot + obs metrics summary
+=============   =========================================================
+
+The blocking ``compact`` verb was replaced by ``maintenance`` +
+``job_status``: structural maintenance runs on the server's background
+worker pool, never on a connection's request slot, so one tenant's
+compaction cannot occupy the wire.  ``FrontendClient.compact`` keeps the
+old sync convenience by submitting and polling.
 """
 
 from __future__ import annotations
@@ -64,13 +72,19 @@ CODES = {
                          "help": "the request's deadline passed"},
     "bad_request":      {"retryable": False,
                          "help": "malformed frame or fields"},
+    "unknown_job":      {"retryable": False,
+                         "help": "no maintenance job with that id"},
     "internal":         {"retryable": False,
                          "help": "server-side failure; see error"},
 }
 
 #: Ops a request may carry (validated before dispatch).
-OPS = ("query", "insert", "delete", "embed", "compact",
+OPS = ("query", "insert", "delete", "embed", "maintenance", "job_status",
        "load", "unload", "update", "health", "stats")
+
+#: Job kinds the async ``maintenance`` verb accepts (must mirror
+#: ``repro.serve.maintenance.KINDS`` -- asserted in tests).
+MAINTENANCE_KINDS = ("seal", "compact", "set_replication")
 
 
 def encode(msg: dict) -> bytes:
@@ -113,9 +127,18 @@ def validate_request(msg: dict) -> Optional[str]:
         return f"op must be one of {OPS}, got {op!r}"
     if "id" in msg and not isinstance(msg["id"], (int, str)):
         return "id must be an int or string"
-    if op in ("query", "insert", "delete", "embed", "compact", "unload"):
+    if op in ("query", "insert", "delete", "embed", "maintenance",
+              "unload"):
         if not isinstance(msg.get("tenant"), str):
             return f"{op} needs a string 'tenant'"
+    if op == "maintenance":
+        if msg.get("kind") not in MAINTENANCE_KINDS:
+            return (f"maintenance needs a 'kind' in {MAINTENANCE_KINDS}, "
+                    f"got {msg.get('kind')!r}")
+        if "params" in msg and not isinstance(msg["params"], dict):
+            return "maintenance 'params' must be a dict when present"
+    if op == "job_status" and not isinstance(msg.get("job_id"), str):
+        return "job_status needs a string 'job_id'"
     if op == "query":
         if not isinstance(msg.get("queries"), list) or not msg["queries"]:
             return "query needs a non-empty 'queries' list of rows"

@@ -31,6 +31,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
+import warnings
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -45,7 +46,7 @@ from ..obs import metrics as obs_metrics
 from ..obs import trace as obs_trace
 from . import faults, wal as walmod
 from .batcher import MicroBatcher
-from .router import auto_factors
+from .maintenance import ServableMaintenance
 from .segments import Segment, SegmentedIndex
 from .stats import ServingStats, occupancy_report
 
@@ -177,12 +178,16 @@ class Servable:
                                     tenant=spec.name,
                                     precision=spec.precision,
                                     survivor_k=spec.survivor_k)
+        # the tenant's maintenance-plane handle: seal/compact/replication
+        # re-placement live here (the MaintenancePool is the production
+        # caller); Servable.compact survives as a deprecated shim
+        self.maintenance = ServableMaintenance(self)
         if spec.shard_axis is not None and mesh is not None \
                 and spec.shard_axis in mesh.axis_names:
             self.index.shard(mesh, spec.shard_axis)
             policy = spec.replication_policy()
             if isinstance(policy, int):
-                self.index.set_replication(policy)
+                self.index.maintenance.set_replication(policy)
             # "auto" starts unreplicated and re-places at compact() time,
             # once shard_balance has seen real traffic
         self.batcher = MicroBatcher(self._raw_query,
@@ -234,33 +239,13 @@ class Servable:
         return n
 
     def compact(self) -> int:
-        """Compact the tenant's index; under ``replication="auto"`` this is
-        also the **re-placement point**: the factors for the post-compaction
-        placement are derived from the merge-win skew the tenant's
-        ``shard_balance`` telemetry accumulated since the last compaction
-        (``router.auto_factors``), so hot segments get materialized on more
-        devices exactly when the index is being rewritten anyway.
-
-        Positional caveat (same as the stats counters): wins are attributed
-        to segment *positions*; compaction re-packs live items in gid order,
-        which preserves rough positional identity, so the derived factors
-        describe recent traffic shape, not an exact per-item ledger.
-        """
-        factors = None
-        lay = self.index.shard_layout()
-        if self.spec.replication_policy() == "auto" and lay is not None:
-            wins = self.stats.shard_balance()["per_segment_wins"]
-            # the trailing positional slot is the delta at record time;
-            # sealed-segment wins are everything before it
-            factors = auto_factors(wins[:-1], lay["n_dev"])
-        n = self.index.compact()
-        if factors is not None:
-            self.index.set_replication(factors)
-            # each epoch's decision reads the traffic since the previous
-            # one -- an all-time ledger would keep replicating segments
-            # that went cold and react ever more slowly as it grows
-            self.stats.reset_fanout()
-        return n
+        """Deprecated: use ``servable.maintenance.compact()`` (which also
+        owns the ``auto``-replication re-placement epoch)."""
+        warnings.warn(
+            "Servable.compact() is deprecated; compact through the "
+            "maintenance plane (servable.maintenance.compact())",
+            DeprecationWarning, stacklevel=2)
+        return self.maintenance.compact()
 
     def _raw_query(self, queries, k: int, n_probes: int):
         g, d = self.index.query(queries, k, n_probes=n_probes)
@@ -356,6 +341,18 @@ class ServableRegistry:
         sv = Servable(spec, backend=self._backend, mesh=self._mesh)
         self._servables[spec.name] = sv
         return sv
+
+    def adopt(self, spec: ServableSpec) -> Servable:
+        """Register a tenant from an already-resolved spec, verbatim.
+
+        The warm-standby path (:class:`repro.serve.standby.WalStandby`):
+        the spec came off another process's WAL REGISTER record, where the
+        precision tier was already resolved and the record already logged
+        -- so unlike :meth:`register` this neither re-resolves
+        ``$REPRO_STORE_DTYPE`` nor writes to any WAL (the standby replays
+        a foreign log; it must not append to it)."""
+        with self._lock:
+            return self._register(spec)
 
     def get(self, name: str) -> Servable:
         try:

@@ -66,6 +66,11 @@ class QueryRouter:
     Built from a placement ``layout_dict`` (the JSON-able assignment /
     replication report, the same one snapshots record), so it never holds
     device arrays -- rebuilding it after a placement change is free.
+    The layout's ``per_dev`` is the placement's *physical* slot stride,
+    which may exceed the packed minimum when the placement keeps headroom
+    for incremental diffs -- slot math here (``d*per_dev + j``) and the
+    collective's active-mask length stay consistent because both read the
+    same ``SegmentPlacement.layout()``.
     """
 
     def __init__(self, layout: dict, tenant: str = "default"):

@@ -10,9 +10,19 @@ module turns it into a *living* index the way LSM storage engines do:
   free because incremental inserts maintain a valid LSH table at all times;
 * **deletes** are tombstones: a per-segment live mask consulted at query time
   (``query_index(..., live_mask=...)``), never a structural mutation;
-* **compact()** folds every live item into fresh segments (dropping
+* **compact** folds every live item into fresh segments (dropping
   tombstones and re-packing buckets), using the same incremental-insert
-  program -- no new compilation;
+  program -- no new compilation.  It runs in three phases so a background
+  worker can do the heavy rebuild **off the query path**: a locked
+  *freeze* (log COMPACT, force-seal the delta, open a delete ledger), a
+  lock-free *shadow build* (queries keep serving the old segments), and a
+  locked atomic *swap* (adopt the shadow, splice in segments inserted
+  meanwhile, re-apply ledgered deletes);
+* the mutation surface is split into a **data plane** (insert / delete /
+  query, on the index) and a **maintenance plane**: ``index.maintenance``
+  (:class:`repro.serve.maintenance.IndexMaintenance`) owns ``seal()``,
+  ``compact()`` and ``set_replication()`` and serialises them against each
+  other.  The old direct methods survive as ``DeprecationWarning`` shims;
 * **query()** fans out to all segments and merges per-segment top-k via
   ``kernels.ops.merge_topk``;
 * **shard(mesh)** moves the fan-out onto a device mesh: sealed segments
@@ -52,6 +62,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import threading
+import warnings
+import zlib
 from typing import List, Optional, Sequence, Tuple
 
 import jax
@@ -84,10 +96,37 @@ class Segment:
     # fp32 tenants and on the mutable delta, which stays fp32 until sealed):
     scale: Optional[Array] = None     # () f32 symmetric dequant scale
     pool: Optional[np.ndarray] = None  # (capacity, N) f32 survivor side pool
+    # Incremental re-placement fingerprints (``sharding.placement`` diffs):
+    # computed lazily, cached only for sealed segments, live half
+    # invalidated on tombstone flips.  Never serialized.
+    _content_key: Optional[tuple] = None
+    _live_key: Optional[int] = None
 
     @property
     def capacity(self) -> int:
         return self.gids.shape[0]
+
+    def placement_key(self) -> tuple:
+        """``(content, live)`` fingerprint for placement diffing.
+
+        A sealed segment's rows are fully determined by its ordered gid
+        vector (invariant 3: every segment shares ONE hash family and an
+        item's embedding never changes), so ``(n_items, crc32(gids))``
+        fingerprints the content; the live mask gets its own crc so
+        sealed-segment deletes diff as a mask-row rewrite instead of a
+        full row.  Unsealed segments get an identity-keyed fingerprint
+        that changes with every mutation -- they are never cached and
+        never spuriously match across builds.
+        """
+        if not self.sealed:
+            k = ("unsealed", id(self), int(self.n_items), int(self.n_live))
+            return (k, k)
+        if self._content_key is None:
+            self._content_key = (int(self.n_items),
+                                 zlib.crc32(np.asarray(self.gids).tobytes()))
+        if self._live_key is None:
+            self._live_key = zlib.crc32(np.asarray(self.live).tobytes())
+        return (self._content_key, self._live_key)
 
     def occupancy(self) -> dict:
         cap = self.capacity
@@ -186,7 +225,8 @@ class SegmentedIndex:
                  insert_chunk: int = 256, key: Optional[jax.Array] = None,
                  backend: Optional[str] = None, seed: int = 0,
                  on_fanout=None, tenant: str = "default",
-                 precision: str = "fp32", survivor_k: int = 0):
+                 precision: str = "fp32", survivor_k: int = 0,
+                 family=None):
         if insert_chunk > segment_capacity:
             insert_chunk = segment_capacity
         self.cfg = cfg
@@ -212,7 +252,10 @@ class SegmentedIndex:
         # default into lru_cache keys (see core.index.query_index_batched).
         self.backend = dispatch.query_backend(backend)
         key = jax.random.PRNGKey(seed) if key is None else key
-        self.family = lidx.make_family(key, cfg)
+        # family= lets compaction build its shadow index against the SAME
+        # hash family (invariant 3 makes the shadow's answers identical)
+        self.family = (lidx.make_family(key, cfg) if family is None
+                       else family)
         self.segments: List[Segment] = []
         self._locator: dict = {}          # gid -> (segment index, slot)
         self._next_gid = 0
@@ -244,6 +287,11 @@ class SegmentedIndex:
         self._wal: Optional[walmod.WriteAheadLog] = None
         self._wal_mute = False
         self.n_rejected = 0            # rows refused by insert validation
+        # maintenance plane: handle built lazily (avoids an import cycle);
+        # _compact_deletes is the delete ledger a background compaction
+        # opens at freeze and re-applies at swap
+        self._maintenance = None
+        self._compact_deletes: Optional[set] = None
         self._open_segment()
 
     # -- lifecycle ----------------------------------------------------------
@@ -269,7 +317,26 @@ class SegmentedIndex:
     def n_items(self) -> int:
         return sum(s.n_items for s in self.segments)
 
+    @property
+    def maintenance(self):
+        """The maintenance-plane handle (:class:`IndexMaintenance`): owns
+        ``seal()`` / ``compact()`` / ``set_replication()`` and serialises
+        them against each other.  The data plane (insert/delete/query)
+        stays on the index itself."""
+        if self._maintenance is None:
+            from .maintenance import IndexMaintenance
+            self._maintenance = IndexMaintenance(self)
+        return self._maintenance
+
     def seal(self) -> None:
+        """Deprecated: use ``index.maintenance.seal()``."""
+        warnings.warn(
+            "SegmentedIndex.seal() is deprecated; seal through the "
+            "maintenance plane (index.maintenance.seal())",
+            DeprecationWarning, stacklevel=2)
+        self._maint_seal()
+
+    def _maint_seal(self) -> None:
         """Seal the current delta (no-op if empty) and open a fresh one.
 
         Logged to the WAL as an explicit SEAL record; the implicit seal
@@ -370,7 +437,18 @@ class SegmentedIndex:
         the log already holds).
         """
         records, report = walmod.read_wal(wal_path, start=start)
-        report = dict(report, applied=0, dropped_duplicates=0)
+        counts = self.apply_records(records)
+        return dict(report, **counts)
+
+    def apply_records(self, records) -> dict:
+        """Apply already-decoded WAL records (the replay core).
+
+        Factored out of :meth:`replay` so the warm standby
+        (:class:`repro.serve.standby.WalStandby`) can tail a live
+        primary's log incrementally -- same idempotence rules, no file
+        re-reads.  Returns ``{"applied", "dropped_duplicates"}``.
+        """
+        out = {"applied": 0, "dropped_duplicates": 0}
         with self._lock:
             self._wal_mute = True
             try:
@@ -380,7 +458,7 @@ class SegmentedIndex:
                         fresh = np.array(
                             [int(g) not in self._locator for g in
                              gids.tolist()], bool)
-                        report["dropped_duplicates"] += int(
+                        out["dropped_duplicates"] += int(
                             (~fresh).sum())
                         if fresh.any():
                             self.insert(
@@ -392,16 +470,16 @@ class SegmentedIndex:
                     elif rec.op == walmod.OP_SEAL:
                         self._seal()
                     elif rec.op == walmod.OP_COMPACT:
-                        self.compact()
+                        self._maint_compact()
                     elif rec.op == walmod.OP_SET_REPLICATION:
-                        self.set_replication(rec.value)
+                        self._maint_set_replication(rec.value)
                     elif rec.op in (walmod.OP_REGISTER,
                                     walmod.OP_LIFECYCLE):
                         pass               # registry-level; nothing to apply
-                    report["applied"] += 1
+                    out["applied"] += 1
             finally:
                 self._wal_mute = False
-        return report
+        return out
 
     # -- SPMD placement -----------------------------------------------------
 
@@ -436,6 +514,15 @@ class SegmentedIndex:
             self._router = None
 
     def set_replication(self, replication) -> None:
+        """Deprecated: use ``index.maintenance.set_replication(...)``."""
+        warnings.warn(
+            "SegmentedIndex.set_replication() is deprecated; set policy "
+            "through the maintenance plane "
+            "(index.maintenance.set_replication(...))",
+            DeprecationWarning, stacklevel=2)
+        self._maint_set_replication(replication)
+
+    def _maint_set_replication(self, replication) -> None:
         """Set the sealed-segment replication policy.
 
         Args:
@@ -468,28 +555,55 @@ class SegmentedIndex:
     def _current_placement(self):
         """The up-to-date SegmentPlacement.
 
-        Full rebuild (restack + transfer every sealed segment) only when the
-        sealed set changed; delta-only mutations -- the streaming write hot
-        path -- just re-replicate the one mutable segment.
+        Sealed-set changes rebuild *through the previous placement*
+        (``place_segments(..., prev=...)``): slots whose fingerprint is
+        unchanged move zero bytes, so sealing one segment re-replicates
+        O(that segment's bytes), not O(all sealed bytes) -- the actual vs
+        full-restack transfer is published as the
+        ``placement_replaced_bytes_total`` / ``placement_restack_bytes_total``
+        counters.  Delta-only mutations -- the streaming write hot path --
+        just re-replicate the one mutable segment.
         """
         if (self._placement is None
                 or self._placement.version != self._sealed_version):
             sealed = [s for s in self.segments[:-1] if s.n_live > 0]
             self._placement = seg_placement.place_segments(
                 sealed, self.delta, self._mesh, self._shard_axis,
-                self._sealed_version, replication=self._replication)
+                self._sealed_version, replication=self._replication,
+                prev=self._placement)
             self._delta_synced = self._version
+            pl = self._placement
+            reg = obs_metrics.registry()
+            reg.inc("placement_replaced_bytes_total", pl.replaced_bytes,
+                    tenant=self.tenant)
+            reg.inc("placement_restack_bytes_total", pl.sealed_bytes,
+                    tenant=self.tenant)
+            reg.inc("placement_rebuilds_total",
+                    tenant=self.tenant,
+                    kind="diff" if pl.diffed else "full")
             # fresh ledger per placement: the instance assignment the
-            # router balances over just changed
-            self._router = (QueryRouter(self._placement.layout(),
-                                        tenant=self.tenant)
-                            if any(f > 1 for f in self._placement.replication)
+            # router balances over just changed.  layout() reports the
+            # stripe width that actually serves (headroom included), so
+            # the router's slot math matches the collective.
+            self._router = (QueryRouter(pl.layout(), tenant=self.tenant)
+                            if any(f > 1 for f in pl.replication)
                             else None)
         elif self._delta_synced != self._version:
             self._placement = seg_placement.refresh_delta(self._placement,
                                                           self.delta)
             self._delta_synced = self._version
         return self._placement
+
+    def refresh_placement(self) -> None:
+        """Pre-pay the lazy placement rebuild off the query path.
+
+        Maintenance workers call this after seal/compact so the device
+        transfer (the diff) happens on the worker thread; the next query
+        finds the placement already current.  No-op when unsharded.
+        """
+        with self._lock:
+            if self._mesh is not None:
+                self._current_placement()
 
     def shard_layout(self) -> Optional[dict]:
         """JSON-able placement report (None when unsharded).
@@ -599,6 +713,12 @@ class SegmentedIndex:
                 # idempotent, so replaying a delete of already-dead or
                 # unknown gids is a no-op
                 self._log(walmod.encode_delete(req))
+                if self._compact_deletes is not None:
+                    # a background compaction froze its input before this
+                    # delete: ledger it so the swap re-applies it to the
+                    # shadow copy (re-applying is idempotent)
+                    self._compact_deletes.update(
+                        int(g) for g in req.tolist())
             by_seg: dict = {}
             for g in req.tolist():
                 loc = self._locator.get(int(g))
@@ -619,6 +739,7 @@ class SegmentedIndex:
                     continue
                 seg.live = seg.live.at[jnp.asarray(slots, jnp.int32)].set(
                     False)
+                seg._live_key = None      # mask changed: re-fingerprint
                 seg.n_live -= hits
                 n += hits
                 sealed_hit |= si != delta_si
@@ -653,28 +774,126 @@ class SegmentedIndex:
         return np.concatenate(emb_parts), np.concatenate(gid_parts)
 
     def compact(self) -> int:
+        """Deprecated: use ``index.maintenance.compact()``."""
+        warnings.warn(
+            "SegmentedIndex.compact() is deprecated; compact through the "
+            "maintenance plane (index.maintenance.compact())",
+            DeprecationWarning, stacklevel=2)
+        return self._maint_compact()
+
+    def _maint_compact(self) -> int:
         """Rebuild live items into freshly-packed segments (tombstones and
         bucket-overflow shadows are dropped; gids are preserved).  Returns
-        the number of segments after compaction."""
+        the number of segments after compaction.
+
+        Three phases so a background worker can run the expensive rebuild
+        off the query path:
+
+        1. **freeze** (locked): log COMPACT, force-seal the delta so the
+           input prefix is immutable, open the delete ledger;
+        2. **build** (lock-free): gather the frozen prefix's live items
+           from host copies and insert them into a *shadow* index sharing
+           this one's hash family -- queries and inserts keep running
+           against the old segments the whole time;
+        3. **swap** (locked): adopt the shadow's segments, splice back any
+           segments created after the freeze, rebuild the locator, and
+           re-apply ledgered deletes idempotently.
+
+        A sequential caller (or WAL replay) sees the classic inline
+        behaviour: freeze-build-swap back to back under the reentrant
+        lock.  A *live* compaction with concurrent inserts force-seals the
+        shadow's partial delta at swap, so the segment *structure* can
+        differ from what a sequential replay of the same WAL produces --
+        invariant 3 makes that divergence invisible to query results (the
+        same guarantee the replayed-SEAL note above leans on).
+        """
+        frozen_n, frozen = self._compact_freeze()
+        try:
+            shadow = self._compact_build(frozen)
+        except BaseException:
+            with self._lock:
+                self._compact_deletes = None     # close the ledger
+            raise
+        return self._compact_swap(frozen_n, shadow)
+
+    def _compact_freeze(self) -> Tuple[int, List[Segment]]:
+        """Phase 1 (locked): make the compaction input immutable."""
+        with self._lock:
+            self._log(walmod.encode_compact())
+            # crash point: COMPACT is durable-framed, nothing applied yet
+            faults.fire("compact.freeze")
+            self._seal()                 # no-op when the delta is empty
+            frozen = list(self.segments[:-1])
+            self._compact_deletes = set()
+            return len(frozen), frozen
+
+    def _compact_build(self, frozen: List[Segment]) -> "SegmentedIndex":
+        """Phase 2 (lock-free): build the shadow index from the frozen
+        prefix.  Frozen segments are sealed, so concurrent mutations can
+        only flip live masks -- every such delete is in the ledger and
+        re-applied at swap, so a torn read here cannot lose it."""
+        emb_parts, gid_parts = [], []
+        for seg in frozen:
+            if seg.n_items == 0:
+                continue
+            live = np.asarray(seg.live)[:seg.n_items]
+            if not live.any():
+                continue
+            db = (seg.pool if seg.pool is not None
+                  else np.asarray(seg.state.db))
+            emb_parts.append(np.asarray(db)[:seg.n_items][live])
+            gid_parts.append(np.asarray(seg.gids)[:seg.n_items][live])
+        shadow = SegmentedIndex(
+            self.cfg, segment_capacity=self.segment_capacity,
+            insert_chunk=self.insert_chunk, backend=self.backend,
+            tenant=self.tenant, precision=self.precision,
+            survivor_k=self.survivor_k, family=self.family)
+        if emb_parts:
+            emb = np.concatenate(emb_parts)
+            gid = np.concatenate(gid_parts)
+            order = np.argsort(gid, kind="stable")   # insertion order
+            shadow.insert(emb[order], gids=gid[order])
+        return shadow
+
+    def _compact_swap(self, frozen_n: int, shadow: "SegmentedIndex") -> int:
+        """Phase 3 (locked): atomically publish the shadow."""
         with self._lock, obs_trace.tracer().span(
                 "compact", tenant=self.tenant, n_live=self.n_live,
                 segments_before=len(self.segments)):
-            self._log(walmod.encode_compact())
-            emb, gid = self.live_items()
-            self.segments = []
-            self._locator = {}
-            self._open_segment()
+            # crash point: shadow fully built, swap not yet applied
+            faults.fire("compact.swap")
+            after = self.segments[frozen_n:]
+            if len(after) == 1 and after[0].n_items == 0:
+                # quiet window (also the only shape sequential replay ever
+                # sees): adopt the shadow wholesale, open delta included
+                self.segments = shadow.segments
+                self._locator = shadow._locator
+            else:
+                # inserts landed during the build: seal the shadow's
+                # partial delta and splice the post-freeze segments (which
+                # end with the current delta) behind it
+                shadow._seal()
+                self.segments = ([s for s in shadow.segments[:-1]
+                                  if s.n_items > 0] + after)
+                self._locator = {}
+                for si, seg in enumerate(self.segments):
+                    gid_arr = np.asarray(seg.gids)[:seg.n_items]
+                    for slot, g in enumerate(gid_arr.tolist()):
+                        if g >= 0:
+                            self._locator[int(g)] = (si, slot)
+            pending, self._compact_deletes = self._compact_deletes, None
+            for g in pending or ():
+                loc = self._locator.get(int(g))
+                if loc is None:
+                    continue
+                seg = self.segments[loc[0]]
+                if bool(np.asarray(seg.live[loc[1]])):
+                    seg.live = seg.live.at[loc[1]].set(False)
+                    seg.n_live -= 1
+                    seg._live_key = None
             self._version += 1
             self._sealed_version += 1
-            if len(gid):
-                order = np.argsort(gid, kind="stable")   # insertion order
-                # the rebuild is a *consequence* of the COMPACT record:
-                # its internal inserts must not re-enter the WAL
-                prev_mute, self._wal_mute = self._wal_mute, True
-                try:
-                    self.insert(emb[order], gids=gid[order])
-                finally:
-                    self._wal_mute = prev_mute
+            self._publish_store_metrics()
             return len(self.segments)
 
     # -- query --------------------------------------------------------------

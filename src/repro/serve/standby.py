@@ -1,0 +1,212 @@
+"""WAL-shipping warm standby: continuous replay, promotion on demand.
+
+Crash recovery (``ServableRegistry.recover``, invariant 7) rebuilds a
+tenant *after* the primary died -- correct, but the whole replay bill
+comes due while the endpoint is dark.  A :class:`WalStandby` moves that
+bill off the critical path: it tails the primary's per-tenant WAL files
+**while the primary is alive**, replaying each newly-durable record into
+its own :class:`ServableRegistry` through the exact idempotent apply core
+recovery uses (``SegmentedIndex.apply_records``).  When the primary dies,
+:meth:`promote` is recovery with almost nothing left to replay: one final
+poll, truncate any torn tail, attach the WALs for appending -- and the
+standby registry *is* the primary, answering queries bit-identically to
+the uninterrupted process (same records, same apply order, same
+invariant-3 structure independence that makes replayed seal/compact
+divergence invisible).
+
+Design points:
+
+* **shared-filesystem WAL shipping**: the standby reads the same
+  ``wal_dir`` the primary writes (the test/bench topology; a remote
+  shipper would copy bytes into a local dir and nothing here changes).
+  ``WalFollower`` gives each tenant a cursor that stops before any torn
+  tail and retries it next poll -- the primary being mid-append is
+  indistinguishable from a crash until more bytes land, and both are
+  handled by the same prefix tolerance.
+* **tenant discovery is polling too**: a ``<name>.wal`` appearing in the
+  directory is adopted as soon as its leading REGISTER record is durable
+  (``registry.adopt`` -- verbatim spec, no re-resolution, no appends to
+  the foreign log).  Tenants whose log ends in a clean "unloaded"
+  lifecycle record are skipped, exactly as recovery skips them.
+* **promotion is idempotent and terminal**: ``promote()`` stops the
+  tailer, drains the logs, truncates torn tails (the standby now owns the
+  files), and attaches a ``WriteAheadLog`` per tenant so the promoted
+  registry keeps logging where the primary stopped.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from typing import Dict, Optional
+
+from ..obs import metrics as obs_metrics
+from . import wal as walmod
+from .registry import ServableRegistry, _spec_from_manifest
+
+
+class WalStandby:
+    """Tail a primary's ``wal_dir`` into a warm :class:`ServableRegistry`.
+
+    Args:
+        wal_dir: the directory the primary's registry writes
+            (``<wal_dir>/<name>.wal`` per tenant).
+        registry: the standby registry to replay into; built fresh from
+            ``backend`` / ``mesh`` when None.  Must NOT have its own
+            ``wal_dir`` -- the standby never appends until promotion.
+        backend / mesh: forwarded to the fresh registry (a standby on an
+            8-device mesh shards its replayed tenants like a primary
+            would; parity is mesh-independent either way).
+        poll_interval_s: tailer thread cadence.
+        fsync_every: group-commit interval for the WALs attached at
+            promotion (None = the env default, like the primary).
+    """
+
+    def __init__(self, wal_dir: str, *, registry: Optional[ServableRegistry]
+                 = None, backend: Optional[str] = None, mesh=None,
+                 poll_interval_s: float = 0.05,
+                 fsync_every: Optional[int] = None):
+        self.wal_dir = wal_dir
+        self.registry = (ServableRegistry(backend=backend, mesh=mesh)
+                         if registry is None else registry)
+        self.poll_interval_s = float(poll_interval_s)
+        self._fsync_every = fsync_every
+        self._followers: Dict[str, walmod.WalFollower] = {}
+        self._skipped: set = set()        # tenants seen but not adoptable yet
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._promoted = False
+
+    # -- tailing ------------------------------------------------------------
+
+    def _wal_paths(self) -> Dict[str, str]:
+        if not os.path.isdir(self.wal_dir):
+            return {}
+        return {n[:-len(".wal")]: os.path.join(self.wal_dir, n)
+                for n in sorted(os.listdir(self.wal_dir))
+                if n.endswith(".wal")}
+
+    def _adopt_new(self) -> None:
+        """Pick up tenants whose WAL appeared since the last poll."""
+        for name, path in self._wal_paths().items():
+            if name in self._followers:
+                continue
+            if walmod.read_last_lifecycle(path) == "unloaded":
+                # cleanly-detached tenant: keep ignoring its audit trail
+                # (an unload AFTER adoption replays as a no-op lifecycle
+                # record and is re-checked at promotion)
+                self._skipped.add(name)
+                continue
+            raw = walmod.read_spec(path)
+            if raw is None:
+                # REGISTER not durable yet (or torn): retry next poll
+                continue
+            self.registry.adopt(_spec_from_manifest(raw))
+            self._followers[name] = walmod.WalFollower(path)
+            self._skipped.discard(name)
+
+    def poll_once(self) -> Dict[str, dict]:
+        """One tail step: adopt new tenants, replay newly-durable records.
+
+        Returns per-tenant ``{"applied", "dropped_duplicates",
+        "lag_bytes"}`` for this step (tests drive this directly for
+        deterministic interleavings; the tailer thread just loops it).
+        """
+        with self._lock:
+            if self._promoted:
+                return {}
+            self._adopt_new()
+            out: Dict[str, dict] = {}
+            reg = obs_metrics.registry()
+            for name, fol in self._followers.items():
+                records, _report = fol.poll()
+                counts = {"applied": 0, "dropped_duplicates": 0}
+                if records:
+                    sv = self.registry.get(name)
+                    counts = sv.index.apply_records(records)
+                    reg.inc("standby_replayed_records_total",
+                            counts["applied"], tenant=name)
+                lag = fol.lag_bytes()
+                reg.set("standby_lag_bytes", lag, tenant=name)
+                out[name] = dict(counts, lag_bytes=lag)
+            return out
+
+    def lag(self) -> Dict[str, int]:
+        """Per-tenant unreplayed bytes (0 = caught up to the clean
+        prefix)."""
+        with self._lock:
+            return {n: f.lag_bytes() for n, f in self._followers.items()}
+
+    def start(self) -> None:
+        """Run the tailer thread (poll_once every ``poll_interval_s``)."""
+        if self._thread is not None or self._promoted:
+            return
+        self._stop.clear()
+
+        def _loop():
+            while not self._stop.wait(self.poll_interval_s):
+                self.poll_once()
+
+        self._thread = threading.Thread(target=_loop, daemon=True,
+                                        name="wal-standby")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None
+
+    # -- failover -----------------------------------------------------------
+
+    def promote(self, truncate: bool = True) -> Dict[str, dict]:
+        """Become the primary: final catch-up, then own the logs.
+
+        1. stop the tailer and drain every follower one last time (the
+           primary is assumed dead -- a torn tail is now permanent
+           damage, not an in-progress append);
+        2. drop tenants whose log ends in a clean "unloaded" (recovery's
+           rule: an audit trail, not an endpoint);
+        3. ``truncate`` torn tails at the clean-prefix end so future
+           appends are replayable (exactly what ``recover`` does);
+        4. attach a :class:`WriteAheadLog` per tenant, appending where
+           the primary stopped.
+
+        Returns per-tenant reports (records applied on the final poll,
+        final offset, truncation).  Idempotent: a second call returns
+        ``{}``.
+        """
+        with self._lock:
+            if self._promoted:
+                return {}
+            self._promoted = True
+        self.stop()
+        self._adopt_new()       # logs that appeared since the last poll
+        reports: Dict[str, dict] = {}
+        reg = obs_metrics.registry()
+        for name, fol in list(self._followers.items()):
+            if walmod.read_last_lifecycle(fol.path) == "unloaded":
+                # unloaded after adoption: detach instead of promoting
+                self.registry.unregister(name)
+                del self._followers[name]
+                reports[name] = {"skipped": "unloaded"}
+                continue
+            records, report = walmod.read_wal(fol.path, start=fol.offset)
+            counts = {"applied": 0, "dropped_duplicates": 0}
+            if records:
+                counts = self.registry.get(name).index.apply_records(
+                    records)
+            fol.offset = report["end_offset"]
+            rep = dict(report, **counts)
+            if report["truncated"] and truncate:
+                with open(fol.path, "rb+") as f:
+                    f.truncate(report["end_offset"])
+                rep["truncated_to"] = report["end_offset"]
+            self.registry.get(name).index.attach_wal(
+                walmod.WriteAheadLog(fol.path,
+                                     fsync_every=self._fsync_every))
+            reg.inc("standby_promotions_total", tenant=name)
+            reg.set("standby_lag_bytes", 0, tenant=name)
+            reports[name] = rep
+        return reports

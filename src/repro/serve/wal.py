@@ -277,6 +277,46 @@ class WriteAheadLog:
                 "fsync_every": self.fsync_every}
 
 
+class WalFollower:
+    """Incremental cursor over a (possibly still-growing) WAL file.
+
+    The warm standby's read half: each :meth:`poll` decodes the records
+    appended since the last call and advances the cursor to the clean
+    prefix end.  A torn tail -- the primary crashed (or is simply between
+    the two flushes of an append) -- leaves the cursor *before* the bad
+    frame, so the next poll naturally retries it once more bytes land;
+    ``read_wal``'s prefix tolerance does all the work.
+
+    Tolerates the file not existing yet (a tenant whose first append has
+    not been flushed): polls return empty until it appears.
+    """
+
+    def __init__(self, path: str, start: int = 0):
+        self.path = path
+        self.offset = int(start)
+        self.records_seen = 0
+
+    def poll(self) -> Tuple[List[WalRecord], dict]:
+        """Decode newly-appended records; advances to the report's
+        ``end_offset``.  Returns ``([], {})``-shaped empties when the file
+        does not exist yet."""
+        if not os.path.exists(self.path):
+            return [], {"n_records": 0, "end_offset": self.offset,
+                        "wal_bytes": 0, "truncated": False,
+                        "bad_frame_at": None, "bad_frame_reason": None}
+        records, report = read_wal(self.path, start=self.offset)
+        self.offset = report["end_offset"]
+        self.records_seen += len(records)
+        return records, report
+
+    def lag_bytes(self) -> int:
+        """File bytes past the cursor (0 when fully caught up or the file
+        is missing)."""
+        if not os.path.exists(self.path):
+            return 0
+        return max(0, os.path.getsize(self.path) - self.offset)
+
+
 def read_wal(path: str, start: int = 0
              ) -> Tuple[List[WalRecord], dict]:
     """Decode records from ``path`` starting at byte ``start``.

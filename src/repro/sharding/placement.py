@@ -31,6 +31,25 @@ same per-segment programs run, only their placement changes, and the
 two-level (local, then collective) ``merge_topk`` is order-equivalent to the
 single-level merge because the (distance, gid) order is total.
 
+**Incremental re-placement** (the in-place ingestion tentpole): a rebuild
+that is handed the previous placement (``place_segments(..., prev=...)``)
+applies a *diff* instead of restacking every sealed leaf.  Each stacked
+slot carries a ``(content, live)`` fingerprint (``Segment.placement_key``);
+a slot whose fingerprint is unchanged moves **zero** bytes, a slot whose
+content is unchanged but whose live mask flipped (sealed-segment deletes)
+rewrites only the mask row, and only genuinely new/changed slots pay a
+full row write -- so sealing one segment re-replicates O(that segment's
+bytes), not O(all sealed bytes).  ``replaced_bytes`` /
+``sealed_bytes`` on the returned placement account the actual vs
+full-restack transfer (the serve layer publishes them as obs metrics and
+the bench gates their ratio).  To keep both full restacks *and*
+``per_dev``-keyed jit recompiles O(log n) under a growing sealed set, the
+stacked stripe width grows by capacity doubling and only shrinks once the
+need falls below a quarter of it -- intermediate seals reuse headroom
+slots.  ``SegmentPlacement.layout()`` reports the stripe width that
+actually serves, so the router's slot math and the collective always
+agree.
+
 **Replication** (the read-QPS lever): each sealed segment additionally
 carries a replication factor (default 1).  A factor-f segment is
 materialized on f distinct devices -- the *instance-level* assignment
@@ -47,7 +66,8 @@ unreplicated path (invariant 6, docs/architecture.md).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Sequence, Tuple
+import functools
+from typing import Any, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -99,12 +119,27 @@ class SegmentPlacement:
     # the quantized collective can consume it unconditionally; the fp32
     # collective simply never reads it.
     sealed_scales: Any = None
+    # Incremental re-placement bookkeeping: one (content, live) fingerprint
+    # per stacked slot (None = padding/headroom), and the byte ledger of the
+    # build that produced this snapshot -- ``replaced_bytes`` is what the
+    # build actually transferred, ``sealed_bytes`` what a full restack
+    # would have (for a full build the two are equal).
+    slot_keys: tuple = ()
+    replaced_bytes: int = 0
+    sealed_bytes: int = 0
+    diffed: bool = False
 
     def layout(self) -> dict:
         """JSON-able description of the placement (snapshot manifests,
         ``launch.serve`` reports, tests)."""
-        return layout_dict(self.mesh, self.axis, self.n_sealed,
-                           replication=self.replication or None)
+        lay = layout_dict(self.mesh, self.axis, self.n_sealed,
+                          replication=self.replication or None)
+        # The stacked stripe may be wider than the minimal layout (capacity-
+        # doubling headroom); the router's slot math (d * per_dev + j) and
+        # the collective's active-mask length must use the stripe that
+        # actually serves, so the actual width overrides the computed one.
+        lay["per_dev"] = self.per_dev
+        return lay
 
 
 def round_robin(n_items: int, n_dev: int) -> List[List[int]]:
@@ -177,8 +212,106 @@ def layout_dict(mesh: Mesh, axis: str, n_sealed: int,
     }
 
 
+@functools.lru_cache(maxsize=16)
+def _slot_writer(mesh: Mesh, axis: str):
+    """One jitted slot-row writer per (mesh, axis): write ``row`` into
+    leading-dim position ``slot`` of a stacked sealed array, keeping the
+    result sharded over ``axis``.
+
+    ``slot`` is a *traced* scalar, so writing any slot reuses one compiled
+    program per leaf shape/dtype -- no per-slot retraces.  Deliberately NOT
+    donating the input: in-flight queries may still hold references to the
+    previous placement's buffers (the atomic-swap contract: queries keep
+    serving the old placement until the new one is published), and PJRT
+    donation with outstanding references is undefined.  The device-local
+    copy this costs is exactly that -- local; the host->device transfer
+    stays O(row bytes), which is what the re-placement metric measures.
+    """
+    shard = NamedSharding(mesh, P(axis))
+
+    @jax.jit
+    def write(stacked, row, slot):
+        out = jax.lax.dynamic_update_slice(
+            stacked, row[None, ...], (slot,) + (0,) * row.ndim)
+        return jax.lax.with_sharding_constraint(out, shard)
+
+    return write
+
+
+def _slot_key_table(segments: Sequence, assignment, per_dev: int,
+                    version: int) -> tuple:
+    """Desired per-slot fingerprints for one build: ``(content, live)``
+    from ``Segment.placement_key`` per real slot, ``None`` for padding.
+    Segments without a fingerprint get a build-unique opaque key (never
+    ``None``: a padding match on a real segment would leave stale live
+    rows serving), so the next build rewrites their slots."""
+    keys = []
+    for block in assignment:
+        for j in range(per_dev):
+            if j < len(block):
+                seg = segments[block[j]]
+                pk = getattr(seg, "placement_key", None)
+                if callable(pk):
+                    keys.append(pk())
+                else:
+                    k = ("opaque", version, len(keys))
+                    keys.append((k, k))
+            else:
+                keys.append(None)
+    return tuple(keys)
+
+
+def _rows_compatible(segments: Sequence, prev: SegmentPlacement) -> bool:
+    """True iff every segment's rows can be written into ``prev``'s stacked
+    leaves (same tree arity, leaf dtypes and trailing shapes).  Catches the
+    fp32->int8 template flip when a quantized tenant seals its first real
+    segment over a delta-templated padding stack."""
+    stacked = jax.tree.leaves(prev.sealed_state)
+    for seg in segments:
+        rows = jax.tree.leaves(seg.state)
+        if len(rows) != len(stacked):
+            return False
+        for r, s in zip(rows, stacked):
+            if r.dtype != s.dtype or tuple(r.shape) != tuple(s.shape[1:]):
+                return False
+        if (seg.gids.dtype != prev.sealed_gids.dtype
+                or tuple(seg.gids.shape) != tuple(prev.sealed_gids.shape[1:])):
+            return False
+    return True
+
+
+def _headroom_per_dev(need: int, prev: Optional[SegmentPlacement],
+                      mesh: Mesh, axis: str, n_dev: int) -> int:
+    """Stripe width under capacity doubling: grow to at least 2x the
+    previous width when the need outgrows it, keep the previous width while
+    the need fits (headroom -> diffable builds, stable jit keys), shrink to
+    2x the need only once the need falls below a quarter of the width."""
+    if prev is None or prev.mesh != mesh or prev.axis != axis \
+            or prev.n_dev != n_dev:
+        return need
+    if need > prev.per_dev:
+        return max(need, 2 * prev.per_dev)
+    if need * 4 <= prev.per_dev and prev.per_dev > 1:
+        return max(1, need * 2)
+    return prev.per_dev
+
+
+def _seg_row_bytes(seg) -> int:
+    """Bytes one full slot write transfers for ``seg`` (state leaves +
+    gids + live + the f32 scale row)."""
+    return (sum(int(x.nbytes) for x in jax.tree.leaves(seg.state))
+            + int(seg.gids.nbytes) + int(seg.live.nbytes) + 4)
+
+
+def _stacked_bytes(state, gids, live, scales) -> int:
+    return (sum(int(x.nbytes) for x in jax.tree.leaves(state))
+            + int(gids.nbytes) + int(live.nbytes) + int(scales.nbytes))
+
+
 def place_segments(segments: Sequence, delta, mesh: Mesh, axis: str,
-                   version: int, replication=None) -> SegmentPlacement:
+                   version: int, replication=None,
+                   prev: Optional[SegmentPlacement] = None
+                   ) -> SegmentPlacement:
     """Build a :class:`SegmentPlacement` from serve-layer segments.
 
     Args:
@@ -192,6 +325,10 @@ def place_segments(segments: Sequence, delta, mesh: Mesh, axis: str,
         replication: per-segment replication factors (None / int / sequence,
             see :func:`normalize_replication`); factor-f segments are
             stacked into f devices' stripes.
+        prev: the placement being replaced, if any.  When it is diff-
+            compatible (same mesh/axis/stripe width, row templates match,
+            every segment fingerprinted) only changed slots are written --
+            O(changed bytes) instead of a full restack.
 
     Returns:
         A placement whose device arrays are already ``device_put`` with the
@@ -202,8 +339,22 @@ def place_segments(segments: Sequence, delta, mesh: Mesh, axis: str,
         raise ValueError(f"mesh has axes {mesh.axis_names}, no {axis!r}")
     n_sealed = len(segments)
     lay = layout_dict(mesh, axis, n_sealed, replication=replication)
-    n_dev, per_dev, assignment = lay["n_dev"], lay["per_dev"], lay["assignment"]
+    n_dev, assignment = lay["n_dev"], lay["assignment"]
+    per_dev = _headroom_per_dev(lay["per_dev"], prev, mesh, axis, n_dev)
+    keys = _slot_key_table(segments, assignment, per_dev, version)
 
+    diffable = (
+        prev is not None and prev.mesh == mesh and prev.axis == axis
+        and prev.n_dev == n_dev and prev.per_dev == per_dev
+        and len(prev.slot_keys) == n_dev * per_dev
+        and all(callable(getattr(s, "placement_key", None))
+                for s in segments)
+        and _rows_compatible(segments, prev))
+    if diffable:
+        return _place_diff(prev, segments, delta, mesh, axis, version,
+                           lay, per_dev, keys)
+
+    # Full (re)stack -- first build, mesh/stripe change, or template flip.
     # Block layout: device d's contiguous stripe is assignment[d] + padding.
     # Padding reuses a sealed segment's (zeroed) leaf shapes with an
     # all-dead live mask, so it is queryable but contributes nothing.  The
@@ -234,18 +385,97 @@ def place_segments(segments: Sequence, delta, mesh: Mesh, axis: str,
     shard = NamedSharding(mesh, P(axis))
     repl = NamedSharding(mesh, P())
     stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *states)
+    sealed_state = jax.device_put(stacked, shard)
+    sealed_gids = jax.device_put(jnp.stack(gids), shard)
+    sealed_live = jax.device_put(jnp.stack(lives), shard)
+    sealed_scales = jax.device_put(jnp.stack(scales), shard)
+    total = _stacked_bytes(sealed_state, sealed_gids, sealed_live,
+                           sealed_scales)
     return SegmentPlacement(
         mesh=mesh, axis=axis, n_dev=n_dev, per_dev=per_dev,
         n_sealed=n_sealed, version=version,
-        sealed_state=jax.device_put(stacked, shard),
-        sealed_gids=jax.device_put(jnp.stack(gids), shard),
-        sealed_live=jax.device_put(jnp.stack(lives), shard),
-        sealed_scales=jax.device_put(jnp.stack(scales), shard),
+        sealed_state=sealed_state,
+        sealed_gids=sealed_gids,
+        sealed_live=sealed_live,
+        sealed_scales=sealed_scales,
         delta_state=jax.device_put(delta.state, repl),
         delta_gids=jax.device_put(delta.gids, repl),
         delta_live=jax.device_put(delta.live, repl),
         assignment=tuple(tuple(a) for a in assignment),
         replication=tuple(lay["replication"]),
+        slot_keys=keys, replaced_bytes=total, sealed_bytes=total,
+        diffed=False,
+    )
+
+
+def _place_diff(prev: SegmentPlacement, segments: Sequence, delta,
+                mesh: Mesh, axis: str, version: int, lay: dict,
+                per_dev: int, keys: tuple) -> SegmentPlacement:
+    """Apply a placement diff: rewrite only slots whose fingerprint changed.
+
+    Three per-slot cases, cheapest first: fingerprint unchanged -> zero
+    bytes; content unchanged but live mask flipped (sealed-segment deletes)
+    -> only the (capacity,) mask row; anything else -> a full row write.
+    Freed slots (a segment left the placement) get a dead ``gids = -1`` /
+    all-false ``live`` row -- their stale db rows stay on device but are
+    unreachable (every candidate from them is masked, contributing only
+    ``(-1, inf)`` like padding), which is the same invisibility padding
+    slots already rely on.
+    """
+    n_dev, assignment = lay["n_dev"], lay["assignment"]
+    write = _slot_writer(mesh, axis)
+    sealed_state = prev.sealed_state
+    sealed_gids = prev.sealed_gids
+    sealed_live = prev.sealed_live
+    sealed_scales = prev.sealed_scales
+    pad_gids = jnp.full_like(delta.gids, -1)
+    pad_live = jnp.zeros_like(delta.live)
+    seg_at = {}
+    for d, block in enumerate(assignment):
+        for j, si in enumerate(block):
+            seg_at[d * per_dev + j] = segments[si]
+    replaced = 0
+    for slot, (key, old) in enumerate(zip(keys, prev.slot_keys)):
+        if key == old:
+            continue
+        idx = jnp.int32(slot)
+        if key is None:
+            sealed_gids = write(sealed_gids, pad_gids, idx)
+            sealed_live = write(sealed_live, pad_live, idx)
+            replaced += int(pad_gids.nbytes) + int(pad_live.nbytes)
+            continue
+        seg = seg_at[slot]
+        if old is not None and key[0] == old[0]:
+            sealed_live = write(sealed_live, seg.live, idx)
+            replaced += int(seg.live.nbytes)
+            continue
+        sealed_state = jax.tree.map(
+            lambda st, row: write(st, row, idx), sealed_state, seg.state)
+        sealed_gids = write(sealed_gids, seg.gids, idx)
+        sealed_live = write(sealed_live, seg.live, idx)
+        scale = getattr(seg, "scale", None)
+        sealed_scales = write(
+            sealed_scales,
+            jnp.float32(1.0) if scale is None
+            else jnp.asarray(scale, jnp.float32), idx)
+        replaced += _seg_row_bytes(seg)
+    repl = NamedSharding(mesh, P())
+    return SegmentPlacement(
+        mesh=mesh, axis=axis, n_dev=n_dev, per_dev=per_dev,
+        n_sealed=len(segments), version=version,
+        sealed_state=sealed_state,
+        sealed_gids=sealed_gids,
+        sealed_live=sealed_live,
+        sealed_scales=sealed_scales,
+        delta_state=jax.device_put(delta.state, repl),
+        delta_gids=jax.device_put(delta.gids, repl),
+        delta_live=jax.device_put(delta.live, repl),
+        assignment=tuple(tuple(a) for a in assignment),
+        replication=tuple(lay["replication"]),
+        slot_keys=keys, replaced_bytes=replaced,
+        sealed_bytes=_stacked_bytes(sealed_state, sealed_gids, sealed_live,
+                                    sealed_scales),
+        diffed=True,
     )
 
 

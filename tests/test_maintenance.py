@@ -1,0 +1,421 @@
+"""The maintenance plane: background compaction invisible to queries.
+
+Invariant 11 (docs/architecture.md): **maintenance is invisible** -- a
+query issued while a background seal/compact runs answers bit-identically
+to the same query against an index that compacted inline (invariant 3's
+structure independence extended across threads).  These tests drive it
+three ways:
+
+* **injected-phase interleaving**: ``_compact_freeze`` / ``_compact_build``
+  / ``_compact_swap`` are called directly with queries, inserts and
+  deletes wedged between the phases -- a deterministic schedule of the
+  worst interleavings a worker thread could produce;
+* **real threads**: a pool worker compacts while the main thread streams
+  queries, asserting every answer matches one of the two legal states
+  (pre-swap and post-swap are both correct; anything else is a torn read);
+* **kill -9 mid-job**: a subprocess dies at the ``compact.freeze`` /
+  ``compact.swap`` fault sites and recovery replays the WAL to the same
+  bits as an uninterrupted reference -- the COMPACT record is logged at
+  freeze, so replay re-runs the whole compaction deterministically.
+
+The deprecated direct ``SegmentedIndex.seal/compact/set_replication`` and
+``Servable.compact`` surfaces must still work (warning) -- the shims are
+the API-migration contract.
+"""
+
+import os
+import signal
+import subprocess
+import sys
+import textwrap
+import threading
+
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.core import index as lidx
+from repro.obs import metrics as obs_metrics
+from repro.serve import (MaintenancePool, SegmentedIndex, ServableRegistry,
+                         ServableSpec, protocol)
+from repro.serve import maintenance as maint_mod
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_DIMS = 16
+
+
+def _cfg(p=2.0):
+    return lidx.IndexConfig(n_dims=N_DIMS, n_tables=4, n_hashes=4,
+                            log2_buckets=8, bucket_capacity=64, r=2.0, p=p)
+
+
+def _data(n, seed=0, scale=1.0):
+    return (np.random.default_rng(seed).normal(size=(n, N_DIMS)) *
+            scale).astype(np.float32)
+
+
+def _spec(name="t"):
+    return ServableSpec(name=name, n_dims=N_DIMS, p=2.0, r=2.0,
+                        embedder="basis", log2_buckets=8, bucket_capacity=64,
+                        segment_capacity=64, insert_chunk=32,
+                        chunk_sizes=(8, 32))
+
+
+def _arrays(pair):
+    i, d = pair
+    return np.asarray(i), np.asarray(d)
+
+
+# ---------------------------------------------------------------------------
+# the handle API + deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def test_maintenance_handle_and_shims():
+    """index.maintenance owns seal/compact/set_replication; the old direct
+    methods forward with a DeprecationWarning and identical effect."""
+    si = SegmentedIndex(_cfg(), segment_capacity=64, insert_chunk=32, seed=3)
+    g = si.insert(_data(150, seed=1))
+    si.delete(g[::5])
+    q = _data(7, seed=2, scale=0.9)
+    want_i, want_d = _arrays(si.query(q, 10, n_probes=4))
+
+    si.maintenance.seal()
+    assert si.delta.n_items == 0
+    n_seg = si.maintenance.compact()
+    assert n_seg == len(si.segments)
+    got_i, got_d = _arrays(si.query(q, 10, n_probes=4))
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_array_equal(got_d, want_d)
+
+    with pytest.warns(DeprecationWarning):
+        si.seal()
+    with pytest.warns(DeprecationWarning):
+        si.compact()
+    with pytest.warns(DeprecationWarning):
+        si.set_replication(None)
+    got_i, got_d = _arrays(si.query(q, 10, n_probes=4))
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_array_equal(got_d, want_d)
+
+
+def test_servable_compact_shim_warns():
+    reg = ServableRegistry()
+    sv = reg.register(_spec())
+    sv.insert(_data(100, seed=1))
+    with pytest.warns(DeprecationWarning):
+        sv.compact()
+
+
+def test_wire_kinds_mirror_pool_kinds():
+    assert protocol.MAINTENANCE_KINDS == maint_mod.KINDS
+
+
+# ---------------------------------------------------------------------------
+# injected-phase interleaving: deterministic worst-case schedules
+# ---------------------------------------------------------------------------
+
+
+def _churn(si, seed, n_insert=40, delete_every=6):
+    g = si.insert(_data(n_insert, seed=seed))
+    si.delete(g[::delete_every])
+    return g
+
+
+@pytest.mark.parametrize("mutate_during_build", [False, True],
+                         ids=["quiet", "concurrent-writes"])
+def test_compact_phase_interleaving_parity(mutate_during_build):
+    """Drive freeze/build/swap by hand with data-plane ops between the
+    phases.  The result must equal an oracle index that saw the same
+    operation sequence with an *inline* compaction at the freeze point --
+    segment structure may differ (invariant 3) but every query answers
+    the same bits."""
+    si = SegmentedIndex(_cfg(), segment_capacity=64, insert_chunk=32, seed=3)
+    oracle = SegmentedIndex(_cfg(), segment_capacity=64, insert_chunk=32,
+                            seed=3, family=si.family)
+    for seed in (1, 2, 3):
+        _churn(si, seed)
+        _churn(oracle, seed)
+    q = _data(9, seed=7, scale=0.9)
+
+    frozen_n, frozen = si._compact_freeze()
+    oracle.maintenance.compact()                 # inline at the same point
+
+    if mutate_during_build:
+        # writes racing the lock-free build: land after the freeze, must
+        # survive the swap untouched (they live in post-freeze segments)
+        g4 = _churn(si, 4)
+        g4o = _churn(oracle, 4)
+        np.testing.assert_array_equal(np.asarray(g4), np.asarray(g4o))
+        # delete of a FROZEN item mid-build: goes to the ledger and is
+        # re-applied idempotently at swap
+        frozen_gid = int(np.asarray(frozen[0].gids)[0])
+        si.delete([frozen_gid])
+        oracle.delete([frozen_gid])
+        # reads between the phases see the pre-swap state
+        pre_i, _ = _arrays(si.query(q, 10, n_probes=4))
+        assert pre_i.shape == (9, 10)
+
+    shadow = si._compact_build(frozen)
+    si._compact_swap(frozen_n, shadow)
+
+    want_i, want_d = _arrays(oracle.query(q, 10, n_probes=4))
+    got_i, got_d = _arrays(si.query(q, 10, n_probes=4))
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_array_equal(got_d, want_d)
+    assert si.n_live == oracle.n_live
+    # locator agrees with the new segment layout
+    for gid, (s_i, slot) in si._locator.items():
+        assert int(np.asarray(si.segments[s_i].gids)[slot]) == gid
+
+
+def test_compact_swap_reapplies_ledgered_deletes_idempotently():
+    """A gid deleted mid-build whose tombstone ALSO made it into the
+    shadow (deleted before freeze, say) must not double-decrement."""
+    si = SegmentedIndex(_cfg(), segment_capacity=64, insert_chunk=32, seed=3)
+    g = si.insert(_data(100, seed=1))
+    frozen_n, frozen = si._compact_freeze()
+    victim = int(g[10])
+    assert si.delete([victim]) == 1
+    n_live_mid = si.n_live
+    shadow = si._compact_build(frozen)
+    si._compact_swap(frozen_n, shadow)
+    assert si.n_live == n_live_mid
+    assert si.delete([victim]) == 0              # already dead, still dead
+
+
+# ---------------------------------------------------------------------------
+# real threads: background compaction under live queries
+# ---------------------------------------------------------------------------
+
+
+def test_background_compaction_is_invisible_to_queries():
+    """A pool worker compacts while this thread streams queries.  Every
+    in-flight answer must equal the (single) correct answer: compaction
+    changes structure, never results, so pre- and post-swap reads agree."""
+    reg = ServableRegistry()
+    sv = reg.register(_spec())
+    rng = np.random.default_rng(0)
+    for seed in (1, 2, 3, 4):
+        g = sv.index.insert(_data(60, seed=seed))
+        sv.index.delete(g[::7])
+    q = _data(9, seed=9, scale=0.9)
+    want_i, want_d = _arrays(sv.index.query(q, 10, n_probes=4))
+
+    pool = MaintenancePool(reg, workers=2)
+    stop = threading.Event()
+    failures = []
+
+    def _stream():
+        while not stop.is_set():
+            gi, gd = _arrays(sv.index.query(q, 10, n_probes=4))
+            if not (np.array_equal(gi, want_i)
+                    and np.array_equal(gd, want_d)):
+                failures.append((gi, gd))
+                return
+
+    t = threading.Thread(target=_stream)
+    t.start()
+    try:
+        jobs = [pool.submit("t", "compact") for _ in range(3)]
+        for j in jobs:
+            st = pool.wait(j, timeout_s=60.0)
+            assert st["status"] == "done", st
+    finally:
+        stop.set()
+        t.join(timeout=30.0)
+        pool.stop()
+    assert not failures, "query diverged during background compaction"
+    got_i, got_d = _arrays(sv.index.query(q, 10, n_probes=4))
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_array_equal(got_d, want_d)
+
+
+def test_pool_job_lifecycle_and_isolation():
+    reg = ServableRegistry()
+    reg.register(_spec())
+    reg.get("t").insert(_data(80, seed=1))
+    pool = MaintenancePool(reg, workers=1)
+    try:
+        jid = pool.submit("t", "seal")
+        st = pool.wait(jid)
+        assert st["status"] == "done"
+        assert st["result"]["n_segments"] >= 2
+        jid2 = pool.submit("t", "compact")
+        st2 = pool.wait(jid2)
+        assert st2["status"] == "done"
+        assert st2["result"]["n_live"] == reg.get("t").index.n_live
+
+        # a job for a missing tenant fails structurally, worker survives
+        bad = pool.wait(pool.submit("ghost", "compact"))
+        assert bad["status"] == "failed" and "ghost" in bad["error"]
+        again = pool.wait(pool.submit("t", "seal"))
+        assert again["status"] == "done"
+
+        with pytest.raises(ValueError):
+            pool.submit("t", "defrag")
+        assert pool.status("mj-999") is None
+    finally:
+        pool.stop()
+    with pytest.raises(RuntimeError):
+        pool.submit("t", "seal")                 # stopped pool refuses
+
+
+# ---------------------------------------------------------------------------
+# incremental re-placement: sealing moves O(one segment), not O(all)
+# ---------------------------------------------------------------------------
+
+
+def _mesh1():
+    return compat.make_mesh((1,), ("serve",))
+
+
+def test_seal_replaces_only_the_new_segment_bytes():
+    """With placement headroom held, sealing one more segment must
+    transfer O(that segment's bytes): the diff leaves every unchanged
+    slot's fingerprint alone."""
+    si = SegmentedIndex(_cfg(), segment_capacity=64, insert_chunk=32, seed=3,
+                        tenant="seal-diff")
+    si.insert(_data(300, seed=1))                # several sealed + delta
+    si.shard(_mesh1())
+    q = _data(5, seed=2, scale=0.9)
+    si.query(q, 10, n_probes=4)                  # builds placement
+    reg = obs_metrics.registry()
+
+    before = reg.value("placement_replaced_bytes_total", tenant="seal-diff")
+    si.insert(_data(64, seed=4))                 # exactly one more segment
+    si.maintenance.seal()
+    si.refresh_placement()
+    pl = si._placement
+    after = reg.value("placement_replaced_bytes_total", tenant="seal-diff")
+
+    import jax
+    one_seg = sum(int(x.nbytes)
+                  for x in jax.tree.leaves(si.segments[0].state)) \
+        + int(np.asarray(si.segments[0].gids).nbytes) \
+        + int(np.asarray(si.segments[0].live).nbytes) + 4
+    if pl.diffed:
+        # the diff path: the delta (metric counts only sealed-row writes)
+        moved = (after or 0) - (before or 0)
+        assert moved <= 2 * one_seg, (moved, one_seg)
+        assert moved < pl.sealed_bytes
+    else:
+        # headroom doubled (capacity growth) -> a full restack is the
+        # *expected* O(log n) event; it must have grown per_dev
+        assert pl.per_dev >= 2
+
+    si.unshard()
+    want_i, want_d = _arrays(si.query(q, 10, n_probes=4))
+    si.shard(_mesh1())
+    got_i, got_d = _arrays(si.query(q, 10, n_probes=4))
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_array_equal(got_d, want_d)
+
+
+# ---------------------------------------------------------------------------
+# kill -9 mid-compaction: WAL replay parity + idempotence
+# ---------------------------------------------------------------------------
+
+
+def _env(n_devices=1):
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count"
+                        f"={n_devices}")
+    return env
+
+
+def _run(code, n_devices=1, timeout=560):
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=_env(n_devices))
+
+
+_WORKLOAD = """
+    import numpy as np
+    from repro.serve import ServableRegistry, ServableSpec
+
+    def build_registry(wal_dir):
+        reg = ServableRegistry(wal_dir=wal_dir, fsync_every=1)
+        reg.register(ServableSpec(
+            name="t", n_dims=16, p=2.0, r=2.0, embedder="basis",
+            log2_buckets=8, bucket_capacity=64, segment_capacity=64,
+            insert_chunk=32, chunk_sizes=(8, 32)))
+        return reg
+
+    def run_workload(reg):
+        rng = np.random.default_rng(0)
+        sv = reg.get("t")
+        for step in range(8):
+            g = sv.insert(rng.normal(size=(30, 16)).astype(np.float32))
+            if step % 2 == 1:
+                sv.delete(g[:6])
+            if step % 3 == 2:
+                sv.maintenance.compact()   # fires compact.freeze/swap
+
+    def queries():
+        return (np.random.default_rng(1).normal(size=(9, 16)) *
+                0.9).astype(np.float32)
+"""
+
+_CRASH = _WORKLOAD + """
+    import sys
+    from repro.serve import faults
+
+    faults.install(faults.FaultPlan(
+        faults.FaultSpec({site!r}, nth={nth}, action="kill")))
+    reg = build_registry({wal!r})
+    run_workload(reg)
+    print("SURVIVED")
+    sys.exit(3)
+"""
+
+_RECOVER = _WORKLOAD + """
+    import os
+    from repro.serve.registry import _spec_from_manifest
+    from repro.serve.wal import read_spec
+
+    WAL = {wal!r}
+    reg = ServableRegistry()
+    reports = reg.recover(wal_dir=WAL)
+    assert sorted(reports) == ["t"], reports
+
+    wpath = os.path.join(WAL, "t.wal")
+    ref = ServableRegistry()
+    sv = ref.register(_spec_from_manifest(read_spec(wpath)))
+    sv.index.replay(wpath)
+
+    qs = queries()
+    wi, wd = map(np.asarray, ref.get("t").index.query(qs, 10, n_probes=4))
+    gi, gd = map(np.asarray, reg.get("t").index.query(qs, 10, n_probes=4))
+    assert np.array_equal(gi, wi) and np.array_equal(gd, wd)
+
+    # second replay: every record drops idempotently (the replayed COMPACT
+    # re-runs against the already-compacted structure without distorting it)
+    rep2 = reg.get("t").index.replay(wpath)
+    assert rep2["dropped_duplicates"] > 0, rep2
+    gi2, gd2 = map(np.asarray, reg.get("t").index.query(qs, 10, n_probes=4))
+    assert np.array_equal(gi2, wi) and np.array_equal(gd2, wd)
+    print("PARITY_OK")
+"""
+
+
+@pytest.mark.parametrize("site,nth",
+                         [("compact.freeze", 2), ("compact.swap", 2)],
+                         ids=["freeze", "swap"])
+def test_kill9_mid_compaction_replays_bit_identical(tmp_path, site, nth):
+    """SIGKILL inside a compaction: the COMPACT record's durability decides
+    everything -- recovery replays the full durable prefix to the same bits
+    as an uninterrupted reference, and a second replay is a no-op."""
+    wal_dir = str(tmp_path / "wal")
+    crash = _run(_CRASH.format(site=site, nth=nth, wal=wal_dir))
+    assert crash.returncode == -signal.SIGKILL, (
+        f"expected SIGKILL at {site}#{nth}, got rc={crash.returncode}\n"
+        f"stdout: {crash.stdout[-1500:]}\nstderr: {crash.stderr[-1500:]}")
+    assert "SURVIVED" not in crash.stdout
+
+    rec = _run(_RECOVER.format(wal=wal_dir))
+    assert rec.returncode == 0, (
+        f"recovery after {site}#{nth} failed\n"
+        f"stdout: {rec.stdout[-1500:]}\nstderr: {rec.stderr[-3000:]}")
+    assert "PARITY_OK" in rec.stdout

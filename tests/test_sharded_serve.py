@@ -86,7 +86,8 @@ def test_mutation_invalidates_placement():
 def test_delta_only_mutations_skip_sealed_restack():
     """Streaming-write hot path: inserts/deletes that touch only the delta
     must re-replicate the delta, not restack + re-transfer every sealed
-    segment; sealed-set changes must force the full rebuild."""
+    segment; sealed-set changes rebuild as an incremental *diff* -- a
+    sealed-segment delete rewrites only that segment's live-mask row."""
     si = SegmentedIndex(_cfg(), segment_capacity=128, insert_chunk=64, seed=3)
     gids = si.insert(_data(300, seed=1))
     si.shard(_mesh1())
@@ -99,9 +100,14 @@ def test_delta_only_mutations_skip_sealed_restack():
     got_i, got_d = si.query(q, 10, n_probes=4)
     assert si._placement.sealed_state is pl0.sealed_state
 
-    si.delete(gids[1:2])                    # sealed delete -> full rebuild
+    si.delete(gids[1:2])                    # sealed delete -> live-mask diff
     si.query(q, 10, n_probes=4)
-    assert si._placement.sealed_state is not pl0.sealed_state
+    pl1 = si._placement
+    assert pl1 is not pl0
+    assert pl1.diffed
+    # content untouched: only the tombstoned segment's mask row moved
+    assert pl1.replaced_bytes == int(si.segments[0].live.nbytes)
+    assert pl1.replaced_bytes < pl1.sealed_bytes
 
     si.unshard()
     si.shard(_mesh1())                      # re-shard also rebuilds cleanly

@@ -1,0 +1,286 @@
+"""WAL-shipping warm standby: continuous tail, bit-identical promotion.
+
+The standby contract extends invariant 7 (crash recovery is replay of the
+durable prefix) with *when* the replay happens: a :class:`WalStandby`
+pays the bill continuously while the primary is alive, so ``promote()``
+is recovery with almost nothing left to do.  Assertions:
+
+* while tailing, the standby's registry answers **bit-identically** to
+  the live primary over the durable prefix (same records, same apply
+  order, same invariant-3 structure independence);
+* a torn tail (primary mid-append) is retried, never fatal;
+* tenants whose log ends in a clean "unloaded" are skipped, exactly as
+  ``recover`` skips them -- including an unload that lands *after*
+  adoption (re-checked at promotion);
+* promotion after a genuine ``kill -9`` of the primary serves the same
+  bits as an uninterrupted reference -- unsharded and, in a subprocess,
+  sharded over an 8-device host mesh;
+* the promoted registry owns the WALs: post-promotion writes append
+  where the primary stopped and a later recovery replays them.
+"""
+
+import os
+import signal
+import struct
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.serve import ServableRegistry, ServableSpec, WalStandby
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+N_DIMS = 16
+
+
+def _spec(name="t", p=2.0, emb="basis"):
+    return ServableSpec(name=name, n_dims=N_DIMS, p=p, r=2.0, embedder=emb,
+                        log2_buckets=8, bucket_capacity=64,
+                        segment_capacity=64, insert_chunk=32,
+                        chunk_sizes=(8, 32))
+
+
+def _data(n, seed=0, scale=1.0):
+    return (np.random.default_rng(seed).normal(size=(n, N_DIMS)) *
+            scale).astype(np.float32)
+
+
+def _arrays(pair):
+    i, d = pair
+    return np.asarray(i), np.asarray(d)
+
+
+def _primary(wal_dir, names=("t",)):
+    reg = ServableRegistry(wal_dir=wal_dir, fsync_every=1)
+    for name in names:
+        reg.register(_spec(name))
+    return reg
+
+
+def test_standby_tails_and_promotes_bit_identical(tmp_path):
+    wal_dir = str(tmp_path / "wal")
+    prim = _primary(wal_dir)
+    sb = WalStandby(wal_dir)
+
+    q = _data(9, seed=9, scale=0.9)
+    sv = prim.get("t")
+    for seed in (1, 2, 3):
+        g = sv.insert(_data(40, seed=seed))
+        sv.delete(g[::6])
+        if seed == 2:
+            sv.maintenance.compact()
+        out = sb.poll_once()
+        assert out["t"]["lag_bytes"] == 0
+        want_i, want_d = _arrays(sv.index.query(q, 10, n_probes=4))
+        got_i, got_d = _arrays(
+            sb.registry.get("t").index.query(q, 10, n_probes=4))
+        np.testing.assert_array_equal(got_i, want_i)
+        np.testing.assert_array_equal(got_d, want_d)
+
+    # lag observable mid-stream: durable-but-unreplayed bytes
+    sv.insert(_data(20, seed=4))
+    assert sb.lag()["t"] > 0
+    sb.poll_once()
+    assert sb.lag()["t"] == 0
+
+    reports = sb.promote()
+    assert reports["t"]["applied"] == 0          # nothing left to replay
+    assert sb.promote() == {}                    # idempotent
+
+    # the promoted registry owns the log: new writes append + recover
+    psv = sb.registry.get("t")
+    want_i, want_d = _arrays(sv.index.query(q, 10, n_probes=4))
+    got_i, got_d = _arrays(psv.index.query(q, 10, n_probes=4))
+    np.testing.assert_array_equal(got_i, want_i)
+    np.testing.assert_array_equal(got_d, want_d)
+    psv.index.insert(_data(15, seed=5))
+    reg3 = ServableRegistry()
+    reg3.recover(wal_dir=wal_dir)
+    np.testing.assert_array_equal(
+        np.asarray(reg3.get("t").index.query(q, 10, n_probes=4)[0]),
+        np.asarray(psv.index.query(q, 10, n_probes=4)[0]))
+
+
+def test_standby_torn_tail_retries(tmp_path):
+    wal_dir = str(tmp_path / "wal")
+    prim = _primary(wal_dir)
+    sv = prim.get("t")
+    sv.insert(_data(30, seed=1))
+    sb = WalStandby(wal_dir)
+    sb.poll_once()
+
+    # simulate the primary mid-append: a torn frame at the tail
+    path = os.path.join(wal_dir, "t.wal")
+    with open(path, "ab") as f:
+        f.write(struct.pack("<I", 1000) + b"\x00" * 7)
+    out = sb.poll_once()                         # stops before the tear
+    assert out["t"]["applied"] == 0
+    torn_lag = out["t"]["lag_bytes"]
+    assert torn_lag > 0
+
+    # "more bytes land": restore a clean tail by truncating the tear,
+    # then a real append -- the cursor picks up right where it stopped
+    size = os.path.getsize(path)
+    with open(path, "rb+") as f:
+        f.truncate(size - 11)
+    sv.insert(_data(10, seed=2))
+    out = sb.poll_once()
+    assert out["t"]["applied"] > 0 and out["t"]["lag_bytes"] == 0
+    q = _data(5, seed=9, scale=0.9)
+    np.testing.assert_array_equal(
+        np.asarray(sb.registry.get("t").index.query(q, 10, n_probes=4)[0]),
+        np.asarray(sv.index.query(q, 10, n_probes=4)[0]))
+
+
+def test_standby_skips_unloaded_tenants(tmp_path):
+    wal_dir = str(tmp_path / "wal")
+    prim = _primary(wal_dir, names=("keep", "gone", "late"))
+    for name in ("keep", "gone", "late"):
+        prim.get(name).insert(_data(30, seed=1))
+    # "gone" unloads BEFORE the standby ever sees it
+    prim.log_lifecycle("gone", "unloaded")
+    prim.unregister("gone")
+
+    sb = WalStandby(wal_dir)
+    out = sb.poll_once()
+    assert sorted(out) == ["keep", "late"]
+    assert sorted(sb.registry.names()) == ["keep", "late"]
+
+    # "late" unloads AFTER adoption: replays as a lifecycle no-op, then
+    # promotion drops it (recovery's trailing-unloaded rule)
+    prim.log_lifecycle("late", "unloaded")
+    prim.unregister("late")
+    sb.poll_once()
+    reports = sb.promote()
+    assert reports["late"] == {"skipped": "unloaded"}
+    assert sb.registry.names() == ["keep"]
+
+
+def test_standby_tailer_thread_runs(tmp_path):
+    import time
+    wal_dir = str(tmp_path / "wal")
+    prim = _primary(wal_dir)
+    sb = WalStandby(wal_dir, poll_interval_s=0.01)
+    sb.start()
+    try:
+        prim.get("t").insert(_data(25, seed=1))
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            lag = sb.lag()
+            if lag.get("t") == 0:
+                break
+            time.sleep(0.01)
+        assert sb.lag().get("t") == 0
+    finally:
+        sb.stop()
+    assert sb.registry.get("t").index.n_live == 25
+
+
+# ---------------------------------------------------------------------------
+# failover after kill -9, including the 8-device mesh leg
+# ---------------------------------------------------------------------------
+
+
+def _env(n_devices=1):
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=os.path.join(ROOT, "src"))
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count"
+                        f"={n_devices}")
+    return env
+
+
+def _run(code, n_devices=1, timeout=560):
+    return subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                          capture_output=True, text=True, timeout=timeout,
+                          env=_env(n_devices))
+
+
+_COMMON = """
+    import numpy as np
+    from repro.serve import ServableRegistry, ServableSpec
+
+    def spec():
+        return ServableSpec(
+            name="t", n_dims=16, p=2.0, r=2.0, embedder="basis",
+            log2_buckets=8, bucket_capacity=64, segment_capacity=64,
+            insert_chunk=32, chunk_sizes=(8, 32))
+
+    def queries():
+        return (np.random.default_rng(1).normal(size=(9, 16)) *
+                0.9).astype(np.float32)
+"""
+
+_CRASH = _COMMON + """
+    import sys
+    from repro.serve import faults
+
+    faults.install(faults.FaultPlan(
+        faults.FaultSpec("wal.appended", nth={nth}, action="kill")))
+    reg = ServableRegistry(wal_dir={wal!r}, fsync_every=1)
+    sv = reg.register(spec())
+    rng = np.random.default_rng(0)
+    for step in range(10):
+        g = sv.insert(rng.normal(size=(25, 16)).astype(np.float32))
+        if step % 2 == 1:
+            sv.delete(g[:5])
+        if step % 4 == 3:
+            sv.maintenance.compact()
+    print("SURVIVED")
+    sys.exit(3)
+"""
+
+_PROMOTE = _COMMON + """
+    import os
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serve import WalStandby
+    from repro.serve.registry import _spec_from_manifest
+    from repro.serve.wal import read_spec
+
+    WAL, N_DEV = {wal!r}, {n_dev}
+    mesh = make_serve_mesh(N_DEV) if N_DEV > 1 else None
+    sb = WalStandby(WAL, mesh=mesh)
+    sb.poll_once()                 # warm: replay while "primary" is down
+    reports = sb.promote()
+    assert "t" in reports, reports
+
+    # reference = uninterrupted run over the durable prefix
+    wpath = os.path.join(WAL, "t.wal")
+    ref = ServableRegistry()
+    rsv = ref.register(_spec_from_manifest(read_spec(wpath)))
+    rsv.index.replay(wpath)
+
+    qs = queries()
+    wi, wd = map(np.asarray, rsv.index.query(qs, 10, n_probes=4))
+    gi, gd = map(np.asarray,
+                 sb.registry.get("t").index.query(qs, 10, n_probes=4))
+    assert np.array_equal(gi, wi) and np.array_equal(gd, wd)
+
+    # promoted registry keeps logging: append, then a fresh recovery
+    # over the same dir sees the post-failover writes
+    sb.registry.get("t").index.insert(
+        np.random.default_rng(7).normal(size=(10, 16)).astype(np.float32))
+    reg2 = ServableRegistry()
+    reg2.recover(wal_dir=WAL)
+    gi2 = np.asarray(reg2.get("t").index.query(qs, 10, n_probes=4)[0])
+    gi3 = np.asarray(
+        sb.registry.get("t").index.query(qs, 10, n_probes=4)[0])
+    assert np.array_equal(gi2, gi3)
+    print("PROMOTE_OK")
+"""
+
+
+@pytest.mark.parametrize("n_dev", [1, 8], ids=["unsharded", "mesh8"])
+def test_kill9_primary_standby_promotes_bit_identical(tmp_path, n_dev):
+    wal_dir = str(tmp_path / "wal")
+    crash = _run(_CRASH.format(wal=wal_dir, nth=12))
+    assert crash.returncode == -signal.SIGKILL, (
+        f"expected SIGKILL, got rc={crash.returncode}\n"
+        f"stdout: {crash.stdout[-1500:]}\nstderr: {crash.stderr[-1500:]}")
+
+    rec = _run(_PROMOTE.format(wal=wal_dir, n_dev=n_dev), n_devices=n_dev)
+    assert rec.returncode == 0, (
+        f"promotion failed\nstdout: {rec.stdout[-1500:]}\n"
+        f"stderr: {rec.stderr[-3000:]}")
+    assert "PROMOTE_OK" in rec.stdout

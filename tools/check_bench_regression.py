@@ -39,7 +39,15 @@ What is gated, per benchmark section:
   ">= 3x sealed-store reduction", a product property like the trace
   bound.  ``int8_recall_at10`` needs no special rule: the standard
   ``*recall*`` family already caps its drop at ``RECALL_TOL``, which is
-  exactly invariant 10's 0.02 recall budget.
+  exactly invariant 10's 0.02 recall budget;
+* ``replacement_bytes_frac`` (actually-transferred over full-restack
+  bytes across ``bench_inplace_ingest``'s seal sequence) is gated
+  **absolutely** at ``REPLACEMENT_FRAC_MAX`` -- the incremental
+  re-placement contract (invariant 11's transfer half) is "sealing one
+  segment moves O(that segment's bytes)"; a placement change that falls
+  back to restacking everything pushes this ratio toward 1.
+  ``compact_nonblocking_ok`` / ``compact_parity`` / ``failover_parity``
+  ride the standard ``*_ok`` / ``*parity*`` family.
 
 Metrics outside those families (throughputs, imbalance numbers, raw
 timings) are never gated and are omitted from the delta table -- keeping
@@ -69,6 +77,7 @@ WALL_SLACK = 20.0      # ... plus 20s flat (compile-cache cold starts)
 RECOVERY_SLACK = 5.0   # recovery_s_* gets the 4x ratio but only 5s flat
 TRACE_OVERHEAD_MAX = 0.05   # sampled tracing may cost at most 5% QPS
 BYTES_RATIO_MAX = 0.30      # int8 sealed store must stay <= 0.3x fp32 bytes
+REPLACEMENT_FRAC_MAX = 0.5  # seal sequence must move << a full restack
 
 GATED_NOTE = {"ok": "", "FAIL": "  <-- gate", "NEW": "  (not in baseline)"}
 
@@ -113,7 +122,8 @@ def compare(current: dict, baseline: dict):
                      or key.endswith("_ok")
                      or key == "wall_s" or key.startswith("recovery_s")
                      or key == "trace_overhead_frac"
-                     or key == "int8_bytes_ratio")
+                     or key == "int8_bytes_ratio"
+                     or key == "replacement_bytes_frac")
             if cv is None:
                 # a *gated* metric vanishing is itself a regression: a
                 # renamed parity flag must not silently stop being checked
@@ -151,6 +161,15 @@ def compare(current: dict, baseline: dict):
                         f"the fp32 bytes/item (absolute limit "
                         f"{BYTES_RATIO_MAX:.2f} -- the >=3x reduction "
                         f"contract, invariant 10)")
+            elif key == "replacement_bytes_frac":
+                if cv > REPLACEMENT_FRAC_MAX:
+                    status = "FAIL"
+                    failures.append(
+                        f"{name}/{key}: seal sequence transferred "
+                        f"{cv:.2f}x the full-restack bytes (absolute "
+                        f"limit {REPLACEMENT_FRAC_MAX:.2f} -- the "
+                        f"incremental re-placement contract, "
+                        f"invariant 11)")
             elif key == "wall_s" or key.startswith("recovery_s"):
                 slack = WALL_SLACK if key == "wall_s" else RECOVERY_SLACK
                 limit = bv * WALL_RATIO + slack
